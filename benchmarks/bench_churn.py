@@ -1,0 +1,23 @@
+"""Churn/soft-state benchmark (paper Sec. 4.1 dynamics, beyond-paper
+quantification): CNB recall vs refresh period under profile updates and
+node churn."""
+
+import dataclasses
+import time
+
+from repro.core.churn import ChurnConfig, run_churn
+
+
+def rows():
+    out = []
+    base = ChurnConfig(num_users=2000, epochs=8, num_queries=96,
+                       update_rate=0.1, churn_rate=0.03, seed=1)
+    for period in (1, 2, 4, 8):
+        t0 = time.time()
+        r = run_churn(dataclasses.replace(base, refresh_every=period))
+        us = (time.time() - t0) / base.epochs * 1e6
+        out.append((
+            f"churn/refresh_every={period}", us,
+            f"mean_recall={r['mean_recall']:.3f};"
+            f"final_recall={r['final_recall']:.3f}"))
+    return out

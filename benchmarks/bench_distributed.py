@@ -1,0 +1,65 @@
+"""Distributed search-step byte accounting (the TPU analogue of Table 1).
+
+Lowers the sharded CNB/NB/LSH search step on a host mesh and parses the
+collective bytes out of the compiled HLO — CNB must move no more bytes
+than LSH while probing (k+1)x the buckets; NB pays the neighbor traffic.
+Also validates the closed-form byte estimator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import LshParams, make_hyperplanes
+from repro.core import distributed as dist
+from repro.core.store import make_store
+from repro.launch.dryrun import parse_collectives
+
+
+def rows():
+    n_data, n_model = 1, 4  # host devices (bench runs with 1 device => 1x1)
+    ndev = jax.device_count()
+    if ndev >= 4:
+        n_model = 4
+    elif ndev >= 2:
+        n_model = 2
+    else:
+        n_model = 1
+    mesh = jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = LshParams(d=128, k=8, L=4, seed=0)
+    H = make_hyperplanes(params)
+    store = make_store(params.L, params.num_buckets, 64, payload_dim=128)
+    store = dist.shard_store(mesh, store)
+    B = 64
+    out = []
+    for variant in ("lsh", "nb", "cnb"):
+        cfg = dist.DistConfig(params=params, n_shards=n_model,
+                              variant=variant, m=10, cap_factor=2.0)
+        step = dist.make_search_step(cfg, mesh)
+        q_sds = jax.ShapeDtypeStruct(
+            (B, 128), jnp.float32,
+            sharding=NamedSharding(mesh, P(("data", "model"), None)))
+        args = [jax.ShapeDtypeStruct(H.shape, H.dtype),
+                jax.ShapeDtypeStruct(store.ids.shape, store.ids.dtype,
+                                     sharding=store.ids.sharding),
+                jax.ShapeDtypeStruct(store.payload.shape, store.payload.dtype,
+                                     sharding=store.payload.sharding)]
+        if variant == "cnb" and cfg.node_bits > 0:
+            refresh = dist.make_refresh_cache(cfg, mesh)
+            ci, cp = refresh(store.ids, store.payload)
+            args += [jax.ShapeDtypeStruct(ci.shape, ci.dtype, sharding=ci.sharding),
+                     jax.ShapeDtypeStruct(cp.shape, cp.dtype, sharding=cp.sharding)]
+        lowered = step.lower(*args, q_sds)
+        compiled = lowered.compile()
+        coll = parse_collectives(compiled.as_text())
+        est = dist.estimate_query_bytes(cfg, batch=B, d=128,
+                                        n_total=n_data * n_model)
+        out.append((
+            f"dist/{variant}/mesh{n_data}x{n_model}",
+            coll["total_wire_bytes"] / B,
+            f"hlo_wire_bytes={coll['total_wire_bytes']:.0f};"
+            f"est_bytes={est['total']:.0f};"
+            f"counts={sum(coll['counts'].values())}"))
+    return out

@@ -1,0 +1,51 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this CPU host the numbers measure the jit'd oracle (the kernels run in
+interpret mode and are NOT representative); the derived column records the
+validated tile shapes that the TPU path will use."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+    x = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((4, 12, 512)), jnp.float32)
+    ref_fn = jax.jit(ref.simhash_ref)
+    us = _time(ref_fn, x, h)
+    out.append(("kernels/simhash_oracle_4096x512xL4k12", us,
+                "tile=(256,512)xLK128;validated=interpret"))
+
+    q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    cand = jnp.asarray(rng.standard_normal((64, 832, 128)), jnp.float32)
+    valid = jnp.ones((64, 832), bool)
+    ref_fn2 = jax.jit(lambda a, b, c: ref.bucket_topk_ref(a, b, c, 10))
+    us = _time(ref_fn2, q, cand, valid)
+    out.append(("kernels/bucket_topk_oracle_64x832x128_m10", us,
+                "tile=(8,KC,128);unrolled_m=10;validated=interpret"))
+
+    c = jnp.asarray(rng.integers(0, 2**31, (4096,)), jnp.uint32)
+    cc = jnp.asarray(rng.integers(0, 2**31, (4096, 128)), jnp.uint32)
+    ref_fn3 = jax.jit(ref.hamming_ref)
+    us = _time(ref_fn3, c, cc)
+    out.append(("kernels/hamming_oracle_4096x128", us,
+                "tile=(256,128);swar_popcount;validated=interpret"))
+    return out

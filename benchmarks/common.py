@@ -1,0 +1,104 @@
+"""Shared benchmark machinery: dataset build, engines, quality evaluation."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BucketStore, EngineConfig, LshEngine, LshParams, make_hyperplanes,
+    metrics, paper_topology,
+)
+from repro.core.corpus import exact_topk_sparse, sparse_densify_host
+from repro.core.store import build_store_host
+from repro.data import osn
+
+
+def sketch_sparse_codes(corpus, hyperplanes, chunk: int = 8192) -> np.ndarray:
+    """Sketch a sparse corpus chunk-by-chunk (densify per chunk)."""
+    from repro.core.hashing import _sketch_codes_jit
+
+    n = corpus.n
+    L = hyperplanes.shape[0]
+    out = np.empty((n, L), np.uint32)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        dense = sparse_densify_host(corpus, np.arange(s, e))
+        out[s:e] = np.asarray(_sketch_codes_jit(jnp.asarray(dense), hyperplanes))
+    return out
+
+
+@dataclasses.dataclass
+class BuiltDataset:
+    spec: osn.OsnSpec
+    corpus: object
+    params: LshParams
+    hyperplanes: object
+    store: BucketStore
+    queries_idx: np.ndarray
+    queries_dense: np.ndarray       # unit rows [nq, d]
+    ideal_ids: np.ndarray           # [nq, m] (self excluded)
+    ideal_scores: np.ndarray
+
+
+_CACHE: dict = {}
+
+
+def build_dataset(spec: osn.OsnSpec, L: int, num_queries: int, m: int = 10,
+                  capacity: int = 256, seed: int = 0) -> BuiltDataset:
+    key = (spec.name, L, num_queries, m, capacity, seed)
+    if key in _CACHE:
+        return _CACHE[key]
+    t0 = time.time()
+    corpus = osn.generate(spec)
+    params = LshParams(d=spec.num_interests, k=spec.k, L=L, seed=seed + 13)
+    h = make_hyperplanes(params)
+    codes = sketch_sparse_codes(corpus, h)
+    store = build_store_host(codes, params.num_buckets, capacity=capacity)
+
+    rng = np.random.default_rng(seed + 4)
+    qidx = rng.choice(corpus.n, num_queries, replace=False)
+    qd = sparse_densify_host(corpus, qidx)
+    qd /= np.maximum(np.linalg.norm(qd, axis=1, keepdims=True), 1e-12)
+
+    ideal_s = np.empty((num_queries, m), np.float32)
+    ideal_i = np.empty((num_queries, m), np.int32)
+    qchunk = 256
+    for s0 in range(0, num_queries, qchunk):
+        e0 = min(s0 + qchunk, num_queries)
+        isc, iid = exact_topk_sparse(corpus, qd[s0:e0], m + 1)
+        for i in range(e0 - s0):
+            mask = iid[i] != qidx[s0 + i]
+            ideal_s[s0 + i] = isc[i][mask][:m]
+            ideal_i[s0 + i] = iid[i][mask][:m]
+    built = BuiltDataset(spec, corpus, params, h, store, qidx, qd,
+                         ideal_i, ideal_s)
+    _CACHE[key] = built
+    print(f"# built {spec.name} (n={corpus.n}, k={spec.k}, L={L}) "
+          f"in {time.time()-t0:.1f}s")
+    return built
+
+
+def evaluate_variant(ds: BuiltDataset, variant: str, m: int = 10):
+    """Returns (recall, ncs, messages, search_seconds_per_query)."""
+    topo = paper_topology(ds.spec.k)
+    e = LshEngine(ds.params, ds.hyperplanes, ds.store, ds.corpus, topo,
+                  EngineConfig(variant=variant))
+    t0 = time.time()
+    r = e.search(jnp.asarray(ds.queries_dense), m=m, exclude=ds.queries_idx)
+    dt = (time.time() - t0) / len(ds.queries_idx)
+    return (
+        metrics.recall_at_m(r.ids, ds.ideal_ids),
+        metrics.ncs_at_m(r.scores, ds.ideal_scores),
+        r.cost.messages,
+        dt,
+    )
+
+
+# scaled dataset registry used by the figure benchmarks; --full switches the
+# larger ones in
+FAST_SPECS = [osn.DBLP_S]
+FULL_SPECS = [osn.DBLP_S, osn.LIVEJOURNAL_S, osn.FRIENDSTER_S]

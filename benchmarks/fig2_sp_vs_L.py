@@ -1,0 +1,17 @@
+"""Paper Fig. 2: analytical SP vs L at k=12 — NB >= LSH, gap grows with L."""
+
+import numpy as np
+
+from repro.core import analysis
+
+
+def rows():
+    k = 12
+    out = []
+    for L in (1, 10, 100):
+        t = np.linspace(0.0, 1.0, 101)
+        s = analysis.angular_from_cosine(t)
+        gap = float(np.max(analysis.sp_nearbucket(s, k, L)
+                           - analysis.sp_lsh(s, k, L)))
+        out.append((f"fig2/L={L}", gap, "nb_minus_lsh_max"))
+    return out

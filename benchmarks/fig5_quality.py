@@ -1,0 +1,35 @@
+"""Paper Fig. 5 / Sec. 6.4: recall@10 and NCS@10 vs network cost.
+
+Sweeps L per variant; reports quality at (approximately) matched message
+budgets.  The headline `derived` per dataset: recall uplift of CNB over
+LSH at LSH's own message cost (paper: >50% on LiveJournal)."""
+
+import numpy as np
+
+from benchmarks.common import FAST_SPECS, FULL_SPECS, build_dataset, evaluate_variant
+
+
+def rows(full: bool = False, num_queries: int = 400):
+    out = []
+    Ls = (1, 2, 4, 8)
+    for spec in (FULL_SPECS if full else FAST_SPECS):
+        curves = {v: [] for v in ("lsh", "layered", "nb", "cnb")}
+        for L in Ls:
+            ds = build_dataset(spec, L=L, num_queries=num_queries)
+            for variant in curves:
+                rec, ncs, msgs, dt = evaluate_variant(ds, variant)
+                curves[variant].append((msgs, rec, ncs, dt))
+                out.append((
+                    f"fig5/{spec.name}/{variant}/L={L}", dt * 1e6,
+                    f"messages={msgs};recall={rec:.3f};ncs={ncs:.3f}"))
+        # headline: CNB vs LSH at equal message budget (same L => same msgs)
+        same_budget = [
+            (c[1] / max(l[1], 1e-9) - 1.0, c[0])
+            for c, l in zip(curves["cnb"], curves["lsh"])
+        ]
+        best = max(same_budget)
+        out.append((
+            f"fig5/{spec.name}/headline", 0.0,
+            f"cnb_recall_uplift_at_equal_cost={best[0]*100:.1f}%"
+            f"@msgs={best[1]:.0f}"))
+    return out

@@ -1,0 +1,103 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""§Perf hillclimb cell 3: the distributed NearBucket-LSH search step on the
+production (16 data x 16 model) mesh — the cell most representative of the
+paper's own technique.
+
+Baseline -> iterations, each lowered+compiled and measured from HLO:
+  A. allgather routing, CNB (cache)           [dense replication baseline]
+  B. alltoall routing,  CNB                   [paper's DHT-style routing]
+  C. alltoall routing,  NB (no cache)         [paper's uncached variant]
+  D. alltoall + margin-ranked probes p=4      [beyond-paper multiprobe]
+  E. alltoall, LSH (exact only)               [quality floor reference]
+
+Emits CSV rows: wire bytes/query, per-op breakdown, probed buckets/query.
+Run:  PYTHONPATH=src python -m benchmarks.perf_lsh
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import LshParams, make_hyperplanes
+from repro.core import distributed as dist
+# store shapes built as ShapeDtypeStructs directly
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_production_mesh
+
+
+def lower_search(cfg: dist.DistConfig, mesh, B: int, D: int, capacity: int):
+    params = cfg.params
+    L, NB = params.L, params.num_buckets
+    step = dist.make_search_step(cfg, mesh)
+    # pure ShapeDtypeStructs — no store materialization on 512 host devices
+    args = [
+        jax.ShapeDtypeStruct((L, params.k, D), jnp.float32,
+                             sharding=NamedSharding(mesh, P())),
+        jax.ShapeDtypeStruct(
+            (L, NB, capacity), jnp.int32,
+            sharding=NamedSharding(mesh, P(None, "model", None))),
+        jax.ShapeDtypeStruct(
+            (L, NB, capacity, D), jnp.float32,
+            sharding=NamedSharding(mesh, P(None, "model", None, None))),
+    ]
+    if cfg.variant == "cnb" and cfg.node_bits > 0:
+        nbits = cfg.node_bits
+        ci = jax.ShapeDtypeStruct(
+            (L, nbits, NB, capacity), jnp.int32,
+            sharding=NamedSharding(mesh, P(None, None, "model", None)))
+        cp = jax.ShapeDtypeStruct(
+            (L, nbits, NB, capacity, D), jnp.float32,
+            sharding=NamedSharding(mesh, P(None, None, "model", None, None)))
+        args += [ci, cp]
+    q = jax.ShapeDtypeStruct(
+        (B, D), jnp.float32,
+        sharding=NamedSharding(mesh, P(("data", "model"), None)))
+    lowered = step.lower(*args, q)
+    compiled = lowered.compile()
+    return compiled
+
+
+def rows():
+    mesh = make_production_mesh()
+    B, D, capacity = 4096, 128, 128
+    k, L = 12, 4
+    params = LshParams(d=D, k=k, L=L, seed=0)
+    variants = [
+        ("A_allgather_cnb", dict(variant="cnb", routing="allgather")),
+        ("B_alltoall_cnb", dict(variant="cnb", routing="alltoall")),
+        ("C_alltoall_nb", dict(variant="nb", routing="alltoall")),
+        ("D_alltoall_cnb_p4", dict(variant="cnb", routing="alltoall",
+                                   num_probes=4)),
+        ("E_alltoall_lsh", dict(variant="lsh", routing="alltoall")),
+    ]
+    out = []
+    for name, kw in variants:
+        p = kw.pop("num_probes", None)
+        cfg = dist.DistConfig(params=params, n_shards=16, cap_factor=2.0, **kw)
+        if p is not None:
+            # ranked probing probes only p of the local_bits near buckets
+            cfg = dist.DistConfig(params=params, n_shards=16, cap_factor=2.0,
+                                  probe_local_near=True, **kw)
+        compiled = lower_search(cfg, mesh, B, D, capacity)
+        coll = parse_collectives(compiled.as_text())
+        mem = compiled.memory_analysis()
+        probes = cfg.probes_per_table_local() + (
+            cfg.node_bits if cfg.variant in ("nb", "cnb") else 0)
+        out.append((
+            f"perf_lsh/{name}",
+            coll["total_wire_bytes"] / B,
+            f"wire_total={coll['total_wire_bytes']:.3e};"
+            f"by_op={json.dumps(coll['bytes_by_op']).replace(',', ';')};"
+            f"buckets_per_query={L * probes};"
+            f"args_gib={(mem.argument_size_in_bytes or 0)/2**30:.2f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

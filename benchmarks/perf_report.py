@@ -1,0 +1,75 @@
+"""Emit the EXPERIMENTS.md §Perf tables from results/{dryrun,perf}/*.json."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import (
+    LINK_BW, PEAK_FLOPS, _inner_scan_correction, model_flops,
+)
+
+CHIPS = 256
+
+
+def load(path):
+    r = json.load(open(path))
+    corr = _inner_scan_correction(r["arch"], r["shape"], CHIPS) \
+        if r.get("unrolled") else 0.0
+    flops = (r["cost"]["flops"] or 0.0) + corr
+    compute_s = flops / PEAK_FLOPS
+    coll_s = r["collectives"]["total_wire_bytes"] / LINK_BW
+    mf = model_flops(r["arch"], r["shape"])
+    ideal = mf / (CHIPS * PEAK_FLOPS)
+    step = max(compute_s, coll_s)
+    return dict(
+        compute_s=compute_s, coll_s=coll_s, step_s=step,
+        wire_gb=r["collectives"]["total_wire_bytes"] / 2**30,
+        by_op={k: round(v / 2**30, 1)
+               for k, v in r["collectives"]["bytes_by_op"].items()},
+        roofline=ideal / step, ideal_s=ideal,
+        temp_gib=(r["memory"]["temp_bytes"] or 0) / 2**30,
+    )
+
+
+def row(tag, path, note=""):
+    if not os.path.exists(path):
+        return f"| {tag} | (missing) |  |  |  |  | {note} |"
+    d = load(path)
+    return (f"| {tag} | {d['compute_s']:.2f} | {d['coll_s']:.2f} "
+            f"| {d['step_s']:.2f} | {d['wire_gb']:.0f} "
+            f"| {d['roofline']:.3f} | {note} |")
+
+
+def main():
+    hdr = ("| config | compute s | collective s | step s | wire GiB/dev "
+           "| roofline frac | note |\n|---|---|---|---|---|---|---|")
+    print("### codeqwen1.5-7b train_4k (most collective-bound)")
+    print(hdr)
+    print(row("baseline (Megatron TP+FSDP)",
+              "results/dryrun/codeqwen1.5-7b__train_4k__pod1__unroll.json"))
+    print(row("it1: zero3 rules",
+              "results/perf/codeqwen1.5-7b__train_4k__pod1__unroll__zero3.json",
+              "scan-mode temp 9.9 GiB: fits"))
+    print(row("it2: zero3 + no-remat",
+              "results/perf/codeqwen1.5-7b__train_4k__pod1__unroll__zero3__noremat.json",
+              "scan-mode temp 200 GiB: REJECTED (OOM)"))
+    print(row("it3: zero3b (vocab repl.)",
+              "results/perf/codeqwen1.5-7b__train_4k__pod1__unroll__zero3b.json"))
+    print()
+    print("### gemma2-2b train_4k (worst useful-ratio / replicated attention)")
+    print(hdr)
+    print(row("baseline (Megatron TP+FSDP)",
+              "results/dryrun/gemma2-2b__train_4k__pod1__unroll.json"))
+    print(row("it1: zero3 rules",
+              "results/perf/gemma2-2b__train_4k__pod1__unroll__zero3.json",
+              "scan-mode temp 7.7 GiB: fits"))
+    print(row("it2: zero3b (vocab repl.)",
+              "results/perf/gemma2-2b__train_4k__pod1__unroll__zero3b.json"))
+    print(row("it3: zero3 + no-remat",
+              "results/perf/gemma2-2b__train_4k__pod1__unroll__zero3__noremat.json",
+              "scan-mode temp 106 GiB: REJECTED (OOM)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  `--full` switches in the larger
+LiveJournal/Friendster-scale synthetic datasets (slower); default exercises
+every benchmark at CPU-friendly scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="use all three OSN-scale datasets")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark prefixes to run")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_churn, bench_distributed, bench_kernels, fig1_sp_vs_buckets,
+        fig2_sp_vs_L, fig3_sp_vs_cost, fig4_sp_empirical, fig5_quality,
+        table1_costs,
+    )
+    from benchmarks import roofline
+
+    suites = [
+        ("fig1", lambda: fig1_sp_vs_buckets.rows()),
+        ("fig2", lambda: fig2_sp_vs_L.rows()),
+        ("fig3", lambda: fig3_sp_vs_cost.rows()),
+        ("table1", lambda: table1_costs.rows()),
+        ("fig4", lambda: fig4_sp_empirical.rows(full=args.full)),
+        ("fig5", lambda: fig5_quality.rows(full=args.full)),
+        ("churn", lambda: bench_churn.rows()),
+        ("kernels", lambda: bench_kernels.rows()),
+        ("dist", lambda: bench_distributed.rows()),
+        ("roofline", lambda: roofline.rows()),
+    ]
+    wanted = [w for w in args.only.split(",") if w]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if wanted and not any(name.startswith(w) for w in wanted):
+            continue
+        t0 = time.time()
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},{derived}")
+            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

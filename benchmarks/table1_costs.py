@@ -1,0 +1,30 @@
+"""Paper Table 1: closed-form costs + hop-counted simulation agreement."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, LshEngine, costmodel, paper_topology
+from benchmarks.common import build_dataset
+from repro.data import osn
+
+
+def rows():
+    ds = build_dataset(osn.tiny_spec(), L=4, num_queries=64)
+    topo = paper_topology(ds.spec.k)
+    out = []
+    for variant in ("lsh", "layered", "nb", "cnb"):
+        e = LshEngine(ds.params, ds.hyperplanes, ds.store, ds.corpus, topo,
+                      EngineConfig(variant=variant))
+        t0 = time.time()
+        r = e.search(jnp.asarray(ds.queries_dense), m=10,
+                     exclude=ds.queries_idx, simulate_messages=True,
+                     rng=np.random.default_rng(0))
+        us = (time.time() - t0) / 64 * 1e6
+        out.append((
+            f"table1/{variant}", us,
+            f"closed_form_msgs={r.cost.messages};sim_msgs={r.sim_messages:.1f};"
+            f"vec_searched={r.cost.vectors_searched:.0f};"
+            f"stored_per_node={r.cost.vectors_stored_per_node:.0f}"))
+    return out

@@ -1,0 +1,41 @@
+"""End-to-end training driver example: train a reduced assigned arch for a
+few hundred steps with fault-tolerant checkpointing, then resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch gemma2-2b] [--steps 200]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        half = args.steps // 2
+        print(f"=== phase 1: steps 0..{half} (then simulated preemption) ===")
+        train_mod.main([
+            "--arch", args.arch, "--smoke", "--steps", str(half),
+            "--batch", "8", "--seq", "128", "--lr", "1e-3",
+            "--ckpt-dir", ckpt, "--ckpt-every", "25", "--log-every", "20",
+        ])
+        print(f"=== phase 2: resume from checkpoint to {args.steps} ===")
+        train_mod.main([
+            "--arch", args.arch, "--smoke", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "1e-3",
+            "--ckpt-dir", ckpt, "--ckpt-every", "25", "--log-every", "20",
+            "--resume",
+        ])
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

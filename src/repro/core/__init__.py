@@ -1,0 +1,32 @@
+"""NearBucket-LSH core: the paper's contribution as a composable JAX module.
+
+Layers:
+  hashing     — cosine LSH (sign random projection), sketch packing
+  multiprobe  — near-bucket enumeration / probe plans (Sec. 4.2)
+  can         — CAN overlay geometry: bucket->node map, neighbors, hops
+  store       — soft-state bucket store (insert/refresh/GC, Sec. 4.1)
+  engine      — single-host reference engine (Algorithms 1-2)
+  distributed — shard_map runtime (all_to_all routing, neighbor permutes)
+  layered     — Layered-LSH and its LSH-equivalence (Sec. 5.2)
+  analysis    — Propositions 1-4 closed forms (Sec. 5)
+  costmodel   — Table 1 cost accounting
+  corpus      — dense/sparse corpora + exact oracle
+  metrics     — recall@m, NCS@m (Sec. 6.1)
+"""
+
+from repro.core.hashing import (  # noqa: F401
+    LshParams,
+    make_hyperplanes,
+    normalize,
+    sketch_bits,
+    sketch_codes,
+    pack_bits,
+    unpack_bits,
+    hamming_distance,
+    collision_probability,
+)
+from repro.core.can import CanTopology, paper_topology  # noqa: F401
+from repro.core.store import BucketStore, make_store, insert_batch, expire  # noqa: F401
+from repro.core.engine import EngineConfig, LshEngine, SearchResult, dedupe_topk  # noqa: F401
+from repro.core.corpus import DenseCorpus, SparseCorpus  # noqa: F401
+from repro.core import analysis, costmodel, metrics, multiprobe  # noqa: F401

@@ -1,0 +1,104 @@
+"""CAN overlay geometry: bucket <-> node mapping, neighbors, hop counts.
+
+Paper Sec. 4.1: a k-dimensional CAN with N = 2^k nodes, one bucket per node;
+node ids ARE sketch codes; the i-th neighbor differs in bit i; greedy
+hypercube routing costs Hamming(src, dst) hops (expected k/2).
+
+TPU adaptation (DESIGN.md Sec. 2): with n_dev << 2^k devices, each device
+owns a *contiguous sketch-prefix zone* of 2^(k - a) buckets, a = log2(n_dev).
+Bit flips within the low (k - a) bits stay on-device ("free" near buckets);
+flips of the high a bits land on the device whose id differs in that bit —
+the XOR-neighbor, reachable by one collective_permute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _log2_exact(n: int) -> int:
+    a = int(n).bit_length() - 1
+    if (1 << a) != n:
+        raise ValueError(f"expected a power of two, got {n}")
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class CanTopology:
+    """Geometry of the bucket space over the device (node) space."""
+
+    k: int        # sketch bits; 2^k buckets per table
+    n_nodes: int  # devices owning bucket shards (power of two)
+
+    def __post_init__(self):
+        a = _log2_exact(self.n_nodes)
+        if a > self.k:
+            raise ValueError(f"n_nodes=2^{a} exceeds 2^k={1 << self.k} buckets")
+
+    @property
+    def node_bits(self) -> int:
+        return _log2_exact(self.n_nodes)
+
+    @property
+    def local_bits(self) -> int:
+        return self.k - self.node_bits
+
+    @property
+    def buckets_per_node(self) -> int:
+        return 1 << self.local_bits
+
+    # -- bucket/node coordinates ------------------------------------------
+
+    def node_of(self, codes):
+        """Owning node id of each bucket code (high `node_bits` bits)."""
+        return (codes.astype(jnp.uint32) >> jnp.uint32(self.local_bits)) if hasattr(
+            codes, "dtype"
+        ) and not isinstance(codes, np.ndarray) else (
+            np.asarray(codes, dtype=np.uint32) >> np.uint32(self.local_bits)
+        )
+
+    def local_of(self, codes):
+        """Bucket index within the owning node's shard (low bits)."""
+        mask = (1 << self.local_bits) - 1
+        if hasattr(codes, "dtype") and not isinstance(codes, np.ndarray):
+            return codes.astype(jnp.uint32) & jnp.uint32(mask)
+        return np.asarray(codes, dtype=np.uint32) & np.uint32(mask)
+
+    def code_of(self, node, local):
+        return (np.uint32(node) << np.uint32(self.local_bits)) | np.uint32(local)
+
+    # -- neighbor structure -------------------------------------------------
+
+    def node_neighbors(self, node: int) -> np.ndarray:
+        """The `node_bits` XOR-neighbors of a node (paper's CAN neighbors
+        restricted to the bits that select the node)."""
+        return np.asarray(
+            [node ^ (1 << j) for j in range(self.node_bits)], dtype=np.uint32
+        )
+
+    def neighbor_perm(self, bit: int) -> list[tuple[int, int]]:
+        """collective_permute pairing for flipping node-id `bit`:
+        a perfect matching (i, i ^ 2^bit) over all nodes."""
+        if not (0 <= bit < self.node_bits):
+            raise ValueError(f"bit {bit} out of range for {self.node_bits} node bits")
+        return [(i, i ^ (1 << bit)) for i in range(self.n_nodes)]
+
+    # -- routing cost (message unit, paper Table 1) --------------------------
+
+    def lookup_hops(self, src_node: int, dst_node: int) -> int:
+        """Greedy hypercube routing cost in CAN hops (= Hamming distance)."""
+        return int(bin(int(src_node) ^ int(dst_node)).count("1"))
+
+    @property
+    def expected_lookup_hops(self) -> float:
+        """Expected DHT lookup cost from a random source: k/2 in the paper's
+        N = 2^k setting (node_bits/2 for the sharded zone variant)."""
+        return self.node_bits / 2.0
+
+
+def paper_topology(k: int) -> CanTopology:
+    """The paper's exact setting: one bucket per node, N = 2^k."""
+    return CanTopology(k=k, n_nodes=1 << k)

@@ -1,0 +1,121 @@
+"""Dynamic-OSN churn simulation (paper Sec. 2.2 + Sec. 4.1 soft state).
+
+The paper's data model: users join/leave and update their interest
+profiles; bucket nodes hold *soft state* that users re-announce
+periodically, and entries older than a TTL are garbage-collected.  The
+paper asserts this keeps the index fresh at negligible cost (update rate
+<< query rate) but runs no churn experiment — this module does:
+
+  epoch loop:
+    1. a fraction `update_rate` of users mutate their interest vectors
+       (their true buckets move);
+    2. a fraction `churn_rate` of users leave and are replaced by fresh
+       users (new ids, new vectors);
+    3. every `refresh_every` epochs, all live users re-announce
+       (insert_batch) and the store expires entries older than `ttl`;
+    4. CNB-LSH recall@m is measured against the *current* ground truth.
+
+Output: recall trajectory vs refresh period — the freshness/cost trade the
+paper's design argues about, quantified.  Uses the same BucketStore /
+engine code paths as production (streaming insert_batch + expire, not the
+host bulk builder).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, metrics
+from repro.core.corpus import DenseCorpus
+from repro.core.engine import EngineConfig, LshEngine
+from repro.core.hashing import LshParams
+from repro.core.store import expire, insert_batch, make_store
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    num_users: int = 4000
+    dim: int = 64
+    k: int = 6
+    L: int = 4
+    capacity: int = 128
+    epochs: int = 12
+    update_rate: float = 0.05     # users mutating their vector per epoch
+    churn_rate: float = 0.02      # users replaced per epoch
+    refresh_every: int = 2        # re-announce period (epochs)
+    ttl_epochs: int = 4           # GC horizon
+    mutation: float = 0.5         # vector drift magnitude on update
+    num_queries: int = 128
+    m: int = 10
+    seed: int = 0
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def run_churn(cfg: ChurnConfig) -> dict:
+    """Returns dict with per-epoch recall and bookkeeping counters."""
+    rng = np.random.default_rng(cfg.seed)
+    params = LshParams(d=cfg.dim, k=cfg.k, L=cfg.L, seed=cfg.seed + 1)
+    hp = hashing.make_hyperplanes(params)
+
+    vecs = _unit(rng.standard_normal((cfg.num_users, cfg.dim))).astype(
+        np.float32
+    )
+    alive = np.ones(cfg.num_users, bool)
+    store = make_store(cfg.L, params.num_buckets, cfg.capacity)
+
+    def announce(ids, epoch):
+        codes = hashing.sketch_codes(jnp.asarray(vecs[ids]), hp)
+        return insert_batch(
+            store, jnp.asarray(ids, jnp.int32), codes, jnp.int32(epoch)
+        )
+
+    # initial announce
+    store = announce(np.arange(cfg.num_users), 0)
+
+    recalls, staleness = [], []
+    for epoch in range(1, cfg.epochs + 1):
+        # 1. profile updates (vector drift)
+        n_upd = int(cfg.update_rate * cfg.num_users)
+        upd = rng.choice(cfg.num_users, n_upd, replace=False)
+        vecs[upd] = _unit(
+            vecs[upd] + cfg.mutation * rng.standard_normal((n_upd, cfg.dim))
+        ).astype(np.float32)
+        # 2. churn: replace users (id reused; semantics = leave + join)
+        n_churn = int(cfg.churn_rate * cfg.num_users)
+        rep = rng.choice(cfg.num_users, n_churn, replace=False)
+        vecs[rep] = _unit(
+            rng.standard_normal((n_churn, cfg.dim))
+        ).astype(np.float32)
+
+        # 3. periodic refresh + GC (the paper's soft-state maintenance)
+        if epoch % cfg.refresh_every == 0:
+            store = announce(np.arange(cfg.num_users)[alive], epoch)
+            store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
+
+        # 4. measure recall against CURRENT ground truth
+        corpus = DenseCorpus(jnp.asarray(vecs))
+        engine = LshEngine(
+            params, hp, store, corpus, None, EngineConfig(variant="cnb")
+        )
+        qidx = rng.choice(cfg.num_users, cfg.num_queries, replace=False)
+        q = vecs[qidx]
+        sims = q @ vecs.T
+        sims[np.arange(cfg.num_queries), qidx] = -np.inf
+        ideal = np.argsort(-sims, axis=1)[:, : cfg.m].astype(np.int32)
+        res = engine.search(jnp.asarray(q), m=cfg.m, exclude=qidx)
+        recalls.append(metrics.recall_at_m(res.ids, ideal))
+        staleness.append(epoch % cfg.refresh_every)
+
+    return dict(
+        recalls=np.asarray(recalls),
+        staleness=np.asarray(staleness),
+        final_recall=float(recalls[-1]),
+        mean_recall=float(np.mean(recalls)),
+        refresh_every=cfg.refresh_every,
+    )

@@ -1,0 +1,183 @@
+"""Corpus representations + exact (oracle) similarity search.
+
+Two layouts, both unit-normalized so cosine == dot:
+  * DenseCorpus : [n, d] float — model-produced embeddings (framework path).
+  * SparseCorpus: padded CSR-ish (ids [n, nnz_max] int32 with -1 padding,
+    vals [n, nnz_max] float) — the paper's sparse OSN interest vectors
+    (d up to millions; nnz per user is tens).
+
+The oracle (`exact_topk`) is the ground truth for recall@m / NCS@m and for
+the kernel ref tests; it is chunked so multi-hundred-thousand-user corpora
+fit CPU memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DenseCorpus:
+    vectors: jax.Array  # [n, d], unit rows
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.vectors.shape[1]
+
+    def gather(self, idx: jax.Array) -> jax.Array:
+        """Rows at idx (any shape), zeros for idx < 0."""
+        safe = jnp.maximum(idx, 0)
+        rows = self.vectors[safe]
+        return jnp.where((idx >= 0)[..., None], rows, 0.0)
+
+    def scores_against(self, q: jax.Array, idx: jax.Array) -> jax.Array:
+        """Cosine of q [d] (unit) against rows at idx [...]."""
+        return jnp.einsum("...d,d->...", self.gather(idx), q)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseCorpus:
+    nnz_ids: jax.Array   # int32 [n, nnz_max], -1 padding
+    nnz_vals: jax.Array  # f32   [n, nnz_max], zero padding; rows unit-norm
+    d: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.nnz_ids.shape[0]
+
+    def densify(self, idx: jax.Array) -> jax.Array:
+        """Dense [.., d] rows for (small sets of) indices — used to sketch."""
+        safe = jnp.maximum(idx, 0)
+        ids = self.nnz_ids[safe]
+        vals = jnp.where((idx >= 0)[..., None], self.nnz_vals[safe], 0.0)
+        out = jnp.zeros(idx.shape + (self.d,), jnp.float32)
+        return _scatter_dense(out, ids, vals)
+
+    def scores_against_dense(self, q_dense: jax.Array, idx: jax.Array) -> jax.Array:
+        """Cosine of dense unit query q [d] against sparse rows idx [...]."""
+        safe = jnp.maximum(idx, 0)
+        ids = self.nnz_ids[safe]             # [..., nnz]
+        vals = self.nnz_vals[safe]
+        gathered = q_dense[jnp.maximum(ids, 0)]
+        gathered = jnp.where(ids >= 0, gathered, 0.0)
+        s = jnp.sum(gathered * vals, axis=-1)
+        return jnp.where(idx >= 0, s, 0.0)
+
+
+def _scatter_dense(out, ids, vals):
+    valid = ids >= 0
+    safe_ids = jnp.where(valid, ids, 0)
+    safe_vals = jnp.where(valid, vals, 0.0)
+    # one-hot-free scatter-add along the last axis
+    flat_out = out.reshape(-1, out.shape[-1])
+    flat_ids = safe_ids.reshape(flat_out.shape[0], -1)
+    flat_vals = safe_vals.reshape(flat_out.shape[0], -1)
+    row = jnp.arange(flat_out.shape[0])[:, None]
+    flat_out = flat_out.at[row, flat_ids].add(flat_vals)
+    return flat_out.reshape(out.shape)
+
+
+def normalize_rows_np(x: np.ndarray, eps: float = 1e-12) -> np.ndarray:
+    n = np.linalg.norm(x, axis=-1, keepdims=True)
+    return x / np.maximum(n, eps)
+
+
+def sparse_from_lists(
+    interest_ids: list[np.ndarray],
+    interest_vals: list[np.ndarray],
+    d: int,
+    nnz_max: int,
+) -> SparseCorpus:
+    """Pack ragged per-user (ids, weights) lists; rows are L2-normalized."""
+    n = len(interest_ids)
+    ids = np.full((n, nnz_max), -1, np.int32)
+    vals = np.zeros((n, nnz_max), np.float32)
+    for i, (ii, vv) in enumerate(zip(interest_ids, interest_vals)):
+        m = min(len(ii), nnz_max)
+        # keep the heaviest interests if truncating
+        order = np.argsort(-np.asarray(vv))[:m]
+        ids[i, :m] = np.asarray(ii)[order]
+        norm = np.linalg.norm(np.asarray(vv)[order])
+        vals[i, :m] = np.asarray(vv)[order] / max(norm, 1e-12)
+    return SparseCorpus(jnp.asarray(ids), jnp.asarray(vals), d=d)
+
+
+def sparse_densify_host(c: SparseCorpus, rows: np.ndarray) -> np.ndarray:
+    """Host-side dense rows (for sketching large sparse corpora in chunks)."""
+    ids = np.asarray(c.nnz_ids[rows])
+    vals = np.asarray(c.nnz_vals[rows])
+    out = np.zeros((len(rows), c.d), np.float32)
+    r = np.arange(len(rows))[:, None]
+    valid = ids >= 0
+    np.add.at(out, (np.broadcast_to(r, ids.shape)[valid], ids[valid]), vals[valid])
+    return out
+
+
+def exact_topk_dense(
+    corpus: DenseCorpus, queries: jax.Array, m: int, chunk: int = 8192
+) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle top-m over a dense corpus; returns (scores, ids) [nq, m]."""
+    nq = queries.shape[0]
+    best_s = np.full((nq, m), -np.inf, np.float32)
+    best_i = np.full((nq, m), -1, np.int32)
+    qs = jnp.asarray(queries)
+
+    @jax.jit
+    def score_chunk(vs, q):
+        return q @ vs.T  # [nq, chunk]
+
+    for s0 in range(0, corpus.n, chunk):
+        e0 = min(s0 + chunk, corpus.n)
+        sc = np.asarray(score_chunk(corpus.vectors[s0:e0], qs))
+        merged_s = np.concatenate([best_s, sc], axis=1)
+        merged_i = np.concatenate(
+            [best_i, np.broadcast_to(np.arange(s0, e0, dtype=np.int32), sc.shape)],
+            axis=1,
+        )
+        sel = np.argpartition(-merged_s, m - 1, axis=1)[:, :m]
+        best_s = np.take_along_axis(merged_s, sel, axis=1)
+        best_i = np.take_along_axis(merged_i, sel, axis=1)
+    order = np.argsort(-best_s, axis=1)
+    return np.take_along_axis(best_s, order, 1), np.take_along_axis(best_i, order, 1)
+
+
+def exact_topk_sparse(
+    corpus: SparseCorpus, q_dense: np.ndarray, m: int, chunk: int = 16384
+) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle top-m over a sparse corpus given dense unit queries [nq, d]."""
+    nq = q_dense.shape[0]
+    best_s = np.full((nq, m), -np.inf, np.float32)
+    best_i = np.full((nq, m), -1, np.int32)
+    qj = jnp.asarray(q_dense)
+
+    @jax.jit
+    def score_chunk(ids, vals, q):
+        g = q[:, jnp.maximum(ids, 0)]          # [nq, chunk, nnz]
+        g = jnp.where(ids >= 0, g, 0.0)
+        return jnp.einsum("qcn,cn->qc", g, vals)
+
+    for s0 in range(0, corpus.n, chunk):
+        e0 = min(s0 + chunk, corpus.n)
+        sc = np.asarray(
+            score_chunk(corpus.nnz_ids[s0:e0], corpus.nnz_vals[s0:e0], qj)
+        )
+        merged_s = np.concatenate([best_s, sc], axis=1)
+        merged_i = np.concatenate(
+            [best_i, np.broadcast_to(np.arange(s0, e0, dtype=np.int32), sc.shape)],
+            axis=1,
+        )
+        sel = np.argpartition(-merged_s, m - 1, axis=1)[:, :m]
+        best_s = np.take_along_axis(merged_s, sel, axis=1)
+        best_i = np.take_along_axis(merged_i, sel, axis=1)
+    order = np.argsort(-best_s, axis=1)
+    return np.take_along_axis(best_s, order, 1), np.take_along_axis(best_i, order, 1)

@@ -1,0 +1,505 @@
+"""Distributed NearBucket-LSH runtime (shard_map over the production mesh).
+
+Geometry (DESIGN.md Sec. 2): bucket shards live on the `model` mesh axis —
+device j owns the contiguous sketch-prefix zone {codes with high bits == j}
+(the CAN zone).  The query batch is sharded over *all* mesh axes (every
+device is both a peer that receives queries and a bucket node, exactly as in
+the paper's P2P OSN).  Bucket state is replicated across the data/pod axes.
+
+Per-variant communication on the query path (mirrors Table 1):
+  lsh  : route each (query, table) to its owner shard  [all_to_all]
+         + search the exact bucket + the local-bit near buckets? NO —
+         plain LSH probes the exact bucket only.
+  nb   : lsh + forward to the log2(n_shards) XOR-neighbors [2 ppermutes/bit]
+         to cover node-bit near buckets; local-bit near buckets are free.
+  cnb  : lsh routing, with node-bit near buckets served from a local cache
+         of the neighbors' shards, refreshed OFF the query path by
+         `refresh_cache` (the paper's periodic bucket exchange).
+
+Routing modes (a §Perf knob):
+  alltoall : per-destination padded send buffers, one fused all_to_all each
+             way — bytes ~ L*cap_factor/n_shards of the all_gather cost.
+  allgather: replicate queries along `model`, return per-origin results via
+             all_to_all — simple, no overflow, more bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.can import CanTopology
+from repro.core.engine import dedupe_topk
+from repro.core.hashing import LshParams
+from repro.core.store import BucketStore
+
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    params: LshParams
+    n_shards: int                 # size of the `model` axis
+    variant: str = "cnb"          # lsh | nb | cnb
+    m: int = 10
+    routing: str = "alltoall"     # alltoall | allgather
+    cap_factor: float = 2.0       # per-destination buffer slack (alltoall)
+    probe_local_near: bool = True  # search local-bit near buckets (nb/cnb)
+
+    @property
+    def topo(self) -> CanTopology:
+        return CanTopology(self.params.k, self.n_shards)
+
+    @property
+    def node_bits(self) -> int:
+        return self.topo.node_bits
+
+    @property
+    def local_bits(self) -> int:
+        return self.topo.local_bits
+
+    def probes_per_table_local(self) -> int:
+        """Buckets searched at the owner shard per (query, table)."""
+        if self.variant == "lsh":
+            return 1
+        return 1 + (self.local_bits if self.probe_local_near else 0)
+
+
+# -----------------------------------------------------------------------------
+# local search helpers (run inside shard_map on one shard)
+# -----------------------------------------------------------------------------
+
+
+def _local_probe_buckets(cfg: DistConfig, local_idx: jax.Array) -> jax.Array:
+    """Local bucket indices to probe for a query landing on this shard.
+
+    local_idx: int32 [...]. Returns [..., P_local] — exact bucket first,
+    then the local-bit 1-near buckets (free probes: same device).
+    """
+    if cfg.variant == "lsh" or not cfg.probe_local_near or cfg.local_bits == 0:
+        return local_idx[..., None]
+    flips = (1 << jnp.arange(cfg.local_bits, dtype=jnp.int32))
+    near = jnp.bitwise_xor(local_idx[..., None], flips)
+    return jnp.concatenate([local_idx[..., None], near], axis=-1)
+
+
+def _score_local(
+    cfg: DistConfig,
+    store_ids: jax.Array,      # [T, NB_local, C]
+    store_payload: jax.Array,  # [T, NB_local, C, D]
+    q: jax.Array,              # [r, d]
+    table: jax.Array,          # [r] int32
+    local_idx: jax.Array,      # [r] int32 bucket index within shard
+    m: int,
+):
+    """Top-m among (exact + local near) buckets of each routed query."""
+    probes = _local_probe_buckets(cfg, local_idx)          # [r, P]
+    cand_ids = store_ids[table[:, None], probes]           # [r, P, C]
+    cand_vec = store_payload[table[:, None], probes]       # [r, P, C, D]
+    r = q.shape[0]
+    cand_ids = cand_ids.reshape(r, -1)
+    cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
+    scores = jnp.einsum("rkd,rd->rk", cand_vec, q)
+    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
+    return dedupe_topk(cand_ids, scores, m)
+
+
+def _score_cache(
+    cfg: DistConfig,
+    cache_ids: jax.Array,      # [T, nbits, NB_local, C]
+    cache_payload: jax.Array,  # [T, nbits, NB_local, C, D]
+    q: jax.Array,              # [r, d]
+    table: jax.Array,          # [r]
+    local_idx: jax.Array,      # [r]
+    m: int,
+):
+    """CNB: score the node-bit near buckets from the neighbor cache.
+
+    Flipping node bit j keeps the local index unchanged, so the near bucket
+    of bit j is cache[table, j, local_idx] — a pure local gather.
+    """
+    nbits = cache_ids.shape[1]
+    cand_ids = cache_ids[table[:, None], jnp.arange(nbits)[None, :], local_idx[:, None]]
+    cand_vec = cache_payload[
+        table[:, None], jnp.arange(nbits)[None, :], local_idx[:, None]
+    ]  # [r, nbits, C, D]
+    r = q.shape[0]
+    cand_ids = cand_ids.reshape(r, -1)
+    cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
+    scores = jnp.einsum("rkd,rd->rk", cand_vec, q)
+    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
+    return dedupe_topk(cand_ids, scores, m)
+
+
+# -----------------------------------------------------------------------------
+# the sharded search step
+# -----------------------------------------------------------------------------
+
+
+def _merge_topk(ids_list, scores_list, m):
+    ids = jnp.concatenate(ids_list, axis=-1)
+    scores = jnp.concatenate(scores_list, axis=-1)
+    return dedupe_topk(ids, scores, m)
+
+
+def _search_shard(
+    cfg: DistConfig,
+    hyperplanes: jax.Array,
+    store_ids: jax.Array,
+    store_payload: jax.Array,
+    cache_ids: jax.Array | None,
+    cache_payload: jax.Array | None,
+    q: jax.Array,  # [b_loc, d] — this device's slice of the query batch
+):
+    """Runs on every device under shard_map; returns ([b_loc, m] ids, scores)."""
+    L, k, m = cfg.params.L, cfg.params.k, cfg.m
+    n = cfg.n_shards
+    b_loc, d = q.shape
+    codes = hashing.sketch_codes(q, hyperplanes)            # [b_loc, L]
+    owner = (codes >> cfg.local_bits).astype(jnp.int32)     # [b_loc, L]
+    local_idx = (codes & ((1 << cfg.local_bits) - 1)).astype(jnp.int32)
+
+    if cfg.routing == "allgather":
+        return _search_allgather(
+            cfg, store_ids, store_payload, cache_ids, cache_payload,
+            q, owner, local_idx,
+        )
+
+    # ---- all_to_all routing (DHT-lookup analogue) ---------------------------
+    cap = int(np.ceil(b_loc * L / n * cfg.cap_factor))
+    cap = max(cap, 1)
+    flat_owner = owner.reshape(-1)              # [b_loc*L]
+    flat_local = local_idx.reshape(-1)
+    flat_table = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_loc,))
+    flat_qidx = jnp.repeat(jnp.arange(b_loc, dtype=jnp.int32), L)
+
+    order = jnp.argsort(flat_owner)
+    o_sorted = flat_owner[order]
+    pos = jnp.arange(o_sorted.shape[0], dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), o_sorted[1:] != o_sorted[:-1]]
+    )
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, pos, 0)
+    )
+    slot = pos - run_start                      # rank within destination
+    ok = slot < cap                             # overflow dropped (counted)
+
+    dest = jnp.where(ok, o_sorted, 0)
+    slot_c = jnp.where(ok, slot, cap - 1)
+
+    send_q = jnp.zeros((n, cap, d), q.dtype)
+    send_meta = jnp.full((n, cap, 3), -1, jnp.int32)  # (qidx, table, local)
+    src_vals = jnp.stack(
+        [flat_qidx[order], flat_table[order], flat_local[order]], axis=-1
+    )
+    send_q = send_q.at[dest, slot_c].set(
+        jnp.where(ok[:, None], q[flat_qidx[order]], 0.0)
+    )
+    send_meta = send_meta.at[dest, slot_c].set(
+        jnp.where(ok[:, None], src_vals, -1)
+    )
+
+    recv_q = jax.lax.all_to_all(send_q, "model", 0, 0, tiled=True)
+    recv_meta = jax.lax.all_to_all(send_meta, "model", 0, 0, tiled=True)
+    rq = recv_q.reshape(n * cap, d)
+    rtable = recv_meta[..., 1].reshape(-1)
+    rlocal = recv_meta[..., 2].reshape(-1)
+    rvalid = rtable >= 0
+    rtable_c = jnp.maximum(rtable, 0)
+    rlocal_c = jnp.maximum(rlocal, 0)
+
+    ids_o, sc_o = _score_local(
+        cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, m
+    )
+    ids_parts, sc_parts = [ids_o], [sc_o]
+
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        ids_c, sc_c = _score_cache(
+            cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, m
+        )
+        ids_parts.append(ids_c)
+        sc_parts.append(sc_c)
+
+    if cfg.variant == "nb":
+        # forward routed queries to each XOR-neighbor; it scores ITS bucket
+        # at the same local index (node-bit flip keeps local bits), then
+        # returns the partial top-m. 2 ppermutes per node bit.
+        for j in range(cfg.node_bits):
+            perm = [(i, i ^ (1 << j)) for i in range(n)]
+            nq = jax.lax.ppermute(rq, "model", perm)
+            nt = jax.lax.ppermute(rtable_c, "model", perm)
+            nl = jax.lax.ppermute(rlocal_c, "model", perm)
+            ids_j, sc_j = _score_local(
+                dataclasses.replace(cfg, variant="lsh"),  # exact bucket only
+                store_ids, store_payload, nq, nt, nl, m,
+            )
+            ids_parts.append(jax.lax.ppermute(ids_j, "model", perm))
+            sc_parts.append(jax.lax.ppermute(sc_j, "model", perm))
+
+    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)   # [n*cap, m]
+    ids_r = jnp.where(rvalid[:, None], ids_r, -1)
+    sc_r = jnp.where(rvalid[:, None], sc_r, NEG_INF)
+
+    # ---- return results to origin -------------------------------------------
+    back_i = jax.lax.all_to_all(ids_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
+    back_s = jax.lax.all_to_all(sc_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
+    # origin gathers its (query, table) slots: entry for flat index f went to
+    # (dest[f], slot[f]); after all_to_all those live at [dest[f], slot[f]].
+    gather_i = back_i[dest, slot_c]                     # [b_loc*L, m] (sorted order)
+    gather_s = back_s[dest, slot_c]
+    gather_i = jnp.where(ok[:, None], gather_i, -1)
+    gather_s = jnp.where(ok[:, None], gather_s, NEG_INF)
+    # unsort back to (query, table) order
+    unsort = jnp.argsort(order)
+    gather_i = gather_i[unsort].reshape(b_loc, L * m)
+    gather_s = gather_s[unsort].reshape(b_loc, L * m)
+    return dedupe_topk(gather_i, gather_s, m)
+
+
+def _search_allgather(
+    cfg, store_ids, store_payload, cache_ids, cache_payload, q, owner, local_idx
+):
+    """Dense fallback: replicate queries along `model`, each shard scores the
+    (query, table) pairs it owns, results return via all_to_all."""
+    L, m, n = cfg.params.L, cfg.m, cfg.n_shards
+    b_loc = q.shape[0]
+    me = jax.lax.axis_index("model")
+
+    q_all = jax.lax.all_gather(q, "model", axis=0, tiled=True)          # [b_all, d]
+    owner_all = jax.lax.all_gather(owner, "model", axis=0, tiled=True)  # [b_all, L]
+    local_all = jax.lax.all_gather(local_idx, "model", axis=0, tiled=True)
+
+    b_all = q_all.shape[0]
+    rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d]
+    rtable = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_all,))
+    rlocal = local_all.reshape(-1)
+    mine = owner_all.reshape(-1) == me
+
+    ids_o, sc_o = _score_local(cfg, store_ids, store_payload, rq, rtable, rlocal, m)
+    ids_parts, sc_parts = [ids_o], [sc_o]
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        ids_c, sc_c = _score_cache(cfg, cache_ids, cache_payload, rq, rtable, rlocal, m)
+        ids_parts.append(ids_c)
+        sc_parts.append(sc_c)
+    if cfg.variant == "nb":
+        for j in range(cfg.node_bits):
+            perm = [(i, i ^ (1 << j)) for i in range(n)]
+            nq = jax.lax.ppermute(rq, "model", perm)
+            nt = jax.lax.ppermute(rtable, "model", perm)
+            nl = jax.lax.ppermute(rlocal, "model", perm)
+            ids_j, sc_j = _score_local(
+                dataclasses.replace(cfg, variant="lsh"),
+                store_ids, store_payload, nq, nt, nl, m,
+            )
+            ids_parts.append(jax.lax.ppermute(ids_j, "model", perm))
+            sc_parts.append(jax.lax.ppermute(sc_j, "model", perm))
+
+    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)       # [b_all*L, m]
+    ids_r = jnp.where(mine[:, None], ids_r, -1)
+    sc_r = jnp.where(mine[:, None], sc_r, NEG_INF)
+
+    # each origin needs rows of its own queries from ALL shards: all_to_all
+    # over the origin-major reshape.
+    ids_r = ids_r.reshape(n, b_loc * L * m)
+    sc_r = sc_r.reshape(n, b_loc * L * m)
+    got_i = jax.lax.all_to_all(ids_r, "model", 0, 0, tiled=True)  # [n, b*L*m]
+    got_s = jax.lax.all_to_all(sc_r, "model", 0, 0, tiled=True)
+    got_i = got_i.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
+    got_s = got_s.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
+    return dedupe_topk(got_i, got_s, m)
+
+
+# -----------------------------------------------------------------------------
+# public API
+# -----------------------------------------------------------------------------
+
+
+def shard_store(mesh, store: BucketStore) -> BucketStore:
+    """Place a host-built store on the mesh: buckets sharded over `model`,
+    replicated elsewhere."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec3 = NamedSharding(mesh, P(None, "model", None))
+    spec4 = NamedSharding(mesh, P(None, "model", None, None))
+    spec2 = NamedSharding(mesh, P(None, "model"))
+    return BucketStore(
+        ids=jax.device_put(store.ids, spec3),
+        timestamps=jax.device_put(store.timestamps, spec3),
+        write_ptr=jax.device_put(store.write_ptr, spec2),
+        payload=None
+        if store.payload is None
+        else jax.device_put(store.payload, spec4),
+    )
+
+
+def make_refresh_cache(cfg: DistConfig, mesh):
+    """jit'd CNB cache refresh: 1 ppermute per node bit, OFF the query path.
+
+    Returns (cache_ids [T, nbits, NB/n, C], cache_payload [T, nbits, NB/n, C, D])
+    sharded like the store.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = cfg.n_shards
+    nbits = cfg.node_bits
+
+    def _refresh(ids, payload):
+        outs_i, outs_p = [], []
+        for j in range(nbits):
+            perm = [(i, i ^ (1 << j)) for i in range(n)]
+            outs_i.append(jax.lax.ppermute(ids, "model", perm))
+            outs_p.append(jax.lax.ppermute(payload, "model", perm))
+        return jnp.stack(outs_i, axis=1), jnp.stack(outs_p, axis=1)
+
+    fn = jax.shard_map(
+        _refresh,
+        mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model", None, None)),
+        out_specs=(
+            P(None, None, "model", None),
+            P(None, None, "model", None, None),
+        ),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+    """jit'd distributed search: queries [B, d] sharded over batch_axes ->
+    (ids [B, m], scores [B, m]) with the same sharding."""
+    from jax.sharding import PartitionSpec as P
+
+    qspec = P(batch_axes, None)
+    store_i = P(None, "model", None)
+    store_p = P(None, "model", None, None)
+    cache_i = P(None, None, "model", None)
+    cache_p = P(None, None, "model", None, None)
+
+    has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
+
+    if has_cache:
+
+        def step(hyperplanes, ids, payload, c_ids, c_payload, q):
+            return _search_shard(cfg, hyperplanes, ids, payload, c_ids, c_payload, q)
+
+        fn = jax.shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(P(), store_i, store_p, cache_i, cache_p, qspec),
+            out_specs=(P(batch_axes, None), P(batch_axes, None)),
+            check_vma=False,
+        )
+    else:
+
+        def step(hyperplanes, ids, payload, q):
+            return _search_shard(cfg, hyperplanes, ids, payload, None, None, q)
+
+        fn = jax.shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(P(), store_i, store_p, qspec),
+            out_specs=(P(batch_axes, None), P(batch_axes, None)),
+            check_vma=False,
+        )
+    return jax.jit(fn)
+
+
+def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+    """jit'd distributed insert/refresh: vectors arrive sharded over the
+    batch axes; each `model` shard takes the ones whose buckets it owns.
+
+    Paper Sec. 2.2: update rate is orders of magnitude below query rate, so
+    the simple all_gather path is the right trade (no routing buffers).
+    Donates the store; returns the updated store.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def _insert(hyperplanes, ids_store, ts_store, ptr, payload_store,
+                vec, vid, now):
+        from repro.core import store as store_mod
+
+        me = jax.lax.axis_index("model")
+        # gather over ALL batch axes: every store replica (data axis) must
+        # see every vector, not just its own data-row's slice.
+        vec_all = jax.lax.all_gather(vec, batch_axes, axis=0, tiled=True)
+        vid_all = jax.lax.all_gather(vid, batch_axes, axis=0, tiled=True)
+        codes = hashing.sketch_codes(vec_all, hyperplanes)      # [nv, L]
+        owner = (codes >> cfg.local_bits).astype(jnp.int32)
+        local = (codes & ((1 << cfg.local_bits) - 1)).astype(jnp.uint32)
+        # mark foreign (table, vector) entries invalid: ring insert skips id<0?
+        # store.insert_batch inserts everything, so blank foreign rows by
+        # pointing them at bucket 0 with id -1 (harmless: -1 ids are invalid
+        # everywhere and get overwritten by the ring buffer).
+        st = store_mod.BucketStore(ids_store, ts_store, ptr, payload_store)
+        mine_any = owner == me[None, None]                       # [nv, L]
+        new = st
+        for l in range(cfg.params.L):
+            sel = mine_any[:, l]
+            ids_l = jnp.where(sel, vid_all, -1)
+            codes_l = jnp.where(sel, local[:, l], 0).astype(jnp.uint32)
+            new = store_mod.insert_masked(
+                new, l, ids_l, codes_l, now, vec_all
+            )
+        return new.ids, new.timestamps, new.write_ptr, new.payload
+
+    fn = jax.shard_map(
+        _insert,
+        mesh=mesh,
+        in_specs=(
+            P(),
+            P(None, "model", None),
+            P(None, "model", None),
+            P(None, "model"),
+            P(None, "model", None, None),
+            P(batch_axes, None),
+            P(batch_axes),
+            P(),
+        ),
+        out_specs=(
+            P(None, "model", None),
+            P(None, "model", None),
+            P(None, "model"),
+            P(None, "model", None, None),
+        ),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def insert(hyperplanes, store: BucketStore, vec, vid, now):
+        i, t, p, pay = fn(
+            hyperplanes, store.ids, store.timestamps, store.write_ptr,
+            store.payload, vec, vid, now,
+        )
+        return BucketStore(i, t, p, pay)
+
+    return insert
+
+
+def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> dict:
+    """Closed-form ICI bytes per search step (the Table-1 analogue in the
+    byte domain); verified against HLO in benchmarks/bench_distributed.py."""
+    n = cfg.n_shards
+    b_loc = batch // n_total
+    m = cfg.m
+    L = cfg.params.L
+    if cfg.routing == "alltoall":
+        cap = int(np.ceil(b_loc * L / n * cfg.cap_factor))
+        q_bytes = n * cap * d * 4 + n * cap * 3 * 4
+        r_bytes = 2 * n * cap * m * 4
+    else:
+        q_bytes = (n - 1) * b_loc * d * 4  # all_gather
+        r_bytes = 2 * n * b_loc * L * m * 4
+    nb_bytes = 0
+    if cfg.variant == "nb":
+        per_bit = (
+            (n * cap if cfg.routing == "alltoall" else n * b_loc * L)
+        )
+        nb_bytes = cfg.node_bits * per_bit * (d * 4 + 8 + 2 * m * 4 * 2)
+    return dict(query_routing=q_bytes, results=r_bytes, neighbor=nb_bytes,
+                total=q_bytes + r_bytes + nb_bytes)

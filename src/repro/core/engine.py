@@ -1,0 +1,215 @@
+"""Single-host reference search engine: LSH / Layered / NB-LSH / CNB-LSH.
+
+This is the semantic reference for the distributed runtime
+(`repro.core.distributed` must return identical result sets) and the engine
+behind the paper-reproduction benchmarks (Figs. 4-5).
+
+Algorithm 1/2 of the paper, with network cost accounted per Table 1:
+  * lsh / layered : search the L exact buckets.
+  * nb            : + the k 1-near buckets of each (forwarded to neighbors).
+  * cnb           : + the k 1-near buckets of each (served from local cache).
+Result sets of nb and cnb are identical; only the message cost differs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel, hashing, multiprobe
+from repro.core.can import CanTopology
+from repro.core.corpus import DenseCorpus, SparseCorpus
+from repro.core.hashing import LshParams
+from repro.core.store import BucketStore
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    variant: str = "cnb"          # lsh | layered | nb | cnb
+    num_probes: int | None = None  # None => all k 1-near buckets (the paper)
+    ranked_probes: bool = False    # beyond-paper: margin-ranked probe subset
+    chunk: int = 32                # queries scored per jit call
+
+
+@dataclasses.dataclass
+class SearchResult:
+    ids: np.ndarray      # int32 [nq, m], -1 padded
+    scores: np.ndarray   # f32   [nq, m]
+    cost: costmodel.QueryCost          # closed-form per-query cost (Table 1)
+    sim_messages: float | None = None  # simulated avg messages (hop-counted)
+
+
+def dedupe_topk(ids: jax.Array, scores: jax.Array, m: int):
+    """Top-m by score with duplicate ids collapsed (same id => same score).
+
+    ids/scores: [..., K].  Invalid candidates are id -1 / score -inf.
+    """
+    order = jnp.argsort(ids, axis=-1)
+    ids_s = jnp.take_along_axis(ids, order, -1)
+    sc_s = jnp.take_along_axis(scores, order, -1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids_s[..., :1], bool), ids_s[..., 1:] == ids_s[..., :-1]],
+        axis=-1,
+    )
+    sc_s = jnp.where(dup | (ids_s < 0), NEG_INF, sc_s)
+    top_s, top_pos = jax.lax.top_k(sc_s, m)
+    top_i = jnp.take_along_axis(ids_s, top_pos, -1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    top_s = jnp.where(jnp.isfinite(top_s), top_s, -jnp.inf)
+    return top_i, top_s
+
+
+class LshEngine:
+    """Reference engine over an id-only BucketStore + corpus."""
+
+    def __init__(
+        self,
+        params: LshParams,
+        hyperplanes: jax.Array,
+        store: BucketStore,
+        corpus: DenseCorpus | SparseCorpus,
+        topology: CanTopology | None = None,
+        config: EngineConfig = EngineConfig(),
+    ):
+        if config.variant not in costmodel.VARIANTS:
+            raise ValueError(f"unknown variant {config.variant!r}")
+        self.params = params
+        self.hyperplanes = hyperplanes
+        self.store = store
+        self.corpus = corpus
+        self.topology = topology or CanTopology(params.k, 1 << params.k)
+        self.config = config
+        self._search_chunk = jax.jit(self._search_chunk_impl, static_argnums=(2,))
+        self._contains_chunk = jax.jit(self._contains_chunk_impl)
+
+    # -- probe planning -------------------------------------------------------
+
+    @property
+    def probes_per_table(self) -> int:
+        if self.config.variant in ("lsh", "layered"):
+            return 1
+        p = self.config.num_probes
+        return 1 + (self.params.k if p is None else p)
+
+    def _probe_codes(self, q: jax.Array) -> jax.Array:
+        """[nq, L, P] bucket codes to search for each query."""
+        codes = hashing.sketch_codes(q, self.hyperplanes)  # [nq, L]
+        if self.config.variant in ("lsh", "layered"):
+            return codes[..., None]
+        k = self.params.k
+        p = self.config.num_probes
+        if p is None or p >= k:
+            return multiprobe.probe_codes(codes, k)
+        if self.config.ranked_probes:
+            margins = hashing.projection_margins(q, self.hyperplanes)
+            near = multiprobe.ranked_near_codes(codes, margins, k, p)
+        else:
+            near = multiprobe.near_codes(codes, k)[..., :p]
+        return jnp.concatenate([codes[..., None], near], axis=-1)
+
+    # -- candidate gathering + scoring ---------------------------------------
+
+    def _candidates(self, probes: jax.Array) -> jax.Array:
+        """[nq, L, P] probe codes -> candidate ids [nq, L*P*C]."""
+        per_table = []
+        for l in range(self.params.L):
+            idx = probes[:, l, :].astype(jnp.int32) % self.store.num_buckets
+            per_table.append(self.store.ids[l][idx])  # [nq, P, C]
+        cand = jnp.stack(per_table, axis=1)  # [nq, L, P, C]
+        return cand.reshape(cand.shape[0], -1)
+
+    def _score(self, q: jax.Array, cand: jax.Array) -> jax.Array:
+        if isinstance(self.corpus, DenseCorpus):
+            return jax.vmap(self.corpus.scores_against)(q, cand)
+        return jax.vmap(self.corpus.scores_against_dense)(q, cand)
+
+    def _search_chunk_impl(self, q: jax.Array, exclude: jax.Array, m: int):
+        probes = self._probe_codes(q)
+        cand = self._candidates(probes)
+        scores = self._score(q, cand)
+        invalid = (cand < 0) | (cand == exclude[:, None])
+        scores = jnp.where(invalid, NEG_INF, scores)
+        cand = jnp.where(invalid, -1, cand)
+        return dedupe_topk(cand, scores, m)
+
+    def _contains_chunk_impl(self, q: jax.Array, targets: jax.Array):
+        probes = self._probe_codes(q)
+        cand = self._candidates(probes)
+        return jnp.any(cand == targets[:, None], axis=-1)
+
+    # -- public API -----------------------------------------------------------
+
+    def search(
+        self,
+        queries: jax.Array,              # [nq, d] unit dense queries
+        m: int,
+        exclude: np.ndarray | None = None,  # [nq] self ids to drop, or None
+        simulate_messages: bool = False,
+        rng: np.random.Generator | None = None,
+    ) -> SearchResult:
+        nq = queries.shape[0]
+        exclude = (
+            np.full((nq,), -2, np.int32) if exclude is None
+            else np.asarray(exclude, np.int32)
+        )
+        out_i = np.empty((nq, m), np.int32)
+        out_s = np.empty((nq, m), np.float32)
+        c = self.config.chunk
+        for s0 in range(0, nq, c):
+            e0 = min(s0 + c, nq)
+            qi = jnp.asarray(queries[s0:e0])
+            ti, ts = self._search_chunk(qi, jnp.asarray(exclude[s0:e0]), m)
+            out_i[s0:e0], out_s[s0:e0] = np.asarray(ti), np.asarray(ts)
+        bucket_b = float(np.mean(np.asarray(self.store.occupancy())))
+        cost = costmodel.table1(
+            self.config.variant, self.params.k, self.params.L, bucket_b
+        )
+        sim = (
+            self.simulate_messages(queries, rng) if simulate_messages else None
+        )
+        return SearchResult(out_i, out_s, cost, sim)
+
+    def contains(self, queries: jax.Array, target_ids: np.ndarray) -> np.ndarray:
+        """Was target y searched for query x? (success-probability metric,
+        paper Sec. 6.3 — membership in searched buckets, not top-m)."""
+        nq = queries.shape[0]
+        out = np.empty((nq,), bool)
+        c = self.config.chunk
+        for s0 in range(0, nq, c):
+            e0 = min(s0 + c, nq)
+            out[s0:e0] = np.asarray(
+                self._contains_chunk(
+                    jnp.asarray(queries[s0:e0]),
+                    jnp.asarray(target_ids[s0:e0], jnp.int32),
+                )
+            )
+        return out
+
+    def simulate_messages(
+        self, queries: jax.Array, rng: np.random.Generator | None = None
+    ) -> float:
+        """Hop-counted message simulation over the CAN topology; converges to
+        Table 1's closed forms (tested)."""
+        rng = rng or np.random.default_rng(0)
+        codes = np.asarray(hashing.sketch_codes(jnp.asarray(queries), self.hyperplanes))
+        topo = self.topology
+        counter = costmodel.MessageCounter()
+        nq = codes.shape[0]
+        src = rng.integers(0, topo.n_nodes, size=(nq,))
+        for i in range(nq):
+            for l in range(self.params.L):
+                dst = int(np.asarray(topo.node_of(np.uint32(codes[i, l]))))
+                counter.add_lookup(topo.lookup_hops(int(src[i]), dst))
+                counter.add_result()
+                if self.config.variant == "nb":
+                    # forward to the node-bit neighbors; local-bit flips are
+                    # already on-node in the sharded geometry.
+                    counter.add_neighbor(topo.node_bits)
+                    counter.add_result(topo.node_bits)
+        return counter.total / nq

@@ -1,0 +1,79 @@
+"""Layered-LSH for cosine similarity (paper Sec. 3.3 + 5.2).
+
+Layered-LSH (Haghani et al. EDBT'09; Bahmani et al. CIKM'12) maps *buckets*
+to nodes with a second, bucket-level LSH so that near buckets land on the
+same node.  For cosine-LSH sketches the natural second-level hash is
+Hamming-LSH (Gionis et al.; Chierichetti & Kumar): pick k_node of the
+k_inner sketch bits at random.
+
+Sec. 5.2's observation, implemented and tested here: composing Hamming-LSH
+over a cosine-LSH sketch just *selects k_node of the k_inner hyperplanes*,
+i.e. it IS cosine-LSH with parameter k_node.  Hence Layered-LSH's result
+set equals LSH(k_node, L)'s, and its costs match LSH's row of Table 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.hashing import LshParams
+
+
+@dataclasses.dataclass(frozen=True)
+class LayeredParams:
+    inner: LshParams      # cosine-LSH mapping vectors -> buckets (k_inner bits)
+    k_node: int           # Hamming-LSH output bits (buckets -> nodes)
+    seed: int = 17
+
+    def __post_init__(self):
+        if self.k_node > self.inner.k:
+            raise ValueError("k_node must be <= inner.k")
+
+
+def make_bit_selection(params: LayeredParams) -> np.ndarray:
+    """The Hamming-LSH: k_node bit positions per table, [L, k_node]."""
+    rng = np.random.default_rng(params.seed)
+    return np.stack(
+        [
+            rng.choice(params.inner.k, size=params.k_node, replace=False)
+            for _ in range(params.inner.L)
+        ]
+    ).astype(np.int32)
+
+
+def node_codes(
+    sketch_codes: jax.Array, selection: np.ndarray
+) -> jax.Array:
+    """Map inner bucket codes [.., L] to node ids [.., L] by bit selection."""
+    L, k_node = selection.shape
+    sel = jnp.asarray(selection, jnp.uint32)
+    out = jnp.zeros(sketch_codes.shape, jnp.uint32)
+    for j in range(k_node):
+        bit = (sketch_codes >> sel[:, j]) & jnp.uint32(1)
+        out = out | (bit << jnp.uint32(j))
+    return out
+
+
+def equivalent_hyperplanes(
+    params: LayeredParams, hyperplanes_inner: jax.Array, selection: np.ndarray
+) -> jax.Array:
+    """The cosine-LSH(k_node) family that Layered-LSH is equivalent to:
+    row-select the chosen hyperplanes.  [L, k_node, d]."""
+    gathered = []
+    for l in range(params.inner.L):
+        gathered.append(hyperplanes_inner[l, selection[l], :])
+    return jnp.stack(gathered)
+
+
+def layered_node_of(
+    x: jax.Array, params: LayeredParams, hyperplanes_inner: jax.Array,
+    selection: np.ndarray,
+) -> jax.Array:
+    """Node id of vector x under Layered-LSH: g_ham(g_cos(x)).  [.., L]."""
+    inner_codes = hashing.sketch_codes(x, hyperplanes_inner)
+    return node_codes(inner_codes, selection)

@@ -1,0 +1,78 @@
+"""Near-bucket enumeration and probe planning (paper Sec. 4.2 + Sec. 5.1).
+
+The paper's NearBucket-LSH probes, for every table l, the exact bucket
+g_l(q) plus its k 1-near buckets (one flipped bit).  Proposition 3 shows
+1-near buckets dominate any b-near bucket with b >= 2, making that choice
+optimal for k extra probes.
+
+Beyond-paper extensions implemented here:
+  * margin-ranked probing (MultiProb-LSH style): probe only the p most
+    promising near buckets, ranked by the query's projection margin;
+  * b-near enumeration for b = 2 (for ablations showing diminishing returns,
+    matching Prop. 3).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def near_codes(codes: jax.Array, k: int) -> jax.Array:
+    """All k 1-near bucket ids for each code.
+
+    Args:
+      codes: uint32 [...]. Returns uint32 [..., k]; entry j flips bit j.
+    """
+    flips = (jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32))
+    return jnp.bitwise_xor(codes[..., None].astype(jnp.uint32), flips)
+
+
+def probe_codes(codes: jax.Array, k: int) -> jax.Array:
+    """Exact + k near codes: [..., 1 + k]. Entry 0 is the exact bucket."""
+    return jnp.concatenate(
+        [codes[..., None].astype(jnp.uint32), near_codes(codes, k)], axis=-1
+    )
+
+
+def ranked_near_codes(
+    codes: jax.Array, margins: jax.Array, k: int, num_probes: int
+) -> jax.Array:
+    """Margin-ranked 1-near probes (beyond paper).
+
+    Args:
+      codes: uint32 [..., L] exact bucket ids.
+      margins: [..., L, k] |projection| per bit (small = likely flip).
+      num_probes: p <= k near buckets to probe per table.
+
+    Returns:
+      uint32 [..., L, p]: the p near buckets with smallest margins.
+    """
+    # Indices of the p smallest margins per (query, table).
+    order = jnp.argsort(margins, axis=-1)[..., :num_probes]
+    flips = (jnp.uint32(1) << order.astype(jnp.uint32))
+    return jnp.bitwise_xor(codes[..., None].astype(jnp.uint32), flips)
+
+
+def b_near_codes_host(code: int, k: int, b: int) -> np.ndarray:
+    """Host-side enumeration of all C(k, b) b-near buckets of one code."""
+    out = []
+    for bits in itertools.combinations(range(k), b):
+        mask = 0
+        for j in bits:
+            mask |= 1 << j
+        out.append(code ^ mask)
+    return np.asarray(out, dtype=np.uint32)
+
+
+def probe_plan_size(k: int, L: int, variant: str, num_probes: int | None = None) -> int:
+    """Buckets searched per query, per Table 1 ('vectors searched' / B)."""
+    p = k if num_probes is None else num_probes
+    if variant in ("lsh", "layered"):
+        return L
+    if variant in ("nb", "cnb"):
+        return L * (1 + p)
+    raise ValueError(f"unknown variant {variant!r}")

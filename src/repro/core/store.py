@@ -1,0 +1,208 @@
+"""Device-resident LSH bucket store with soft-state maintenance.
+
+Paper Sec. 4.1 "Bucket Maintenance": buckets hold *soft state* — users
+periodically re-hash and re-announce their vectors; entries that are not
+refreshed within a TTL are garbage-collected; buckets are created lazily on
+first insert.  This module implements that lifecycle as fixed-capacity
+ring-buffer buckets, fully in JAX (scatter-based, jit-compatible), so the
+same code runs inside the sharded runtime.
+
+Two payload modes:
+  * id-only  — buckets store (id, timestamp); scoring gathers vectors from a
+    corpus array at search time (single-host engine / paper benchmarks).
+  * embedded — buckets additionally store the (unit-norm) vector payload
+    [capacity, dim]; used by the distributed runtime where each shard owns
+    its vectors' bytes (no global gathers across shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BucketStore:
+    """Pytree of bucket state, one hash table per l in [0, L).
+
+    Shapes (T = L tables, NB = buckets per table (possibly a shard),
+    C = capacity, D = payload dim or 0):
+      ids:        int32 [T, NB, C]   (-1 = empty slot)
+      timestamps: int32 [T, NB, C]
+      write_ptr:  int32 [T, NB]      (ring pointer)
+      payload:    f32   [T, NB, C, D] or None
+    """
+
+    ids: jax.Array
+    timestamps: jax.Array
+    write_ptr: jax.Array
+    payload: jax.Array | None
+
+    @property
+    def num_tables(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def num_buckets(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[2]
+
+    def occupancy(self) -> jax.Array:
+        """Live entries per (table, bucket)."""
+        return jnp.sum(self.ids >= 0, axis=-1)
+
+
+def make_store(
+    num_tables: int,
+    num_buckets: int,
+    capacity: int,
+    payload_dim: int | None = None,
+    dtype=jnp.float32,
+) -> BucketStore:
+    shape = (num_tables, num_buckets, capacity)
+    payload = (
+        None
+        if payload_dim is None
+        else jnp.zeros(shape + (payload_dim,), dtype=dtype)
+    )
+    return BucketStore(
+        ids=jnp.full(shape, EMPTY, dtype=jnp.int32),
+        timestamps=jnp.zeros(shape, dtype=jnp.int32),
+        write_ptr=jnp.zeros(shape[:2], dtype=jnp.int32),
+        payload=payload,
+    )
+
+
+def _batch_ranks(sorted_buckets: jax.Array) -> jax.Array:
+    """Rank of each element within its run of equal bucket ids (sorted)."""
+    n = sorted_buckets.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_buckets[1:] != sorted_buckets[:-1]]
+    )
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, pos, 0))
+    return pos - run_start
+
+
+def insert_masked(
+    store: BucketStore,
+    table: int,
+    ids: jax.Array,        # int32 [n]; entries with id < 0 are skipped
+    buckets: jax.Array,    # uint32/int32 [n] local bucket index per entry
+    timestamp: jax.Array,  # int32 scalar
+    payload: jax.Array | None = None,  # [n, D]
+) -> BucketStore:
+    """Ring-buffer insert into one table; invalid (id < 0) entries dropped.
+
+    Invalid entries are routed to an out-of-bounds bucket and dropped by the
+    scatter (mode='drop'), so they can't clobber live slots — this is what
+    lets the sharded runtime insert 'only the vectors I own' branch-free.
+    """
+    l = table
+    nb, cap = store.num_buckets, store.capacity
+    valid = ids >= 0
+    bucket = jnp.where(valid, buckets.astype(jnp.int32) % nb, nb)  # nb = OOB
+    order = jnp.argsort(bucket)
+    b_sorted = bucket[order]
+    ranks = _batch_ranks(b_sorted)
+    base = store.write_ptr[l, jnp.minimum(b_sorted, nb - 1)]
+    slot = (base + ranks) % cap
+
+    new_ids = store.ids.at[l, b_sorted, slot].set(ids[order], mode="drop")
+    new_ts = store.timestamps.at[l, b_sorted, slot].set(timestamp, mode="drop")
+    counts = jnp.zeros((nb,), jnp.int32).at[b_sorted].add(1, mode="drop")
+    new_ptr = store.write_ptr.at[l].set((store.write_ptr[l] + counts) % cap)
+    new_payload = store.payload
+    if store.payload is not None:
+        if payload is None:
+            raise ValueError("store has payload; insert must provide vectors")
+        new_payload = store.payload.at[l, b_sorted, slot].set(
+            payload[order], mode="drop"
+        )
+    return BucketStore(new_ids, new_ts, new_ptr, new_payload)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_batch(
+    store: BucketStore,
+    ids: jax.Array,            # int32 [n]
+    codes: jax.Array,          # uint32 [n, T] — bucket id per table
+    timestamp: jax.Array,      # int32 scalar
+    payload: jax.Array | None = None,  # [n, D] unit-norm vectors
+) -> BucketStore:
+    """Insert/refresh a batch of vectors into every table (ring-buffer).
+
+    Overwrites the oldest slots when a bucket overflows — the soft-state
+    discipline makes this safe (evicted entries reappear on their next
+    refresh if still alive).
+    """
+    # T is small (<= ~8); a Python loop keeps shapes static and readable.
+    for l in range(store.num_tables):
+        store = insert_masked(store, l, ids, codes[:, l], timestamp, payload)
+    return store
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def expire(store: BucketStore, now: jax.Array, ttl: int) -> BucketStore:
+    """Garbage-collect entries not refreshed within `ttl` ticks (Sec. 4.1)."""
+    stale = (now - store.timestamps) > ttl
+    return dataclasses.replace(
+        store, ids=jnp.where(stale, EMPTY, store.ids)
+    )
+
+
+def build_store_host(
+    codes: np.ndarray,         # uint32 [n, T]
+    num_buckets: int,
+    capacity: int,
+    payload: np.ndarray | None = None,
+    timestamp: int = 0,
+) -> BucketStore:
+    """Fast host-side bulk build for large corpora (preprocessing).
+
+    Keeps the *last* `capacity` entries per bucket when overflowing, matching
+    the ring-buffer semantics of `insert_batch`.
+    """
+    n, T = codes.shape
+    ids_arr = np.full((T, num_buckets, capacity), -1, dtype=np.int32)
+    ts_arr = np.zeros((T, num_buckets, capacity), dtype=np.int32)
+    ptr = np.zeros((T, num_buckets), dtype=np.int32)
+    pay = (
+        None
+        if payload is None
+        else np.zeros((T, num_buckets, capacity, payload.shape[1]), np.float32)
+    )
+    all_ids = np.arange(n, dtype=np.int32)
+    for l in range(T):
+        bucket = (codes[:, l].astype(np.int64)) % num_buckets
+        order = np.argsort(bucket, kind="stable")
+        b_sorted = bucket[order]
+        # rank within runs
+        is_start = np.ones(n, bool)
+        is_start[1:] = b_sorted[1:] != b_sorted[:-1]
+        run_start = np.maximum.accumulate(np.where(is_start, np.arange(n), 0))
+        ranks = np.arange(n) - run_start
+        counts = np.bincount(b_sorted, minlength=num_buckets)
+        slot = ranks % capacity
+        # later duplicates in a slot overwrite earlier ones == keep last.
+        ids_arr[l, b_sorted, slot] = all_ids[order]
+        ts_arr[l, b_sorted, slot] = timestamp
+        ptr[l] = counts % capacity
+        if pay is not None:
+            pay[l, b_sorted, slot] = payload[order]
+    return BucketStore(
+        ids=jnp.asarray(ids_arr),
+        timestamps=jnp.asarray(ts_arr),
+        write_ptr=jnp.asarray(ptr),
+        payload=None if pay is None else jnp.asarray(pay),
+    )

@@ -1,0 +1,112 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op pads inputs to hardware-aligned tiles (lane = 128, MXU-friendly
+contraction dims), dispatches to the Pallas kernel, and slices the result
+back.  On CPU hosts the kernels execute in interpret mode (the kernel body
+runs as traced jnp ops) — the TPU path is identical code with
+interpret=False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bucket_topk as _bt
+from repro.kernels import hamming as _hm
+from repro.kernels import simhash as _sh
+
+LANE = 128
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def simhash(
+    x: jax.Array,            # [n, d] float
+    hyperplanes: jax.Array,  # [L, k, d] float
+    *,
+    tn: int = 256,
+    td: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed LSH codes, uint32 [n, L]. Matches `ref.simhash_ref`."""
+    interpret = _on_cpu() if interpret is None else interpret
+    n, d = x.shape
+    L, k, _ = hyperplanes.shape
+    h_t = hyperplanes.reshape(L * k, d).T.astype(jnp.float32)  # [d, L*k]
+    h_t = _pad_to(h_t, 1, LANE)
+    tn_eff = min(tn, max(8, n))
+    x_p = _pad_to(x.astype(jnp.float32), 0, tn_eff)
+    td_eff = min(td, d) if d % min(td, d) == 0 else d
+    # choose a td that divides d (fall back to whole-d single step)
+    if d % td == 0:
+        td_eff = td
+    else:
+        td_eff = d
+        h_t = h_t  # single d-step
+    x_p = _pad_to(x_p, 1, td_eff)
+    h_t = _pad_to(h_t, 0, td_eff)
+    out = _sh.simhash_pallas(
+        x_p, h_t, k=k, L=L, tn=tn_eff, td=td_eff, interpret=interpret
+    )
+    return out[:n]
+
+
+def bucket_topk(
+    q: jax.Array,      # [b, d] float
+    cand: jax.Array,   # [b, kc, d] float candidate payloads
+    valid: jax.Array,  # bool [b, kc]
+    m: int,
+    *,
+    tb: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused score + top-m. Returns (scores [b, m] f32, idx [b, m] i32).
+    Matches `ref.bucket_topk_ref` (ties -> lowest index)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    b, kc, d = cand.shape
+    tb_eff = min(tb, max(1, b))
+    q_p = _pad_to(q.astype(jnp.float32), 0, tb_eff)
+    cand_p = _pad_to(cand.astype(jnp.float32), 0, tb_eff)
+    valid_p = _pad_to(valid.astype(jnp.int8), 0, tb_eff)
+    q_p = _pad_to(q_p, 1, LANE)
+    cand_p = _pad_to(_pad_to(cand_p, 2, LANE), 1, LANE)
+    valid_p = _pad_to(valid_p, 1, LANE)
+    s, i = _bt.bucket_topk_pallas(
+        q_p, cand_p, valid_p, m=m, tb=tb_eff, interpret=interpret
+    )
+    return s[:b], i[:b]
+
+
+def hamming(
+    codes: jax.Array,       # [n] uint32
+    cand_codes: jax.Array,  # [n, kc] uint32
+    *,
+    tn: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Hamming distances int32 [n, kc]. Matches `ref.hamming_ref`.
+    Padded candidate columns return distance vs code 0 and are sliced off."""
+    interpret = _on_cpu() if interpret is None else interpret
+    n, kc = cand_codes.shape
+    tn_eff = min(tn, max(8, n))
+    codes_p = _pad_to(codes.astype(jnp.uint32), 0, tn_eff)
+    cand_p = _pad_to(cand_codes.astype(jnp.uint32), 0, tn_eff)
+    cand_p = _pad_to(cand_p, 1, LANE)
+    out = _hm.hamming_pallas(codes_p, cand_p, tn=tn_eff, interpret=interpret)
+    return out[:n, :kc]

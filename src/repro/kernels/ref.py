@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them bit-for-bit (integer
+outputs) or to float tolerance (scores).  Top-k selection ties are broken
+by lowest index in both ref and kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def simhash_ref(x: jnp.ndarray, hyperplanes: jnp.ndarray) -> jnp.ndarray:
+    """Packed sign-random-projection sketches.
+
+    Args:
+      x: [n, d] float.
+      hyperplanes: [L, k, d] float.
+    Returns:
+      uint32 [n, L]; bit j of table l is (x . h_{l,j} >= 0).
+    """
+    proj = jnp.einsum(
+        "nd,lkd->nlk", x.astype(jnp.float32), hyperplanes.astype(jnp.float32)
+    )
+    bits = (proj >= 0).astype(jnp.uint32)
+    k = hyperplanes.shape[1]
+    weights = jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def bucket_topk_ref(
+    q: jnp.ndarray, cand: jnp.ndarray, valid: jnp.ndarray, m: int
+):
+    """Fused candidate scoring + top-m.
+
+    Args:
+      q: [b, d] unit queries.
+      cand: [b, kc, d] candidate vectors (gathered bucket payloads).
+      valid: bool [b, kc] — invalid candidates must not be returned.
+      m: results per query.
+    Returns:
+      (scores f32 [b, m], idx int32 [b, m]) — idx into kc, -1 where no valid
+      candidate; sorted by descending score, ties -> lowest index.
+    """
+    scores = jnp.einsum(
+        "bd,bkd->bk", q.astype(jnp.float32), cand.astype(jnp.float32)
+    )
+    scores = jnp.where(valid, scores, -jnp.inf)
+    kc = scores.shape[1]
+    # tie-break by lowest index: subtract a tiny index-based epsilon ordering
+    # implemented exactly via lexicographic argmax loop.
+    out_s, out_i = [], []
+    cur = scores
+    idxs = jnp.arange(kc, dtype=jnp.int32)
+    for _ in range(m):
+        best = jnp.argmax(cur, axis=1)  # first occurrence of max => lowest idx
+        s = jnp.take_along_axis(cur, best[:, None], axis=1)[:, 0]
+        out_s.append(s)
+        out_i.append(jnp.where(jnp.isfinite(s), best.astype(jnp.int32), -1))
+        cur = jnp.where(idxs[None, :] == best[:, None], -jnp.inf, cur)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def hamming_ref(codes: jnp.ndarray, cand_codes: jnp.ndarray) -> jnp.ndarray:
+    """Popcount Hamming distances between uint32 codes.
+
+    Args:
+      codes: [n] uint32.
+      cand_codes: [n, kc] uint32.
+    Returns:
+      int32 [n, kc].
+    """
+    x = jnp.bitwise_xor(codes[:, None].astype(jnp.uint32), cand_codes.astype(jnp.uint32))
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused sign-random-projection sketching (simhash).
+
+Computes packed LSH sketch codes  codes[n, L] = pack_k(sign(X @ H^T))  in one
+pass: the projection matmul runs on the MXU, sign + bit-pack on the VPU, and
+only the 4-byte codes leave VMEM — the [n, L*k] projection intermediate never
+touches HBM.  This is the hash hot-spot of the paper's pre-processing and
+query paths (Sec. 4.1: every user re-hashes periodically; every query hashes
+into L sketches).
+
+Tiling: grid (n/TN, d/TD).  d is the contraction dim; a VMEM scratch
+accumulator [TN, LK] carries partial projections across d-steps
+("arbitrary" semantics); the pack happens on the last d-step.
+LK = L*k is zero-padded to a lane multiple (128) by the ops.py wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _simhash_kernel(x_ref, h_ref, out_ref, acc_ref, *, k: int, L: int):
+    d_step = pl.program_id(1)
+    n_dsteps = pl.num_programs(1)
+
+    @pl.when(d_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [TN, TD] @ [TD, LKpad] -> [TN, LKpad] partial projection on the MXU.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        h_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(d_step == n_dsteps - 1)
+    def _pack():
+        proj = acc_ref[...]  # [TN, LKpad]
+        bits = (proj >= 0).astype(jnp.uint32)  # [TN, LKpad]
+        # lane l*k + j holds bit j of table l, so (lane % k) is the bit
+        # position; padded tail lanes (>= L*k) are never sliced below.
+        lane = jax.lax.broadcasted_iota(jnp.int32, proj.shape, 1)
+        weighted = bits << (lane % k).astype(jnp.uint32)
+        # per-table static slices + lane reduction (no scatter in-kernel)
+        codes = [
+            jnp.sum(weighted[:, l * k : (l + 1) * k], axis=1) for l in range(L)
+        ]
+        out_ref[...] = jnp.stack(codes, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "L", "tn", "td", "interpret"))
+def simhash_pallas(
+    x: jax.Array,          # [n, d] float32 (padded: n % tn == 0, d % td == 0)
+    h_t: jax.Array,        # [d, LKpad] float32, transposed + lane-padded H
+    *,
+    k: int,
+    L: int,
+    tn: int = 256,
+    td: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = x.shape
+    lkpad = h_t.shape[1]
+    grid = (n // tn, d // td)
+    return pl.pallas_call(
+        functools.partial(_simhash_kernel, k=k, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, td), lambda i, j: (i, j)),
+            pl.BlockSpec((td, lkpad), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, L), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((tn, lkpad), jnp.float32)],
+        interpret=interpret,
+    )(x, h_t)

@@ -1,0 +1,409 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the REAL step function (train_step / prefill /
+decode_step), attaches the production shardings to ShapeDtypeStruct inputs
+(no allocation), lowers, compiles, and records:
+  * compiled.memory_analysis()  — proves the cell fits 16 GB/chip,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the post-SPMD optimized HLO,
+into a JSON file consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod] \
+      --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.data import tokens as data_tokens
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import model as M
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts
+
+# archs big enough to need int8 optimizer states to fit 16 GB/chip
+INT8_OPT_ARCHS = {"llama4-maverick-400b-a17b", "jamba-v0.1-52b"}
+
+# encoder context used for enc-dec decode cells (decoder KV is the cell's
+# seq_len; the encoder side is a fixed audio context)
+ENCDEC_DECODE_SRC_LEN = 4096
+
+# Named sharding-rule presets (§Perf hillclimb knobs).
+#   default : DP over (pod, data) x TP/EP over model (Megatron-style)
+#   zero3   : pure data parallelism over ALL axes + fully-sharded weights
+#             (no tensor axes) — kills TP activation all-reduces and the
+#             replicated-attention waste for head counts that don't divide
+#             the model axis; weights are re-gathered per layer instead.
+RULE_PRESETS = {
+    "default": None,
+    "zero3": {
+        "batch": ("pod", "data", "model"),
+        "fsdp": ("data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "d_ff": None,
+        "d_inner": None,
+        "expert_ff": None,
+    },
+    # zero3 + replicated vocab dim: the vocab-sharded lm_head conflicts with
+    # fully batch-sharded hidden states at the loss (GSPMD falls back to an
+    # involuntary full rematerialization); sharding the embedding only by
+    # fsdp resolves it.
+    "zero3b": {
+        "batch": ("pod", "data", "model"),
+        "fsdp": ("data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "d_ff": None,
+        "d_inner": None,
+        "expert_ff": None,
+        "vocab": None,
+    },
+}
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def _param_sds(cfg: ModelConfig, mesh, rules=None):
+    box = {}
+
+    def f(_):
+        p, s = M.init_model(cfg, 0)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, 0)
+    shardings = sh.spec_tree_to_shardings(mesh, box["specs"], shapes, rules)
+    return _sds(shapes, shardings), box["specs"]
+
+
+def _batch_sharding(mesh, tree, batch_dims_shardable: bool, rules=None):
+    bx = batch_axes(mesh)
+    if rules and "batch" in rules:
+        bx = tuple(a for a in rules["batch"] if a in mesh.shape)
+
+    def leaf(l):
+        if not batch_dims_shardable or l.shape[0] == 1:
+            return NamedSharding(mesh, P())
+        prod = 1
+        for a in bx:
+            prod *= mesh.shape[a]
+        use = bx if l.shape[0] % prod == 0 else batch_axes(mesh)
+        spec = [use] + [None] * (len(l.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, tree)
+
+
+def _fit_spec(mesh, spec_axes, shape):
+    """Drop mesh axes (per dim, trailing-first) until every dim divides.
+    Returns (fitted PartitionSpec, fully_fits: bool)."""
+    out, full = [], True
+    used = set()
+    for dim, ax in zip(shape, spec_axes):
+        axes = () if ax is None else ((ax,) if isinstance(ax, str) else tuple(ax))
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        fitted = axes
+        while fitted:
+            prod = 1
+            for a in fitted:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                break
+            fitted = fitted[:-1]
+        if fitted != axes:
+            full = False
+        used.update(fitted)
+        out.append(None if not fitted else
+                   (fitted[0] if len(fitted) == 1 else fitted))
+    return P(*out), full
+
+
+def _pick(mesh, shape, candidates):
+    """First candidate that fully fits; else the fitted first candidate."""
+    for cand in candidates:
+        spec, full = _fit_spec(mesh, cand, shape)
+        if full:
+            return NamedSharding(mesh, spec)
+    spec, _ = _fit_spec(mesh, candidates[0], shape)
+    return NamedSharding(mesh, spec)
+
+
+def _decode_state_shardings(cfg: ModelConfig, states_shape, mesh, long: bool):
+    bx = batch_axes(mesh)
+
+    def leaf(path, l):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(l.shape)
+        shape = tuple(l.shape)
+        if key in ("k", "v", "xk", "xv") and nd == 5:  # [P, B, S, Hkv, dh]
+            return _pick(mesh, shape, [
+                (None, bx, None, "model", None),       # batch + heads TP
+                (None, bx, "model", None, None),       # heads don't divide:
+                                                       # split the KV length
+                (None, None, ("data", "model"), None, None),  # B=1 (long):
+                                                       # length over all chips
+            ])
+        if key == "h" and nd == 4:                     # mamba h [P, B, di, N]
+            return _pick(mesh, shape, [(None, bx, "model", None)])
+        if key == "conv" and nd == 4:                  # [P, B, dc-1, di]
+            return _pick(mesh, shape, [(None, bx, None, "model")])
+        if key.startswith("s") and nd >= 3:            # xlstm [P, B, H, ...]
+            rest = (None,) * (nd - 3)
+            cands = [(None, bx, "model") + rest]
+            if nd >= 4:
+                cands.append((None, bx, None, "model") + (None,) * (nd - 4))
+            return _pick(mesh, shape, cands)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, states_shape)
+
+
+def build_lowering(arch: str, shape_name: str, mesh, rules=None):
+    """Returns (lowered, meta) for the cell."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    meta = dict(arch=arch, shape=shape_name, kind=spec.kind,
+                batch=B, seq=S, mesh=tuple(int(x) for x in mesh.devices.shape))
+
+    with sh.use_mesh(mesh, rules):
+        params_sds, specs = _param_sds(cfg, mesh, rules)
+
+        if spec.kind == "train":
+            ocfg = opt_mod.OptConfig(
+                state_dtype="int8" if arch in INT8_OPT_ARCHS else "fp32"
+            )
+            opt_shapes = jax.eval_shape(
+                lambda p: opt_mod.init_opt_state(p, ocfg), params_sds
+            )
+            opt_shardings = sh.spec_tree_to_shardings(
+                mesh, opt_mod.opt_state_specs(specs, ocfg), opt_shapes, rules
+            )
+            opt_sds = _sds(opt_shapes, opt_shardings)
+            batch_shapes = data_tokens.input_specs(cfg, B, S, kind="train")
+            batch_sds = _sds(
+                batch_shapes, _batch_sharding(mesh, batch_shapes, True, rules)
+            )
+            step = ts.make_train_step(cfg, ocfg)
+            lowered = step.lower(params_sds, opt_sds, batch_sds)
+            return lowered, meta
+
+        if spec.kind == "prefill":
+            batch_shapes = data_tokens.input_specs(cfg, B, S, kind="prefill")
+            batch_sds = _sds(
+                batch_shapes, _batch_sharding(mesh, batch_shapes, True, rules)
+            )
+
+            def prefill_fn(params, batch):
+                logits, states, _ = M.prefill(params, cfg, batch, max_len=S)
+                return logits, states
+
+            lowered = jax.jit(prefill_fn).lower(params_sds, batch_sds)
+            return lowered, meta
+
+        # decode: one new token against a seq_len-deep cache
+        long = shape_name == "long_500k"
+        src_len = ENCDEC_DECODE_SRC_LEN if cfg.encoder_layers else None
+        prefill_len = 256  # shapes of recurrent states don't depend on it
+
+        pre_shapes = data_tokens.input_specs(cfg, B, prefill_len, kind="prefill")
+        if cfg.encoder_layers:
+            pre_shapes["frames"] = jax.ShapeDtypeStruct(
+                (B, src_len, cfg.d_model), jnp.float32
+            )
+
+        def state_shapes_fn(params, batch):
+            _, states, _ = M.prefill(params, cfg, batch, max_len=S)
+            return states
+
+        states_shape = jax.eval_shape(state_shapes_fn, params_sds, pre_shapes)
+        state_sh = _decode_state_shardings(cfg, states_shape, mesh, long)
+        states_sds = _sds(states_shape, state_sh)
+        tok_shard = (
+            NamedSharding(mesh, P(batch_axes(mesh))) if B > 1
+            else NamedSharding(mesh, P())
+        )
+        tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+
+        def decode_fn(params, states, token, pos):
+            return M.decode_step(params, cfg, token, states, pos)
+
+        lowered = jax.jit(decode_fn).lower(
+            params_sds, states_sds, tok_sds, pos_sds
+        )
+        return lowered, meta
+
+
+# -- collective byte accounting from post-SPMD HLO ---------------------------
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+# ring-algorithm wire multipliers (bytes crossing links / buffer size)
+_WIRE_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    per_op: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: count the -start only
+        size = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            size += n * _BYTES.get(dt, 4)
+        per_op[op] = per_op.get(op, 0.0) + size * _WIRE_FACTOR[op]
+        counts[op] = counts.get(op, 0) + 1
+    return {
+        "bytes_by_op": per_op,
+        "counts": counts,
+        "total_wire_bytes": sum(per_op.values()),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = False, rules_name: str = "default",
+             remat: bool = True) -> dict:
+    from repro.models import unroll as unroll_mod
+
+    rules = RULE_PRESETS[rules_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with unroll_mod.unroll_scope(unroll), unroll_mod.remat_scope(remat):
+        lowered, meta = build_lowering(arch, shape_name, mesh, rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    out = dict(
+        **meta,
+        multi_pod=multi_pod,
+        unrolled=unroll,
+        rules=rules_name,
+        remat=remat,
+        ok=True,
+        t_lower_s=round(t_lower, 1),
+        t_compile_s=round(t_compile, 1),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        cost=dict(
+            flops=cost.get("flops"),
+            bytes_accessed=cost.get("bytes accessed"),
+            transcendentals=cost.get("transcendentals"),
+        ),
+        collectives=coll,
+        hlo_lines=hlo.count("\n"),
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer/loss scans for exact cost analysis")
+    ap.add_argument("--rules", default="default", choices=sorted(RULE_PRESETS),
+                    help="sharding-rule preset (perf iterations)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation remat (perf iterations)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape_name in shapes:
+            tag = (f"{arch}__{shape_name}__"
+                   f"{'pod2' if args.multi_pod else 'pod1'}"
+                   + ("__unroll" if args.unroll else "")
+                   + (f"__{args.rules}" if args.rules != "default" else "")
+                   + ("__noremat" if args.no_remat else ""))
+            path = os.path.join(args.out, tag + ".json")
+            if not cell_applicable(arch, shape_name):
+                rec = dict(arch=arch, shape=shape_name, ok=True,
+                           skipped=True, multi_pod=args.multi_pod,
+                           reason="full-attention arch: long_500k requires "
+                                  "sub-quadratic mixing (DESIGN.md Sec. 5)")
+                json.dump(rec, open(path, "w"), indent=1)
+                print(f"[skip] {tag}")
+                continue
+            print(f"[cell] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, args.multi_pod,
+                               unroll=args.unroll, rules_name=args.rules,
+                               remat=not args.no_remat)
+                mb = (rec["memory"]["argument_bytes"] or 0) / 2**30
+                print(f"  ok: compile {rec['t_compile_s']}s, "
+                      f"args {mb:.2f} GiB/dev, "
+                      f"flops {rec['cost']['flops']:.3e}, "
+                      f"wire {rec['collectives']['total_wire_bytes']:.3e} B",
+                      flush=True)
+            except Exception as e:
+                rec = dict(arch=arch, shape=shape_name, ok=False,
+                           multi_pod=args.multi_pod, error=str(e),
+                           traceback=traceback.format_exc())
+                print(f"  FAIL: {e}", flush=True)
+            json.dump(rec, open(path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end serving driver: batched prefill + decode over the mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models import sharding as sh
+from repro.serve import serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(args.mesh_data, args.mesh_model)
+    rng = np.random.default_rng(args.seed)
+
+    with sh.use_mesh(mesh):
+        params, _ = M.init_model(cfg, args.seed)
+        batch = {}
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (args.batch, args.prompt_len, cfg.d_model)
+                ), jnp.float32) * 0.02
+        if cfg.modality == "vision_patches":
+            batch["prefix_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (args.batch, cfg.num_prefix_embeds, cfg.d_model)
+                ), jnp.float32) * 0.02
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32,
+        )
+        max_len = args.prompt_len + args.gen + 8
+        t0 = time.time()
+        out = serve_step.generate(
+            params, cfg, batch, steps=args.gen, max_len=max_len,
+            seed=args.seed,
+        )
+        dt = time.time() - t0
+    toks = np.asarray(out)
+    print(f"[serve] generated {toks.shape} tokens in {dt:.1f}s "
+          f"({toks.size / dt:.1f} tok/s)")
+    print("first sequences:", toks[:2, :16].tolist())
+    assert np.all(toks >= 0) and np.all(toks < cfg.vocab_size)
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, MLPs.
+
+Pure functions over parameter dicts.  Every init function returns
+(params, specs) where `specs` mirrors the params pytree with tuples of
+*logical* axis names (resolved to mesh axes by `repro.models.sharding`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def key_for(root: jax.Array, name: str) -> jax.Array:
+    import zlib
+
+    return jax.random.fold_in(root, zlib.crc32(name.encode()) % (2**31))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(
+        dtype
+    )
+
+
+def init_rmsnorm(d: int):
+    return jnp.zeros((d,), jnp.float32), ("d_model",)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, dh]; positions: [B, S] (or [S]) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _init(ks[0], (d, hq, dh)),
+        "wk": _init(ks[1], (d, hkv, dh)),
+        "wv": _init(ks[2], (d, hkv, dh)),
+        "wo": _init(ks[3], (hq, dh, d), scale=1.0 / np.sqrt(hq * dh)),
+    }
+    specs = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias and not cross:
+        params.update(
+            bq=jnp.zeros((hq, dh)), bk=jnp.zeros((hkv, dh)), bv=jnp.zeros((hkv, dh))
+        )
+        specs.update(
+            bq=("heads", "head_dim"),
+            bk=("kv_heads", "head_dim"),
+            bv=("kv_heads", "head_dim"),
+        )
+    return params, specs
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig, seq_axis: str | None = "seq"):
+    """Grouped-query attention core.
+
+    q: [B, Sq, Hq, dh]; k/v: [B, Sk, Hkv, dh]; mask: broadcastable to
+    [B, 1, 1, Sq, Sk] (True = attend).
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k) / np.sqrt(dh)
+    scores = _softcap(scores.astype(jnp.float32), cfg.attn_logit_softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0) -> jax.Array:
+    """[1, 1, 1, sq, sk] mask; window > 0 adds a sliding-window band."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill)
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m &= ki > qi - window
+    return m[None, None, None]
+
+
+# Above this many query rows, attention runs q-chunked (exact, flash-style
+# row blocking): the [Sq, Sk] score matrix never materializes — each scan
+# step holds one [chunk, Sk] row block in f32.  Bounds 32k-prefill memory.
+Q_CHUNK_THRESHOLD = 2048
+Q_CHUNK = 1024
+
+
+def _sdpa_qchunked(q, k, v, cfg: ModelConfig, causal: bool, window: int):
+    """Exact attention with the query dim scanned in chunks.
+
+    q: [B, Sq, Hq, dh]; k/v: [B, Sk, Hkv, dh].  Assumes Sq == Sk alignment
+    at the sequence end (prefill/training layout).
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    c = Q_CHUNK
+    assert sq % c == 0, (sq, c)
+    nc = sq // c
+    qg = q.reshape(b, nc, c, hkv, g, dh)
+    ki = jnp.arange(sk)
+
+    def step(_, inp):
+        qc, idx = inp                      # [b, c, hkv, g, dh], scalar chunk id
+        q0 = idx * c + (sk - sq)
+        qi = q0 + jnp.arange(c)
+        scores = jnp.einsum("bqhgk,bshk->bhgqs", qc, k) / np.sqrt(dh)
+        scores = _softcap(scores.astype(jnp.float32), cfg.attn_logit_softcap)
+        if causal:
+            m = ki[None, :] <= qi[:, None]
+            if window > 0:
+                m &= ki[None, :] > qi[:, None] - window
+            scores = jnp.where(m[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+        return None, out.reshape(b, c, hq, dh)
+
+    _, outs = jax.lax.scan(
+        step, None, (jnp.moveaxis(qg, 1, 0), jnp.arange(nc))
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, dh)
+
+
+def attention(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    local: bool = False,
+    causal: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    kv_override supplies cross-attention keys/values (encoder states),
+    already projected.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    if kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = sh.constrain(q, "batch", "seq", "heads", None)
+    k = sh.constrain(k, "batch", "seq", "kv_heads", None)
+    v = sh.constrain(v, "batch", "seq", "kv_heads", None)
+    sq, sk = q.shape[1], k.shape[1]
+    window = cfg.window_size if local else 0
+    if sq > Q_CHUNK_THRESHOLD and sq % Q_CHUNK == 0 and sq == sk:
+        out = _sdpa_qchunked(q, k, v, cfg, causal, window)
+    else:
+        if causal:
+            mask = causal_mask(sq, sk, window)
+        else:
+            mask = jnp.ones((1, 1, 1, sq, sk), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return sh.constrain(out, "batch", "seq", None)
+
+
+def project_cross_kv(p, enc: jax.Array, cfg: ModelConfig):
+    """Project encoder states once for all decoder cross-attention calls."""
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"].astype(enc.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"].astype(enc.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(enc.dtype)
+        v = v + p["bv"].astype(enc.dtype)
+    return k, v
+
+
+def attention_decode(
+    p,
+    x: jax.Array,          # [B, 1, d]
+    cache_k: jax.Array,    # [B, S, Hkv, dh]
+    cache_v: jax.Array,
+    pos: jax.Array,        # scalar int32 — current position
+    cfg: ModelConfig,
+    local: bool = False,
+    cross: bool = False,
+):
+    """One decode step; returns (out [B, 1, d], new_cache_k, new_cache_v).
+
+    For cross-attention the cache holds projected encoder states and is not
+    updated.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if not cross:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        posb = jnp.broadcast_to(pos, (x.shape[0], 1))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    s = cache_k.shape[1]
+    ki = jnp.arange(s)
+    if cross:
+        mask = jnp.ones((s,), bool)
+    else:
+        mask = ki <= pos
+        if local and cfg.window_size > 0:
+            mask &= ki > pos - cfg.window_size
+    mask = mask[None, None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, hidden: int | None = None):
+    d = cfg.d_model
+    f = hidden or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        params = {
+            "w_gate": _init(ks[0], (d, f)),
+            "w_up": _init(ks[1], (d, f)),
+            "w_down": _init(ks[2], (f, d), scale=1.0 / np.sqrt(f)),
+        }
+        specs = {
+            "w_gate": ("fsdp", "d_ff"),
+            "w_up": ("fsdp", "d_ff"),
+            "w_down": ("d_ff", "fsdp"),
+        }
+    else:
+        params = {
+            "w_in": _init(ks[0], (d, f)),
+            "w_down": _init(ks[1], (f, d), scale=1.0 / np.sqrt(f)),
+        }
+        specs = {"w_in": ("fsdp", "d_ff"), "w_down": ("d_ff", "fsdp")}
+    return params, specs
+
+
+def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+        h = jax.nn.gelu(h) if cfg.mlp_type == "gelu" else jax.nn.relu(h)
+    h = sh.constrain(h, "batch", "seq", "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return sh.constrain(out, "batch", "seq", None)

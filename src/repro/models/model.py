@@ -1,0 +1,378 @@
+"""Model assembly: embeddings, scanned block stack, heads, modality stubs.
+
+Layers are grouped into *periods* (`cfg.scan_period` layers each) so that
+heterogeneous stacks (jamba's 1-attention:7-mamba interleave, gemma2's
+local/global alternation, llama4's dense/MoE alternation) scan cleanly:
+every period has identical pytree structure, parameters are stacked along a
+leading `num_periods` axis, and `jax.lax.scan` + remat gives O(1) HLO size
+in depth.
+
+Three entry points:
+  forward(...)      — full-sequence training forward -> hidden states + aux
+  prefill(...)      — forward that also returns decode state (KV caches /
+                      recurrent states) and last-position logits
+  decode_step(...)  — one-token step over the decode state
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as ly
+from repro.models import moe as moe_mod
+from repro.models import sharding as sh
+from repro.models import ssm, xlstm
+from repro.models.unroll import maybe_checkpoint, scan as maybe_unrolled_scan
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_sub(cfg: ModelConfig, key, j: int, cross: bool):
+    kind, is_moe, _ = cfg.period_kinds()[j]
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = ly.init_rmsnorm(cfg.d_model)
+    if kind == "attn":
+        p["attn"], s["attn"] = ly.init_attention(cfg, ks[0])
+        if cross:
+            p["cross"], s["cross"] = ly.init_attention(cfg, ks[1], cross=True)
+            p["norm_x"], s["norm_x"] = ly.init_rmsnorm(cfg.d_model)
+    elif kind == "mamba":
+        p["mamba"], s["mamba"] = ssm.init_mamba(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mlstm"], s["mlstm"] = xlstm.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["slstm"], s["slstm"] = xlstm.init_slstm(cfg, ks[0])
+    if is_moe:
+        p["norm2"], s["norm2"] = ly.init_rmsnorm(cfg.d_model)
+        p["moe"], s["moe"] = moe_mod.init_moe(cfg, ks[2])
+    elif cfg.d_ff > 0:
+        p["norm2"], s["norm2"] = ly.init_rmsnorm(cfg.d_model)
+        p["mlp"], s["mlp"] = ly.init_mlp(cfg, ks[2])
+    return p, s
+
+
+def _init_period(cfg: ModelConfig, key, cross: bool):
+    p, s = {}, {}
+    for j in range(cfg.scan_period):
+        kj = jax.random.fold_in(key, j)
+        p[f"sub{j}"], s[f"sub{j}"] = _init_sub(cfg, kj, j, cross)
+    return p, s
+
+
+def _stack_specs(spec, extra=("layers",)):
+    return jax.tree.map(
+        lambda axes: tuple(extra) + tuple(axes),
+        spec,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_model(cfg: ModelConfig, seed: int = 0):
+    """Returns (params, specs) — specs mirror params with logical axes."""
+    root = jax.random.PRNGKey(seed)
+    dt = _dtype(cfg)
+    params, specs = {}, {}
+    params["embed"] = (
+        jax.random.normal(ly.key_for(root, "embed"), (cfg.vocab_size, cfg.d_model))
+        * 0.02
+    )
+    specs["embed"] = ("vocab", "fsdp")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ly._init(
+            ly.key_for(root, "lm_head"), (cfg.d_model, cfg.vocab_size)
+        )
+        specs["lm_head"] = ("fsdp", "vocab")
+    if cfg.num_prefix_embeds or cfg.encoder_layers:
+        params["prefix_proj"] = ly._init(
+            ly.key_for(root, "prefix"), (cfg.d_model, cfg.d_model)
+        )
+        specs["prefix_proj"] = ("fsdp", "d_model")
+
+    cross = cfg.encoder_layers > 0
+    keys = jax.random.split(ly.key_for(root, "blocks"), cfg.num_periods)
+    params["blocks"] = jax.vmap(lambda k: _init_period(cfg, k, cross)[0])(keys)
+    _, block_specs = _init_period(cfg, keys[0], cross)  # structure only
+    specs["blocks"] = _stack_specs(block_specs)
+    params["final_norm"], specs["final_norm"] = ly.init_rmsnorm(cfg.d_model)
+
+    if cfg.encoder_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        ekeys = jax.random.split(ly.key_for(root, "enc"), enc_cfg.num_periods)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_period(enc_cfg, k, False)[0])(ekeys)
+        }
+        _, enc_specs = _init_period(enc_cfg, ekeys[0], False)
+        specs["encoder"] = {"blocks": _stack_specs(enc_specs)}
+        params["enc_norm"], specs["enc_norm"] = ly.init_rmsnorm(cfg.d_model)
+
+    params = jax.tree.map(
+        lambda x: x.astype(dt) if x.dtype == jnp.float32 else x, params
+    )
+    return params, specs
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, encoder_layers=0,
+        scan_period=1, moe_num_experts=0, attn_every=1, xlstm=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# block forward (one period)
+# ---------------------------------------------------------------------------
+
+
+def _period_forward(
+    cfg: ModelConfig,
+    pparams,
+    x,
+    positions,
+    enc_out=None,
+    mode: str = "train",       # train | prefill | decode
+    states=None,               # per-sub dict of decode state (mode != train)
+    pos=None,                  # scalar decode position
+):
+    aux = jnp.zeros((2,), jnp.float32)  # (lb_loss, z_loss)
+    new_states = {}
+    for j, (kind, is_moe, is_local) in enumerate(cfg.period_kinds()):
+        sub = pparams[f"sub{j}"]
+        st = (states or {}).get(f"sub{j}")
+        h = ly.rmsnorm(x, sub["norm1"], cfg.norm_eps)
+        if kind == "attn":
+            if mode == "train":
+                mix = ly.attention(sub["attn"], h, cfg, positions, local=is_local)
+                nst = {}
+            elif mode == "prefill":
+                mix, (ck, cv) = _attn_prefill(sub["attn"], h, cfg, positions,
+                                              is_local, st)
+                nst = {"k": ck, "v": cv}
+            else:
+                mix, ck, cv = ly.attention_decode(
+                    sub["attn"], h, st["k"], st["v"], pos, cfg, local=is_local
+                )
+                nst = {"k": ck, "v": cv}
+            x = x + mix
+            if "cross" in sub:
+                hx = ly.rmsnorm(x, sub["norm_x"], cfg.norm_eps)
+                if mode == "decode":
+                    cx, _, _ = ly.attention_decode(
+                        sub["cross"], hx, st["xk"], st["xv"], pos, cfg,
+                        cross=True,
+                    )
+                    # cross cache is static; carry it for the next step
+                    nst.update(xk=st["xk"], xv=st["xv"])
+                else:
+                    kx, vx = ly.project_cross_kv(sub["cross"], enc_out, cfg)
+                    cx = ly.attention(
+                        sub["cross"], hx, cfg, positions, causal=False,
+                        kv_override=(kx, vx),
+                    )
+                    if mode == "prefill":
+                        nst.update(xk=kx, xv=vx)
+                x = x + cx
+            new_states[f"sub{j}"] = nst
+        elif kind == "mamba":
+            if mode == "train":
+                mix = ssm.mamba(sub["mamba"], h, cfg)
+                nst = {}
+            elif mode == "prefill":
+                mix, (hh, conv) = ssm.mamba_with_state(
+                    sub["mamba"], h, cfg, None, None
+                )
+                nst = {"h": hh, "conv": conv}
+            else:
+                mix, (hh, conv) = ssm.mamba_decode(
+                    sub["mamba"], h, (st["h"], st["conv"]), cfg
+                )
+                nst = {"h": hh, "conv": conv}
+            x = x + mix
+            new_states[f"sub{j}"] = nst
+        elif kind in ("mlstm", "slstm"):
+            fwd = (
+                xlstm.mlstm_with_state if kind == "mlstm"
+                else xlstm.slstm_with_state
+            )
+            init_st = None if mode != "decode" else tuple(
+                st[k] for k in sorted(st)
+            )
+            mix, nst_t = fwd(sub[kind], h, cfg, init_st)
+            nst = (
+                {f"s{i}": v for i, v in enumerate(nst_t)}
+                if mode != "train"
+                else {}
+            )
+            x = x + mix
+            new_states[f"sub{j}"] = nst
+        if "moe" in sub:
+            h2 = ly.rmsnorm(x, sub["norm2"], cfg.norm_eps)
+            y, maux = moe_mod.moe(sub["moe"], h2, cfg)
+            aux = aux + jnp.stack([maux.load_balance_loss, maux.router_z_loss])
+            x = x + y
+        elif "mlp" in sub:
+            h2 = ly.rmsnorm(x, sub["norm2"], cfg.norm_eps)
+            x = x + ly.mlp(sub["mlp"], h2, cfg)
+        x = sh.constrain(x, "batch", "seq", None)
+    return x, aux, new_states
+
+
+def _attn_prefill(p, h, cfg, positions, is_local, _st):
+    """Full attention that also returns the rope'd K/V for the cache."""
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    q = ly.apply_rope(q, positions, cfg.rope_theta)
+    k = ly.apply_rope(k, positions, cfg.rope_theta)
+    sq = q.shape[1]
+    window = cfg.window_size if is_local else 0
+    if sq > ly.Q_CHUNK_THRESHOLD and sq % ly.Q_CHUNK == 0:
+        out = ly._sdpa_qchunked(q, k, v, cfg, True, window)
+    else:
+        mask = ly.causal_mask(sq, sq, window)
+        out = ly._sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    dt = _dtype(cfg)
+    parts = []
+    if "prefix_embeds" in batch:
+        pe = batch["prefix_embeds"].astype(dt)
+        pe = jnp.einsum("bpd,de->bpe", pe, params["prefix_proj"].astype(dt))
+        parts.append(pe)
+    if "tokens" in batch:
+        tok = params["embed"].astype(dt)[batch["tokens"]] * np.sqrt(cfg.d_model)
+        parts.append(tok)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return sh.constrain(x, "batch", "seq", None)
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Bidirectional encoder over frontend-provided frame embeddings."""
+    dt = _dtype(cfg)
+    x = jnp.einsum(
+        "bsd,de->bse", frames.astype(dt), params["prefix_proj"].astype(dt)
+    )
+    enc_cfg = _encoder_cfg(cfg)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+
+    def body(xc, pp):
+        sub = pp["sub0"]
+        h = ly.rmsnorm(xc, sub["norm1"], enc_cfg.norm_eps)
+        mix = ly.attention(sub["attn"], h, enc_cfg, positions, causal=False)
+        xc = xc + mix
+        h2 = ly.rmsnorm(xc, sub["norm2"], enc_cfg.norm_eps)
+        xc = xc + ly.mlp(sub["mlp"], h2, enc_cfg)
+        return xc, None
+
+    x, _ = maybe_unrolled_scan(maybe_checkpoint(body), x,
+                               params["encoder"]["blocks"])
+    return ly.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch, collect: str = "train"):
+    """Full-sequence forward.
+
+    batch keys: tokens [B, S_text] and/or prefix_embeds [B, P, d];
+    frames [B, S_src, d] for enc-dec.
+    Returns (hidden [B, S, d], aux [2], states or None).
+    """
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+
+    def body(carry, pp):
+        xc, aux = carry
+        y, a, st = _period_forward(
+            cfg, pp, xc, positions, enc_out=enc_out, mode=collect
+        )
+        return (y, aux + a), (st if collect == "prefill" else None)
+
+    (x, aux), states = maybe_unrolled_scan(
+        maybe_checkpoint(body),
+        (x, jnp.zeros((2,), jnp.float32)),
+        params["blocks"],
+    )
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, states
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden):
+    dt = hidden.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", hidden, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return sh.constrain(logits, "batch", "seq", "vocab")
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Returns (last_logits [B, V], decode_states). KV caches are padded to
+    max_len so decode_step can extend in place."""
+    hidden, aux, states = forward(params, cfg, batch, collect="prefill")
+
+    def pad(path, leaf):
+        # self-attention caches [P, B, S, H, dh] pad S to max_len; cross
+        # caches ('xk'/'xv') keep the encoder length; recurrent states are
+        # fixed-size.
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key in ("k", "v") and leaf.ndim == 5:
+            padw = [(0, 0)] * leaf.ndim
+            padw[2] = (0, max_len - leaf.shape[2])
+            return jnp.pad(leaf, padw)
+        return leaf
+
+    states = jax.tree_util.tree_map_with_path(pad, states)
+    last = logits_from_hidden(params, cfg, hidden[:, -1:, :])[:, 0]
+    return last, states, aux
+
+
+def decode_step(params, cfg: ModelConfig, token, states, pos):
+    """token: [B] int32; pos: scalar int32. Returns (logits [B,V], states)."""
+    batch = {"tokens": token[:, None]}
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+
+    def body(xc, inp):
+        pp, st = inp
+        y, _, nst = _period_forward(
+            cfg, pp, xc, positions, mode="decode", states=st, pos=pos
+        )
+        return y, nst
+
+    x, new_states = maybe_unrolled_scan(body, x, (params["blocks"], states))
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, new_states

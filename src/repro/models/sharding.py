@@ -1,0 +1,169 @@
+"""Logical-axis sharding (MaxText-style rules) + mesh context.
+
+Every tensor in the model is annotated with *logical* axis names; a rules
+table maps logical axes to mesh axes.  Changing the parallelism layout means
+changing the rules, not the model code — this is what the §Perf iterations
+tweak.
+
+The context (`use_mesh`) carries (mesh, rules).  Outside a mesh context all
+constraints are no-ops, so the same model code runs in single-device tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: how logical axes map onto the production mesh.
+#   batch       -> all data-parallel axes (pod + data)
+#   fsdp        -> weight sharding over the data axis (ZeRO-3 style)
+#   tensor axes -> model
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",      # long-context KV/state sharding (SP)
+    "d_model": None,
+    "fsdp": "data",           # weight d_model/ d_inner rows (ZeRO-3)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "d_inner": "model",
+    "d_state": None,
+    "conv": None,
+    "layers": None,
+    "dt_rank": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    base = dict(DEFAULT_RULES)
+    if rules:
+        base.update(rules)
+    _CTX.rules = base
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def axis_size(name: str) -> int:
+    m = _CTX.mesh
+    if m is None or name not in m.shape:
+        return 1
+    return m.shape[name]
+
+
+def _resolve(
+    logical_axes: tuple[str | None, ...], shape: tuple[int, ...] | None = None
+) -> P:
+    rules = _CTX.rules or DEFAULT_RULES
+    mesh = _CTX.mesh
+    out, used = [], set()
+    for i, ax in enumerate(logical_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        mapped = rules.get(ax)
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        # drop mesh axes that don't exist (e.g. 'pod' on single-pod) or were
+        # already consumed by an earlier tensor dim
+        axes = tuple(
+            a for a in axes
+            if mesh is not None and a in mesh.shape and a not in used
+        )
+        # shape-aware fallback: drop trailing mesh axes until the dim
+        # divides evenly (jit-boundary shardings must divide; e.g. 10 KV
+        # heads cannot shard over a 16-way model axis -> replicate).
+        if shape is not None and axes:
+            dim = shape[i]
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= mesh.shape[a]
+                if dim % prod == 0:
+                    break
+                axes = axes[:-1]
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def logical_spec(logical_axes: tuple[str | None, ...]) -> P:
+    """PartitionSpec for the given logical axes under the current rules."""
+    return _resolve(logical_axes)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = _resolve(tuple(logical_axes), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical_axes: str | None) -> NamedSharding | None:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _resolve(tuple(logical_axes)))
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree, shape_tree=None,
+                           rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings (for jit
+    in_shardings / device_put of the parameter tree).  When shape_tree is
+    given (same structure, leaves with .shape), non-dividing mesh axes are
+    dropped per-dim."""
+    base = dict(DEFAULT_RULES)
+    if rules:
+        base.update(rules)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, base
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    try:
+        if shape_tree is None:
+            return jax.tree.map(
+                lambda axes: NamedSharding(mesh, _resolve(tuple(axes))),
+                spec_tree, is_leaf=is_leaf,
+            )
+        return jax.tree.map(
+            lambda axes, l: NamedSharding(
+                mesh, _resolve(tuple(axes), tuple(l.shape))
+            ),
+            spec_tree, shape_tree, is_leaf=is_leaf,
+        )
+    finally:
+        _CTX.mesh, _CTX.rules = prev

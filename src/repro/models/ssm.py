@@ -1,0 +1,186 @@
+"""Mamba (selective SSM) block — TPU-adapted chunked selective scan.
+
+GPU Mamba fuses a sequential scan into one kernel over SRAM; the TPU-native
+formulation is a *chunked associative scan*: within a chunk the diagonal
+recurrence h_t = dA_t * h_{t-1} + dBx_t is a parallel associative scan
+(log-depth, VPU-friendly); across chunks a lax.scan carries the [B, di, N]
+state.  Chunk size bounds the [B, Q, di, N] working set to VMEM-scale tiles.
+
+Decode keeps (conv_state [B, d_conv-1, di], h [B, di, N]) and is O(1)/token —
+this is what makes the `long_500k` cell tractable for hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+
+
+def init_mamba(cfg: ModelConfig, key):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+    dc = cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": _init(ks[0], (d, 2 * di)),
+        "conv_w": _init(ks[1], (dc, di), scale=1.0 / np.sqrt(dc)),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": _init(ks[2], (di, r + 2 * n)),
+        "dt_proj": _init(ks[3], (r, di), scale=1.0 / np.sqrt(r)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))),  # softplus^-1
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "D": jnp.ones((di,)),
+        "out_proj": _init(ks[4], (di, d), scale=1.0 / np.sqrt(di)),
+    }
+    specs = {
+        "in_proj": ("fsdp", "d_inner"),
+        "conv_w": ("conv", "d_inner"),
+        "conv_b": ("d_inner",),
+        "x_proj": ("d_inner", None),
+        "dt_proj": ("dt_rank", "d_inner"),
+        "dt_bias": ("d_inner",),
+        "A_log": ("d_inner", "d_state"),
+        "D": ("d_inner",),
+        "out_proj": ("d_inner", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B, S, di]; w: [dc, di]."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(dc):  # dc is tiny (4): unrolled taps, no gather
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_scan_chunked(dA, dBx, C, h0, chunk: int):
+    """Selective scan via chunked associative scan.
+
+    dA, dBx: [B, S, di, N]; C: [B, S, N]; h0: [B, di, N].
+    Returns (y [B, S, di], h_final).
+    """
+    b, s, di, n = dA.shape
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    dA = dA.reshape(b, nc, q, di, n)
+    dBx = dBx.reshape(b, nc, q, di, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    def step(h, inputs):
+        da, dbx, c = inputs  # [b, q, di, n], ..., [b, q, n]
+        pref_a, scan_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_t = scan_b + pref_a * h[:, None]        # [b, q, di, n]
+        y = jnp.einsum("bqdn,bqn->bqd", h_t, c)
+        return h_t[:, -1], y
+
+    inputs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dBx, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    return y, h_final
+
+
+def mamba(p, x: jax.Array, cfg: ModelConfig, chunk: int = 256) -> jax.Array:
+    """Training/prefill forward. x: [B, S, d] -> [B, S, d]."""
+    y, _ = mamba_with_state(p, x, cfg, h0=None, conv0=None, chunk=chunk)
+    return y
+
+
+def mamba_with_state(
+    p, x: jax.Array, cfg: ModelConfig, h0, conv0, chunk: int = 256
+):
+    """Forward that also returns (h, conv_state) for prefill->decode."""
+    b, s, d = x.shape
+    di, n, r = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = sh.constrain(x_in, "batch", "seq", "d_inner")
+    if conv0 is not None:
+        x_cat = jnp.concatenate([conv0.astype(x.dtype), x_in], axis=1)
+        x_c = _causal_conv(x_cat, p["conv_w"].astype(x.dtype),
+                           p["conv_b"].astype(x.dtype))[:, conv0.shape[1]:]
+    else:
+        x_c = _causal_conv(x_in, p["conv_w"].astype(x.dtype),
+                           p["conv_b"].astype(x.dtype))
+    x_c = jax.nn.silu(x_c)
+
+    proj = jnp.einsum("bsi,ie->bse", x_c, p["x_proj"].astype(x.dtype))
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"].astype(x.dtype)).astype(
+            jnp.float32
+        )
+        + p["dt_bias"][None, None]
+    )
+    A = -jnp.exp(p["A_log"])                                    # [di, n]
+    dA = jnp.exp(dt[..., None] * A[None, None])                 # [b,s,di,n]
+    dBx = (
+        dt[..., None]
+        * bmat[:, :, None, :].astype(jnp.float32)
+        * x_c[..., None].astype(jnp.float32)
+    )
+    h0 = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0
+    y, h = _ssm_scan_chunked(dA, dBx, cmat.astype(jnp.float32), h0, chunk)
+    y = y.astype(x.dtype) + x_c * p["D"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    conv_state = (
+        x_in[:, -(cfg.mamba_d_conv - 1):, :] if s >= cfg.mamba_d_conv - 1
+        else x_in
+    )
+    return sh.constrain(out, "batch", "seq", None), (h, conv_state)
+
+
+def mamba_decode(p, x: jax.Array, state, cfg: ModelConfig):
+    """One-token step. x: [B, 1, d]; state = (h [B,di,N], conv [B,dc-1,di])."""
+    h, conv_state = state
+    b = x.shape[0]
+    di, n, r, dc = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)                 # [B,1,di]
+    window = jnp.concatenate([conv_state.astype(x.dtype), x_in], axis=1)  # [B,dc,di]
+    x_c = jnp.einsum("bti,ti->bi", window, p["conv_w"].astype(x.dtype)) + p[
+        "conv_b"
+    ].astype(x.dtype)
+    x_c = jax.nn.silu(x_c)[:, None, :]                  # [B,1,di]
+
+    proj = jnp.einsum("bsi,ie->bse", x_c, p["x_proj"].astype(x.dtype))
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"].astype(x.dtype)).astype(
+            jnp.float32
+        )
+        + p["dt_bias"][None, None]
+    )[:, 0]                                             # [B,di]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])               # [B,di,n]
+    dBx = dt[..., None] * bmat[:, 0, None, :].astype(jnp.float32) * x_c[
+        :, 0, :, None
+    ].astype(jnp.float32)
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32)).astype(
+        x.dtype
+    )
+    y = (y + x_c[:, 0] * p["D"].astype(x.dtype)[None])[:, None, :]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    new_conv = window[:, 1:, :]
+    return out, (h, new_conv)

@@ -1,0 +1,87 @@
+"""Switchable scan: lax.scan (production) or Python unroll (cost analysis).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so a scanned-layers model under-reports FLOPs/bytes/collectives by
+~num_layers.  The dry-run's single-pod roofline pass unrolls the layer and
+loss scans (`set_unroll(True)`) so the compiled HLO carries the true
+totals; production / multi-pod lowering keeps lax.scan (small HLO, fast
+compile, identical math).
+
+Inner sequence-chunk scans (flash attention rows, mamba/mLSTM chunks,
+sLSTM steps) stay as lax.scan even when unrolled=True — their trip-count
+correction is applied analytically in benchmarks/roofline.py.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unroll_scope(value: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = value
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, length: int | None = None):
+    """Drop-in for jax.lax.scan (the subset this codebase uses)."""
+    if not _UNROLL:
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        get = lambda i: None  # noqa: E731
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0]
+        get = lambda i: jax.tree.map(lambda l: l[i], xs)  # noqa: E731
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, get(i))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *ys)
+    return carry, stacked
+
+
+_REMAT = True
+
+
+@contextlib.contextmanager
+def remat_scope(value: bool):
+    """Toggle activation rematerialization (jax.checkpoint) around the
+    layer/loss bodies — a §Perf knob: remat=False saves one FSDP weight
+    re-gather pass at the cost of storing activations."""
+    global _REMAT
+    prev = _REMAT
+    _REMAT = value
+    try:
+        yield
+    finally:
+        _REMAT = prev
+
+
+def maybe_checkpoint(f, policy=None):
+    if not _REMAT:
+        return f
+    return jax.checkpoint(f, policy=policy)

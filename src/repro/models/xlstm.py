@@ -1,0 +1,236 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+TPU adaptation: the GPU reference implements mLSTM with a fused recurrent
+kernel; here the mLSTM uses the *chunkwise-parallel* form — quadratic
+within a VMEM-sized chunk (MXU-friendly), recurrent (C, n, m) state across
+chunks — the same hierarchy as our Mamba scan.  sLSTM is inherently
+sequential (h_{t-1} feeds the gate pre-activations through a recurrent
+matrix), so it runs as a lax.scan over time with exp-gate stabilization;
+xLSTM interleaves few of them by design.
+
+Decode for both is an O(1) state update.
+  mLSTM state: (C [B,H,dh,dh], n [B,H,dh], m [B,H])
+  sLSTM state: (c [B,H,dh], n [B,H,dh], h [B,H,dh], m [B,H,dh])
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = 2 * d
+    ks = jax.random.split(key, 7)
+    params = {
+        "up_proj": _init(ks[0], (d, 2 * di)),          # x-branch + gate branch
+        "wq": _init(ks[1], (d, d)),
+        "wk": _init(ks[2], (d, d)),
+        "wv": _init(ks[3], (d, d)),
+        "w_if": _init(ks[4], (d, 2 * cfg.num_heads), scale=0.02),
+        "b_i": jnp.zeros((cfg.num_heads,)),
+        "b_f": jnp.full((cfg.num_heads,), 3.0),        # open forget gates
+        "down_proj": _init(ks[5], (di, d), scale=1.0 / np.sqrt(di)),
+    }
+    specs = {
+        "up_proj": ("fsdp", "d_inner"),
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "heads"),
+        "wv": ("fsdp", "heads"),
+        "w_if": ("fsdp", None),
+        "b_i": (None,),
+        "b_f": (None,),
+        "down_proj": ("d_inner", "fsdp"),
+    }
+    return params, specs
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunkwise-parallel mLSTM step.
+
+    q/k/v: [B, H, Q, dh]; li/lf: [B, H, Q] log input/forget gates.
+    state: (C [B,H,dh,dh], n [B,H,dh], m [B,H]).
+    """
+    C, n, m = state
+    b_cum = jnp.cumsum(lf, axis=-1)                    # [B,H,Q]
+    B_tot = b_cum[..., -1]
+    u = li - b_cum                                     # li_t - b_t
+    u_max = jax.lax.cummax(u, axis=u.ndim - 1)
+    m_t = b_cum + jnp.maximum(m[..., None], u_max)     # [B,H,Q]
+
+    inter_w = jnp.exp(b_cum + m[..., None] - m_t)      # [B,H,Q]
+    # intra weights D_{tτ} = exp(b_t - b_τ + li_τ - m_t), τ <= t
+    lD = (
+        b_cum[..., :, None]
+        - b_cum[..., None, :]
+        + li[..., None, :]
+        - m_t[..., :, None]
+    )
+    tri = jnp.tril(jnp.ones(lD.shape[-2:], bool))
+    D = jnp.where(tri, jnp.exp(lD), 0.0)               # [B,H,Q,Q]
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * D
+    h_intra = jnp.einsum("bhqk,bhkd->bhqd", scores, v)
+    h_inter = jnp.einsum("bhqd,bhde->bhqe", q, C) * inter_w[..., None]
+    num = h_intra + h_inter
+
+    n_intra = jnp.einsum("bhqk,bhkd->bhqd", D, k)  # n_t = Σ_τ D_tτ k_τ (+ inter)
+    n_t = n_intra + n[..., None, :] * inter_w[..., None]
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhqd,bhqd->bhq", q, n_t)), jnp.exp(-m_t)
+    )
+    h = num / denom[..., None]                          # [B,H,Q,dh]
+
+    # state update to end of chunk
+    m_new = B_tot + jnp.maximum(m, u_max[..., -1])
+    decay_prev = jnp.exp(B_tot + m - m_new)             # [B,H]
+    w_tau = jnp.exp(B_tot[..., None] - b_cum + li - m_new[..., None])  # [B,H,Q]
+    C_new = C * decay_prev[..., None, None] + jnp.einsum(
+        "bhqd,bhqe,bhq->bhde", k, v, w_tau
+    )
+    n_new = n * decay_prev[..., None] + jnp.einsum("bhqd,bhq->bhd", k, w_tau)
+    return h, (C_new, n_new, m_new)
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+
+def mlstm_with_state(p, x: jax.Array, cfg: ModelConfig, state=None,
+                     chunk: int = 256):
+    """x: [B, S, d] -> ([B, S, d], state)."""
+    b, s, d = x.shape
+    hn = cfg.num_heads
+    dh = d // hn
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    x_br, z = jnp.split(xz, 2, axis=-1)                 # [B,S,di]
+    q = _heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype)), hn)
+    k = _heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype)), hn) / np.sqrt(dh)
+    v = _heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype)), hn)
+    gates = jnp.einsum(
+        "bsd,dg->bsg", x.astype(jnp.float32), p["w_if"].astype(jnp.float32)
+    )
+    li = (gates[..., :hn] + p["b_i"]).transpose(0, 2, 1)          # [B,H,S]
+    lf = jax.nn.log_sigmoid(gates[..., hn:] + p["b_f"]).transpose(0, 2, 1)
+
+    if state is None:
+        state = (
+            jnp.zeros((b, hn, dh, dh), jnp.float32),
+            jnp.zeros((b, hn, dh), jnp.float32),
+            jnp.full((b, hn), -1e30, jnp.float32),
+        )
+    qn = min(chunk, s)
+    assert s % qn == 0
+    nc = s // qn
+
+    def step(st, inp):
+        qc, kc, vc, lic, lfc = inp
+        h, st = _mlstm_chunk(
+            qc.astype(jnp.float32), kc.astype(jnp.float32),
+            vc.astype(jnp.float32), lic, lfc, st,
+        )
+        return st, h
+
+    def chunked(t):  # [B,H,S,*] -> [nc, B,H,Q,*]
+        return jnp.moveaxis(
+            t.reshape(t.shape[0], t.shape[1], nc, qn, *t.shape[3:]), 2, 0
+        )
+
+    state, hs = jax.lax.scan(
+        step, state, (chunked(q), chunked(k), chunked(v),
+                      chunked(li), chunked(lf))
+    )
+    # hs: [nc, B, H, Q, dh] -> [B, S, d]
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, hn, s, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d)
+    # GLU-style block output: the memory read-out h modulates the
+    # up-projected branch, gated by silu(z) (pre-LN projected-GLU variant).
+    out = x_br * jax.nn.silu(z)
+    out = out * jnp.concatenate([h.astype(x.dtype)] * (out.shape[-1] // d), -1)
+    out = jnp.einsum("bsi,id->bsd", out, p["down_proj"].astype(x.dtype))
+    return sh.constrain(out, "batch", "seq", None), state
+
+
+def mlstm_decode(p, x: jax.Array, cfg: ModelConfig, state):
+    """x: [B, 1, d]; O(1) recurrent update."""
+    y, state = mlstm_with_state(p, x, cfg, state, chunk=1)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    hn = cfg.num_heads
+    dh = d // hn
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gates": _init(ks[0], (d, 4 * d)),            # i, f, z, o pre-acts
+        "r_gates": _init(ks[1], (hn, dh, 4 * dh), scale=1.0 / np.sqrt(dh)),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ),
+        "out_proj": _init(ks[2], (d, d)),
+    }
+    specs = {
+        "w_gates": ("fsdp", "d_inner"),
+        "r_gates": ("heads", None, None),
+        "b_gates": ("d_inner",),
+        "out_proj": ("fsdp", "d_model"),
+    }
+    return params, specs
+
+
+def slstm_with_state(p, x: jax.Array, cfg: ModelConfig, state=None):
+    """Strictly recurrent scan over time. x: [B, S, d]."""
+    b, s, d = x.shape
+    hn = cfg.num_heads
+    dh = d // hn
+    pre_x = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["w_gates"].astype(jnp.float32)
+    ) + p["b_gates"].astype(jnp.float32)                # [B,S,4d]
+    pre_x = pre_x.reshape(b, s, hn, 4 * dh)
+
+    if state is None:
+        zero = jnp.zeros((b, hn, dh), jnp.float32)
+        state = (zero, zero + 1e-6, zero, zero - 1e30)  # c, n, h, m
+
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(st, pre_t):                                # pre_t: [B,H,4dh]
+        c, n, h, m = st
+        pre = pre_t + jnp.einsum("bhd,hde->bhe", h, r)
+        it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c_new = fp * c + ip * jnp.tanh(zt)
+        n_new = fp * n + ip
+        h_new = jax.nn.sigmoid(ot) * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre_x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["out_proj"].astype(x.dtype))
+    return sh.constrain(out, "batch", "seq", None), state
+
+
+def slstm_decode(p, x: jax.Array, cfg: ModelConfig, state):
+    y, state = slstm_with_state(p, x, cfg, state)
+    return y, state

@@ -1,0 +1,51 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 blockwise quantization + error feedback (1-bit-Adam style residual
+accumulation): the psum over the `pod` axis moves ~4x fewer bytes (int8 +
+per-block f32 scales vs f32), while error feedback keeps the *accumulated*
+update unbiased, so convergence matches uncompressed DP up to float noise
+(tested in tests/test_train.py).
+
+Used by the pipeline/hierarchical trainers where the cross-pod reduction is
+an explicit collective; within-pod reductions stay uncompressed (ICI is
+cheap; DCN between pods is not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import dequantize_blockwise, quantize_blockwise
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, error, axis: str, block: int = 256):
+    """Quantize (grads + error) to int8, psum, dequantize; returns
+    (reduced_grads, new_error).  Must run inside shard_map with `axis`."""
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_blockwise(g32, block)   # int8 payload + f32/block scale
+        deq = dequantize_blockwise(q, s, g.shape)
+        new_e = g32 - deq                       # error feedback residual
+        # int8 bytes on the wire: all_gather the quantized payloads (+tiny
+        # scales) and reduce locally — per-shard scales make a direct int8
+        # psum ill-defined, and this keeps the payload 4x smaller than an
+        # f32 psum.
+        qg = jax.lax.all_gather(q, axis)        # [P, ..., nb, block] int8
+        sg = jax.lax.all_gather(s, axis)        # [P, ..., nb, 1] f32
+        red_blocks = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+        # strip per-row block padding (NOT a flat slice)
+        red = red_blocks.reshape(*g.shape[:-1], -1)[..., : g.shape[-1]]
+        return red, new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree.unflatten(tree, [o[0] for o in outs])
+    err = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return red, err

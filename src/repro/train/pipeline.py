@@ -1,0 +1,94 @@
+"""GPipe-style pipeline parallelism over a `stage` mesh axis.
+
+The scanned period stack is split across stages (periods sharded over the
+`stage` axis); microbatches flow through stages via collective_permute, one
+hop per tick — T = M + S - 1 ticks for M microbatches over S stages.  The
+backward schedule emerges from differentiating the tick scan (ppermute's
+transpose is the reverse permute), i.e. classic GPipe fill/drain.
+
+Intended deployment: `pod` as the stage axis (DESIGN.md §6) — cross-pod
+links carry only the [mb, S, d] activation handoff per tick instead of
+whole-model gradient reductions; combine with train/compression.py for the
+remaining cross-pod traffic.
+
+This module is deliberately self-contained (pure function over the block
+stack); embedding/loss stay outside the pipelined region.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def _apply_local_periods(cfg: ModelConfig, local_blocks, x, positions):
+    """Apply this stage's share of the period stack (scan over periods)."""
+
+    def body(xc, pp):
+        y, _, _ = M._period_forward(cfg, pp, xc, positions, mode="train")
+        return y, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, local_blocks)
+    return x
+
+
+def pipeline_forward(
+    cfg: ModelConfig,
+    mesh,
+    blocks,            # stacked period params [num_periods, ...]
+    x: jax.Array,      # [B, S, d] embedded inputs (B % microbatches == 0)
+    positions,         # [B, S] int32
+    num_microbatches: int,
+    stage_axis: str = "stage",
+):
+    """Returns hidden [B, S, d] after the full stack, pipelined over stages."""
+    n_stages = mesh.shape[stage_axis]
+    if cfg.num_periods % n_stages:
+        raise ValueError("num_periods must divide over stages")
+    mb = x.shape[0] // num_microbatches
+    M_ = num_microbatches
+    T = M_ + n_stages - 1
+
+    def stage_fn(local_blocks, x_all, pos_all):
+        sid = jax.lax.axis_index(stage_axis)
+        xmb = x_all.reshape(M_, mb, *x_all.shape[1:])
+        pmb = pos_all.reshape(M_, mb, *pos_all.shape[1:])
+        fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            prev_out = carry                      # my output of last tick
+            recv = jax.lax.ppermute(prev_out, stage_axis, fwd_perm)
+            inject = xmb[jnp.clip(t, 0, M_ - 1)]
+            my_in = jnp.where(sid == 0, inject, recv)
+            pos_t = pmb[jnp.clip(t - sid, 0, M_ - 1)]
+            my_out = _apply_local_periods(cfg, local_blocks, my_in, pos_t)
+            return my_out, my_out
+
+        zeros = jnp.zeros((mb,) + x_all.shape[1:], x_all.dtype)
+        _, outs = jax.lax.scan(tick, zeros, jnp.arange(T))
+        # stage s produced microbatch (t - s) at tick t; only the LAST
+        # stage's outputs for t in [n_stages-1, T) are the model outputs.
+        valid = outs[n_stages - 1:]               # [M_, mb, S, d]
+        out = valid.reshape(x_all.shape)
+        # every stage computed `outs`; only the last stage's is meaningful —
+        # masked psum replicates it (ppermute cannot fan out 1 -> many).
+        last = n_stages - 1
+        out = jax.lax.psum(
+            jnp.where(sid == last, out, jnp.zeros_like(out)), stage_axis
+        )
+        return out
+
+    fn = jax.shard_map(
+        stage_fn,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(blocks, x, positions)

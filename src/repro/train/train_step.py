@@ -1,0 +1,144 @@
+"""Training step: chunked-vocab cross-entropy, grads, AdamW update.
+
+The loss never materializes the full [B, S, V] logits tensor: a scan over
+sequence chunks computes per-chunk logits + logsumexp and discards them
+(with remat this bounds the loss memory to [B, chunk, V] per device) —
+required for the 200k+ vocab configs at seq 4096.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.unroll import maybe_checkpoint, scan as maybe_unrolled_scan
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    loss_chunk: int = 512
+    lb_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+    remat: bool = True   # False: save all activations (no recompute pass —
+                         # one fewer FSDP weight re-gather; needs memory)
+
+
+def chunked_xent(params, cfg: ModelConfig, hidden, labels, chunk: int):
+    """Cross-entropy via scan over sequence chunks.
+
+    hidden: [B, S, d]; labels: [B, S] int32, -1 = masked.
+    Returns (sum_loss, num_valid).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:  # pad to a multiple (masked labels)
+        pad = chunk - s % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = hidden.shape[1]
+    nc = s // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, xs):
+        h, lab = xs
+        logits = M.logits_from_hidden(params, cfg, h)  # [B, chunk, V] f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lab, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = lab >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        sum_loss, n_valid = carry
+        return (sum_loss + jnp.sum(nll), n_valid + jnp.sum(valid)), None
+
+    # ALWAYS a lax.scan (even in the dry-run's unroll mode): the scan's AD
+    # accumulates the embedding/lm_head cotangents in the carry and
+    # all-reduces ONCE after the loop; unrolling would eagerly reduce per
+    # chunk and overstate production wire bytes ~8x.  The under-counted
+    # loss-matmul FLOPs are corrected analytically in benchmarks/roofline.
+    (sum_loss, n_valid), _ = jax.lax.scan(
+        maybe_checkpoint(body), (jnp.float32(0.0), jnp.int32(0)), (hs, ls)
+    )
+    return sum_loss, n_valid
+
+
+def make_loss_fn(cfg: ModelConfig, hp: TrainHParams):
+    def loss_fn(params, batch):
+        hidden, aux, _ = M.forward(params, cfg, batch, collect="train")
+        sum_loss, n_valid = chunked_xent(
+            params, cfg, hidden, batch["labels"], hp.loss_chunk
+        )
+        xent = sum_loss / jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+        total = xent + hp.lb_loss_weight * aux[0] + hp.z_loss_weight * aux[1]
+        metrics = {
+            "loss": total,
+            "xent": xent,
+            "lb_loss": aux[0],
+            "z_loss": aux[1],
+            "tokens": n_valid,
+        }
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                    hp: TrainHParams = TrainHParams()):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    jit with donated params/opt_state; shardings come from the surrounding
+    use_mesh context via constraints + param placement.
+    """
+    loss_fn = make_loss_fn(cfg, hp)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, om = opt.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_grad_accum_train_step(cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                               hp: TrainHParams, num_microbatches: int):
+    """Gradient-accumulation variant: batch [A, B/A, S] scanned."""
+    loss_fn = make_loss_fn(cfg, hp)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        def micro(carry, mb):
+            gsum, msum = carry
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            msum = msum + metrics["loss"]
+            return (gsum, msum), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (gsum, msum), _ = jax.lax.scan(
+            micro, (zeros, jnp.float32(0.0)), batch
+        )
+        grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+        params, opt_state, om = opt.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        om["loss"] = msum / num_microbatches
+        return params, opt_state, om
+
+    return step

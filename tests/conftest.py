@@ -1,0 +1,51 @@
+"""Shared test helpers.
+
+NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — smoke
+tests and benches must see 1 device.  Multi-device tests spawn subprocesses
+with their own XLA_FLAGS (see `run_in_subprocess`).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run python code in a fresh process with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def single_mesh():
+    import jax
+
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,93 @@
+"""CAN overlay geometry."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import multiprobe
+from repro.core.can import CanTopology, paper_topology
+
+
+def test_paper_topology():
+    t = paper_topology(6)
+    assert t.n_nodes == 64 and t.local_bits == 0 and t.buckets_per_node == 1
+    assert t.expected_lookup_hops == 3.0
+
+
+def test_zone_decomposition():
+    t = CanTopology(k=8, n_nodes=16)
+    assert t.node_bits == 4 and t.local_bits == 4
+    codes = np.arange(256, dtype=np.uint32)
+    nodes = t.node_of(codes)
+    locals_ = t.local_of(codes)
+    # roundtrip
+    assert all(
+        t.code_of(n, l) == c for c, n, l in zip(codes, nodes, locals_)
+    )
+    # contiguous prefix ranges
+    assert nodes[0] == 0 and nodes[255] == 15
+    assert np.all(np.diff(nodes.astype(int)) >= 0)
+
+
+def test_neighbors_differ_one_bit():
+    t = CanTopology(k=10, n_nodes=32)
+    for node in (0, 7, 31):
+        for nb in t.node_neighbors(node):
+            assert bin(int(nb) ^ node).count("1") == 1
+
+
+def test_neighbor_perm_is_matching():
+    t = CanTopology(k=6, n_nodes=8)
+    for bit in range(3):
+        perm = t.neighbor_perm(bit)
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert sorted(srcs) == list(range(8)) == sorted(dsts)
+        # involution
+        m = dict(perm)
+        assert all(m[m[s]] == s for s in srcs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 6))
+def test_lookup_hops_hamming(k, a):
+    a = min(a, k)
+    t = CanTopology(k=k, n_nodes=1 << a)
+    rng = np.random.default_rng(k * 31 + a)
+    s, d = rng.integers(0, t.n_nodes, 2)
+    assert t.lookup_hops(s, d) == bin(int(s) ^ int(d)).count("1")
+
+
+def test_bad_topology():
+    with pytest.raises(ValueError):
+        CanTopology(k=3, n_nodes=16)
+    with pytest.raises(ValueError):
+        CanTopology(k=4, n_nodes=6)
+
+
+def test_near_codes_properties(rng):
+    import jax.numpy as jnp
+
+    codes = jnp.asarray(rng.integers(0, 2**12, 20), jnp.uint32)
+    near = multiprobe.near_codes(codes, 12)
+    assert near.shape == (20, 12)
+    nc = np.asarray(near)
+    c = np.asarray(codes)
+    for i in range(20):
+        # each differs in exactly one bit, all distinct
+        dists = [bin(int(x) ^ int(c[i])).count("1") for x in nc[i]]
+        assert dists == [1] * 12
+        assert len(set(int(x) for x in nc[i])) == 12
+
+
+def test_probe_plan_sizes():
+    assert multiprobe.probe_plan_size(12, 4, "lsh") == 4
+    assert multiprobe.probe_plan_size(12, 4, "nb") == 52
+    assert multiprobe.probe_plan_size(12, 4, "cnb") == 52
+    assert multiprobe.probe_plan_size(12, 4, "cnb", num_probes=3) == 16
+
+
+def test_b_near_enumeration():
+    out = multiprobe.b_near_codes_host(0b1010, 4, 2)
+    assert len(out) == 6  # C(4,2)
+    assert all(bin(int(x) ^ 0b1010).count("1") == 2 for x in out)

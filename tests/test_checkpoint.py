@@ -1,0 +1,107 @@
+"""Checkpointing: atomic writes, checksums, elastic re-sharding."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree(rng):
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+                   "b": jnp.zeros((16,), jnp.bfloat16)},
+        "opt": {"count": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    d = ckpt.save(str(tmp_path), 10, tree, extra={"arch": "x"})
+    assert ckpt.verify(d)
+    restored = ckpt.restore(d, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    meta = ckpt.load_meta(d)
+    assert meta["step"] == 10 and meta["arch"] == "x"
+
+
+def test_latest_and_gc(tmp_path, rng):
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep_last=3)
+    latest = ckpt.latest_step_dir(str(tmp_path))
+    assert latest.endswith("step_00000005")
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_corruption_detected(tmp_path, rng):
+    tree = _tree(rng)
+    d = ckpt.save(str(tmp_path), 1, tree)
+    with open(os.path.join(d, "arrays.npz"), "r+b") as f:
+        f.seek(50)
+        f.write(b"\xde\xad")
+    assert not ckpt.verify(d)
+    with pytest.raises(IOError):
+        ckpt.restore(d, tree)
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    tree = _tree(rng)
+    d = ckpt.save(str(tmp_path), 1, tree)
+    bad = dict(tree)
+    bad["params"] = {"w": jnp.zeros((4, 4)), "b": tree["params"]["b"]}
+    with pytest.raises(ValueError):
+        ckpt.restore(d, bad)
+
+
+ELASTIC = r"""
+import numpy as np, jax, jax.numpy as jnp, sys, os
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.checkpoint import checkpoint as ckpt
+
+tmp = sys.argv[1]
+rng = np.random.default_rng(0)
+tree = {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}
+
+# write under a (4, 2) mesh sharding
+mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sharded = jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))
+d = ckpt.save(tmp, 1, {"w": sharded})
+
+# restore under a DIFFERENT mesh shape (2, 4) — elastic re-sharding
+mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+target = NamedSharding(mesh_b, P("data", "model"))
+restored = ckpt.restore(d, {"w": tree["w"]}, shardings={"w": target})
+assert restored["w"].sharding == target
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+print("ELASTIC-OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_resharding(tmp_path):
+    import subprocess
+    import sys
+    import textwrap
+
+    from conftest import SRC
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(ELASTIC), str(tmp_path)],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "ELASTIC-OK" in proc.stdout

@@ -1,0 +1,132 @@
+"""Distributed LSH runtime == reference engine (8 host devices, subprocess)."""
+
+import pytest
+
+from conftest import run_in_subprocess
+
+EQUIV = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import *
+from repro.core import distributed as dist
+from repro.core.store import build_store_host
+from repro.core.hashing import sketch_codes_batched
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(0)
+N, D, k, L, m = 3000, 64, 5, 3, 10
+params = LshParams(d=D, k=k, L=L, seed=3)
+H = make_hyperplanes(params)
+vecs = np.abs(rng.standard_normal((N, D))).astype(np.float32)
+vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+codes = sketch_codes_batched(jnp.asarray(vecs), H)
+store_host = build_store_host(codes, params.num_buckets, capacity=512,
+                              payload=vecs)
+B = 64
+q = vecs[rng.choice(N, B, replace=False)]
+ids_only = BucketStore(store_host.ids, store_host.timestamps,
+                       store_host.write_ptr, None)
+corpus = DenseCorpus(jnp.asarray(vecs))
+ref = {}
+for variant in ("lsh", "nb", "cnb"):
+    e = LshEngine(params, H, ids_only, corpus, None,
+                  EngineConfig(variant=variant))
+    ref[variant] = e.search(jnp.asarray(q), m=m)
+
+store_sh = dist.shard_store(mesh, store_host)
+for variant in ("lsh", "nb", "cnb"):
+    for routing in ("alltoall", "allgather"):
+        cfg = dist.DistConfig(params=params, n_shards=4, variant=variant,
+                              m=m, routing=routing, cap_factor=3.0)
+        args = [H, store_sh.ids, store_sh.payload]
+        if variant == "cnb" and cfg.node_bits > 0:
+            refresh = dist.make_refresh_cache(cfg, mesh)
+            ci, cp = refresh(store_sh.ids, store_sh.payload)
+            args += [ci, cp]
+        step = dist.make_search_step(cfg, mesh)
+        qd = jax.device_put(jnp.asarray(q),
+                            NamedSharding(mesh, P(("data", "model"), None)))
+        ids, sc = step(*args, qd)
+        ids = np.asarray(ids)
+        want = ref[variant]
+        for i in range(B):
+            assert set(ids[i][ids[i] >= 0]) == set(
+                want.ids[i][want.ids[i] >= 0]), (variant, routing, i)
+print("EQUIV-OK")
+"""
+
+INSERT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import *
+from repro.core import distributed as dist
+from repro.core.store import make_store
+from repro.core import hashing
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(1)
+N, D, k, L = 256, 32, 5, 2
+params = LshParams(d=D, k=k, L=L, seed=9)
+H = make_hyperplanes(params)
+cfg = dist.DistConfig(params=params, n_shards=4, variant="cnb", m=5)
+store = make_store(L, params.num_buckets, 512, payload_dim=D)
+store = dist.shard_store(mesh, store)
+vecs = np.abs(rng.standard_normal((N, D))).astype(np.float32)
+vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+insert = dist.make_insert_step(cfg, mesh)
+vd = jax.device_put(jnp.asarray(vecs),
+                    NamedSharding(mesh, P(("data", "model"), None)))
+vid = jax.device_put(jnp.arange(N, dtype=jnp.int32),
+                     NamedSharding(mesh, P(("data", "model"))))
+store = insert(H, store, vd, vid, jnp.int32(1))
+# every vector must be present in its bucket in every table
+codes = np.asarray(hashing.sketch_codes(jnp.asarray(vecs), H))
+ids = np.asarray(store.ids)
+ok = 0
+for i in range(N):
+    for l in range(L):
+        b = int(codes[i, l])
+        ok += int(i in set(ids[l, b][ids[l, b] >= 0]))
+assert ok == N * L, (ok, N * L)
+# payload integrity: stored vector equals the original
+payload = np.asarray(store.payload)
+b0 = int(codes[0, 0])
+slot = int(np.where(ids[0, b0] == 0)[0][0])
+assert np.allclose(payload[0, b0, slot], vecs[0], atol=1e-6)
+print("INSERT-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_equals_reference():
+    out = run_in_subprocess(EQUIV, devices=8)
+    assert "EQUIV-OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_insert_then_search():
+    out = run_in_subprocess(INSERT, devices=8)
+    assert "INSERT-OK" in out
+
+
+def test_byte_estimates():
+    from repro.core import LshParams
+    from repro.core.distributed import DistConfig, estimate_query_bytes
+
+    params = LshParams(d=128, k=12, L=4)
+    a2a = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="cnb",
+                   routing="alltoall"), batch=4096, d=128, n_total=256)
+    ag = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="cnb",
+                   routing="allgather"), batch=4096, d=128, n_total=256)
+    # routed all_to_all must move fewer query bytes than all_gather
+    assert a2a["query_routing"] < ag["query_routing"]
+    # nb pays neighbor traffic, cnb doesn't
+    nb = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="nb",
+                   routing="alltoall"), batch=4096, d=128, n_total=256)
+    assert nb["neighbor"] > 0
+    assert a2a["neighbor"] == 0

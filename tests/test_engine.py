@@ -1,0 +1,117 @@
+"""Reference engine: Algorithms 1-2, Table-1 costs, Layered equivalence."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BucketStore, DenseCorpus, EngineConfig, LshEngine, LshParams,
+    make_hyperplanes, paper_topology,
+)
+from repro.core import layered as lay
+from repro.core import hashing
+from repro.core.store import build_store_host
+from repro.core.engine import dedupe_topk
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(7)
+    N, D, k, L = 3000, 48, 6, 3
+    params = LshParams(d=D, k=k, L=L, seed=11)
+    h = make_hyperplanes(params)
+    vecs = np.abs(rng.standard_normal((N, D))).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    codes = np.asarray(hashing.sketch_codes(jnp.asarray(vecs), h))
+    store = build_store_host(codes, params.num_buckets, capacity=256)
+    corpus = DenseCorpus(jnp.asarray(vecs))
+    topo = paper_topology(k)
+    q = jnp.asarray(vecs[:64])
+    return params, h, store, corpus, topo, q, vecs
+
+
+def _engine(setup, variant, **kw):
+    params, h, store, corpus, topo, q, _ = setup
+    return LshEngine(params, h, store, corpus, topo,
+                     EngineConfig(variant=variant, **kw))
+
+
+def test_nb_equals_cnb_results(setup):
+    q = setup[5]
+    r_nb = _engine(setup, "nb").search(q, m=10)
+    r_cnb = _engine(setup, "cnb").search(q, m=10)
+    assert np.array_equal(r_nb.ids, r_cnb.ids)
+    # but costs differ per Table 1
+    assert r_nb.cost.messages == 3 * r_cnb.cost.messages
+
+
+def test_nb_candidates_superset_of_lsh(setup):
+    q = setup[5]
+    r_lsh = _engine(setup, "lsh").search(q, m=10)
+    r_nb = _engine(setup, "nb").search(q, m=10)
+    # every LSH hit must appear in NB's candidate pool: its top-m scores
+    # cannot be worse
+    lsh_min = np.where(np.isfinite(r_lsh.scores), r_lsh.scores, 0).sum(1)
+    nb_min = np.where(np.isfinite(r_nb.scores), r_nb.scores, 0).sum(1)
+    assert np.all(nb_min >= lsh_min - 1e-5)
+
+
+def test_simulated_messages_match_table1(setup):
+    q = setup[5]
+    for variant in ("lsh", "nb", "cnb"):
+        e = _engine(setup, variant)
+        r = e.search(q, m=10, simulate_messages=True,
+                     rng=np.random.default_rng(3))
+        # expected-hops simulation converges to the closed form
+        assert abs(r.sim_messages - r.cost.messages) < 0.15 * r.cost.messages
+
+
+def test_self_exclusion(setup):
+    q = setup[5]
+    e = _engine(setup, "cnb")
+    r = e.search(q, m=10, exclude=np.arange(64))
+    assert not np.any(r.ids == np.arange(64)[:, None])
+
+
+def test_contains_probability_reasonable(setup):
+    """The empirical success probability of finding a 1-near neighbor's id
+    must be >= LSH's (more buckets searched)."""
+    params, h, store, corpus, topo, q, vecs = setup
+    rng = np.random.default_rng(5)
+    targets = rng.integers(0, vecs.shape[0], size=64)
+    p_lsh = _engine(setup, "lsh").contains(q, targets).mean()
+    p_nb = _engine(setup, "nb").contains(q, targets).mean()
+    assert p_nb >= p_lsh
+
+
+def test_ranked_probes_subset(setup):
+    """Beyond-paper: probing p < k margin-ranked near buckets costs less
+    and finds at least what unranked p probes find on average."""
+    q = setup[5]
+    e_full = _engine(setup, "cnb")
+    e_p2 = _engine(setup, "cnb", num_probes=2, ranked_probes=True)
+    assert e_p2.probes_per_table == 3
+    assert e_full.probes_per_table == 7
+    r = e_p2.search(q, m=10)
+    assert r.ids.shape == (64, 10)
+
+
+def test_dedupe_topk():
+    ids = jnp.asarray([[3, 1, 3, 2, -1]])
+    scores = jnp.asarray([[0.5, 0.9, 0.5, 0.7, 100.0]])
+    top_i, top_s = dedupe_topk(ids, scores, 3)
+    assert np.asarray(top_i).tolist() == [[1, 2, 3]]
+    assert np.allclose(np.asarray(top_s), [[0.9, 0.7, 0.5]])
+
+
+def test_layered_equivalence(setup):
+    """Sec. 5.2: Hamming-LSH over cosine sketches == cosine-LSH(k_node)."""
+    params, h, store, corpus, topo, q, vecs = setup
+    lp = lay.LayeredParams(inner=params, k_node=4, seed=3)
+    sel = lay.make_bit_selection(lp)
+    node_of = lay.layered_node_of(q, lp, h, sel)
+    h_eq = lay.equivalent_hyperplanes(lp, h, sel)
+    direct = hashing.sketch_codes(q, h_eq)
+    assert np.array_equal(np.asarray(node_of), np.asarray(direct))

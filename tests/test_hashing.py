@@ -1,0 +1,87 @@
+"""LSH hashing invariants (paper Eq. 3-5)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.hashing import LshParams
+
+
+def test_pack_unpack_roundtrip(rng):
+    bits = jnp.asarray(rng.random((50, 3, 17)) > 0.5)
+    codes = hashing.pack_bits(bits)
+    assert codes.dtype == jnp.uint32
+    back = hashing.unpack_bits(codes, 17)
+    assert np.array_equal(np.asarray(back), np.asarray(bits))
+
+
+def test_sketch_codes_shape_and_range(rng):
+    params = LshParams(d=32, k=8, L=5, seed=1)
+    h = hashing.make_hyperplanes(params)
+    x = jnp.asarray(rng.standard_normal((40, 32)), jnp.float32)
+    codes = hashing.sketch_codes(x, h)
+    assert codes.shape == (40, 5)
+    assert int(codes.max()) < 2**8
+
+
+def test_collision_probability_matches_similarity(rng):
+    """Pr[h(u)=h(v)] == angular similarity — the defining LSH property,
+    estimated over many independent hyperplanes (k*L bits)."""
+    params = LshParams(d=64, k=20, L=100, seed=3)  # 2000 bits
+    h = hashing.make_hyperplanes(params)
+    for target_cos in (0.2, 0.5, 0.9):
+        u = rng.standard_normal(64)
+        # construct v at the desired cosine from u
+        r = rng.standard_normal(64)
+        r -= (r @ u) / (u @ u) * u
+        v = target_cos * u / np.linalg.norm(u) + np.sqrt(1 - target_cos**2) * (
+            r / np.linalg.norm(r)
+        )
+        bits_u = hashing.sketch_bits(jnp.asarray(u, jnp.float32), h)
+        bits_v = hashing.sketch_bits(jnp.asarray(v, jnp.float32), h)
+        match = float(np.mean(np.asarray(bits_u) == np.asarray(bits_v)))
+        expected = float(
+            hashing.collision_probability(
+                jnp.asarray(u, jnp.float32), jnp.asarray(v, jnp.float32)
+            )
+        )
+        assert abs(match - expected) < 0.03, (target_cos, match, expected)
+
+
+def test_popcount_matches_python(rng):
+    xs = rng.integers(0, 2**32, size=200, dtype=np.uint32)
+    got = np.asarray(hashing.popcount32(jnp.asarray(xs)))
+    want = np.array([bin(int(x)).count("1") for x in xs])
+    assert np.array_equal(got, want)
+
+
+def test_hamming_distance(rng):
+    a = rng.integers(0, 2**32, size=100, dtype=np.uint32)
+    b = rng.integers(0, 2**32, size=100, dtype=np.uint32)
+    got = np.asarray(hashing.hamming_distance(jnp.asarray(a), jnp.asarray(b)))
+    want = np.array([bin(int(x) ^ int(y)).count("1") for x, y in zip(a, b)])
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 2**30 - 1))
+def test_pack_bits_inverse_property(k, value):
+    value = value % (1 << k)
+    bits = hashing.unpack_bits(jnp.uint32(value), k)
+    assert int(hashing.pack_bits(bits)) == value
+
+
+def test_normalize():
+    x = jnp.asarray([[3.0, 4.0], [0.0, 0.0]])
+    n = hashing.normalize(x)
+    assert np.allclose(np.asarray(n[0]), [0.6, 0.8])
+    assert np.all(np.isfinite(np.asarray(n)))
+
+
+def test_params_validation():
+    with pytest.raises(ValueError):
+        LshParams(d=10, k=31, L=1)
+    with pytest.raises(ValueError):
+        LshParams(d=10, k=4, L=0)

@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize(
+    "n,d,L,k",
+    [(100, 512, 4, 12), (7, 64, 2, 6), (300, 1000, 3, 30),
+     (256, 2048, 8, 15), (1, 128, 1, 1), (33, 96, 5, 10)],
+)
+def test_simhash_matches_ref(rng, n, d, L, k):
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((L, k, d)), jnp.float32)
+    got = ops.simhash(x, h)
+    want = ref.simhash_ref(x, h)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_simhash_dtypes(rng, dtype):
+    x = jnp.asarray(rng.standard_normal((64, 256)), dtype)
+    h = jnp.asarray(rng.standard_normal((2, 8, 256)), dtype)
+    got = ops.simhash(x, h)
+    want = ref.simhash_ref(x, h)
+    # bf16 rounding can flip signs on near-zero projections; codes must
+    # still agree on ~all entries (discrete_boundary tolerance)
+    frac = np.mean(np.asarray(got) == np.asarray(want))
+    assert frac > 0.97
+
+
+@pytest.mark.parametrize(
+    "b,kc,d,m",
+    [(16, 200, 64, 10), (3, 50, 32, 5), (8, 128, 256, 10),
+     (1, 7, 16, 3), (40, 333, 48, 10)],
+)
+def test_bucket_topk_matches_ref(rng, b, kc, d, m):
+    q = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    cand = jnp.asarray(rng.standard_normal((b, kc, d)), jnp.float32)
+    valid = jnp.asarray(rng.random((b, kc)) > 0.3)
+    gs, gi = ops.bucket_topk(q, cand, valid, m)
+    ws, wi = ref.bucket_topk_ref(q, cand, valid, m)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_bucket_topk_all_invalid(rng):
+    q = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    cand = jnp.asarray(rng.standard_normal((4, 20, 32)), jnp.float32)
+    valid = jnp.zeros((4, 20), bool)
+    gs, gi = ops.bucket_topk(q, cand, valid, 5)
+    assert np.all(np.asarray(gi) == -1)
+    assert np.all(np.isneginf(np.asarray(gs)))
+
+
+def test_bucket_topk_duplicate_scores_tiebreak(rng):
+    """Ties break to the lowest candidate index in both kernel and ref."""
+    q = jnp.ones((2, 16), jnp.float32)
+    cand = jnp.ones((2, 30, 16), jnp.float32)  # all identical scores
+    valid = jnp.ones((2, 30), bool)
+    gs, gi = ops.bucket_topk(q, cand, valid, 4)
+    ws, wi = ref.bucket_topk_ref(q, cand, valid, 4)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.asarray(gi).tolist() == [[0, 1, 2, 3]] * 2
+
+
+@pytest.mark.parametrize("n,kc", [(100, 50), (7, 200), (256, 128), (1, 1)])
+def test_hamming_matches_ref(rng, n, kc):
+    c = jnp.asarray(rng.integers(0, 2**31, (n,)), jnp.uint32)
+    cc = jnp.asarray(rng.integers(0, 2**31, (n, kc)), jnp.uint32)
+    got = ops.hamming(c, cc)
+    want = ref.hamming_ref(c, cc)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_simhash_agrees_with_core_hashing(rng):
+    """The kernel and repro.core.hashing must produce identical codes."""
+    from repro.core import hashing
+    from repro.core.hashing import LshParams
+
+    params = LshParams(d=128, k=14, L=3, seed=5)
+    h = hashing.make_hyperplanes(params)
+    x = jnp.asarray(rng.standard_normal((50, 128)), jnp.float32)
+    core = hashing.sketch_codes(x, h)
+    kern = ops.simhash(x, h)
+    assert np.array_equal(np.asarray(core), np.asarray(kern))

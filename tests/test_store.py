@@ -1,0 +1,114 @@
+"""Bucket store: insert/refresh/GC lifecycle (paper Sec. 4.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import store as st_mod
+from repro.core.store import build_store_host, expire, insert_batch, make_store
+
+
+def _occupied(store, l, b):
+    ids = np.asarray(store.ids[l, b])
+    return set(int(x) for x in ids if x >= 0)
+
+
+def test_insert_batch_basic(rng):
+    store = make_store(num_tables=2, num_buckets=8, capacity=4)
+    ids = jnp.arange(6, dtype=jnp.int32)
+    codes = jnp.asarray(rng.integers(0, 8, (6, 2)), jnp.uint32)
+    store = insert_batch(store, ids, codes, jnp.int32(1))
+    for l in range(2):
+        for i in range(6):
+            b = int(codes[i, l])
+            assert int(ids[i]) in _occupied(store, l, b)
+
+
+def test_ring_buffer_eviction():
+    store = make_store(num_tables=1, num_buckets=2, capacity=3)
+    # 5 entries into one bucket of capacity 3: keeps the last 3
+    ids = jnp.arange(5, dtype=jnp.int32)
+    codes = jnp.zeros((5, 1), jnp.uint32)
+    store = insert_batch(store, ids, codes, jnp.int32(0))
+    assert _occupied(store, 0, 0) == {2, 3, 4}
+
+
+def test_refresh_overwrites_slots():
+    store = make_store(num_tables=1, num_buckets=4, capacity=8)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    codes = jnp.ones((4, 1), jnp.uint32)
+    store = insert_batch(store, ids, codes, jnp.int32(0))
+    store = insert_batch(store, ids, codes, jnp.int32(5))
+    # same ids re-announced: occupancy can't exceed capacity, ts refreshed
+    assert int(jnp.max(store.timestamps[0, 1])) == 5
+
+
+def test_expire_gc():
+    store = make_store(num_tables=1, num_buckets=4, capacity=4)
+    store = insert_batch(
+        store, jnp.arange(3, dtype=jnp.int32),
+        jnp.zeros((3, 1), jnp.uint32), jnp.int32(0),
+    )
+    store = insert_batch(
+        store, jnp.arange(3, 4, dtype=jnp.int32),
+        jnp.zeros((1, 1), jnp.uint32), jnp.int32(10),
+    )
+    store = expire(store, jnp.int32(12), ttl=5)
+    assert _occupied(store, 0, 0) == {3}
+
+
+def test_insert_masked_drops_invalid():
+    store = make_store(num_tables=1, num_buckets=4, capacity=4)
+    ids = jnp.asarray([5, -1, 7], jnp.int32)
+    buckets = jnp.asarray([1, 2, 1], jnp.uint32)
+    store = st_mod.insert_masked(store, 0, ids, buckets, jnp.int32(0))
+    assert _occupied(store, 0, 1) == {5, 7}
+    assert _occupied(store, 0, 2) == set()
+
+
+def test_build_host_matches_streaming(rng):
+    n, nb, cap, T = 60, 8, 16, 3
+    codes = rng.integers(0, nb, (n, T)).astype(np.uint32)
+    built = build_store_host(codes, nb, cap)
+    streamed = make_store(T, nb, cap)
+    streamed = insert_batch(
+        streamed, jnp.arange(n, dtype=jnp.int32), jnp.asarray(codes),
+        jnp.int32(0),
+    )
+    for l in range(T):
+        for b in range(nb):
+            assert _occupied(built, l, b) == _occupied(streamed, l, b), (l, b)
+
+
+def test_payload_store(rng):
+    store = make_store(1, 4, 4, payload_dim=8)
+    vecs = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    store = insert_batch(
+        store, jnp.arange(3, dtype=jnp.int32),
+        jnp.asarray([[0], [0], [1]], jnp.uint32), jnp.int32(0), vecs,
+    )
+    ids0 = np.asarray(store.ids[0, 0])
+    slot = int(np.where(ids0 == 1)[0][0])
+    assert np.allclose(np.asarray(store.payload[0, 0, slot]), np.asarray(vecs[1]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 40), st.integers(1, 4), st.integers(2, 8),
+    st.integers(2, 8), st.integers(0, 2**31 - 1),
+)
+def test_insert_never_loses_recent_entries(n, T, nb_pow, cap, seed):
+    """Property: after inserting a batch, every bucket holds the LAST
+    min(cap, count) ids routed to it, in insertion order."""
+    nb = 1 << (nb_pow - 1)
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, nb, (n, T)).astype(np.uint32)
+    store = make_store(T, nb, cap)
+    store = insert_batch(
+        store, jnp.arange(n, dtype=jnp.int32), jnp.asarray(codes), jnp.int32(0)
+    )
+    for l in range(T):
+        for b in range(nb):
+            routed = [i for i in range(n) if codes[i, l] == b]
+            expect = set(routed[-cap:])
+            assert _occupied(store, l, b) == expect

@@ -1,0 +1,167 @@
+"""End-to-end behaviour tests: the paper's system working as a whole.
+
+Covers: (1) the full search pipeline on a synthetic OSN dataset with the
+paper's headline result (CNB beats LSH at equal network cost); (2) the
+training driver with checkpoint/restart (fault-tolerance path); (3) the
+serving driver; (4) model-embeddings -> LSH index integration (the
+framework feature of DESIGN.md Sec. 4).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DenseCorpus, EngineConfig, LshEngine, LshParams, make_hyperplanes,
+    metrics, paper_topology,
+)
+from repro.core.corpus import exact_topk_sparse, sparse_densify_host
+from repro.core.hashing import sketch_codes_batched
+from repro.core.store import build_store_host
+from repro.data import osn
+
+
+@pytest.fixture(scope="module")
+def tiny_osn():
+    spec = osn.tiny_spec()
+    corpus = osn.generate(spec)
+    params = LshParams(d=spec.num_interests, k=spec.k, L=4, seed=7)
+    h = make_hyperplanes(params)
+    dense = sparse_densify_host(corpus, np.arange(corpus.n))
+    codes = sketch_codes_batched(jnp.asarray(dense), h)
+    store = build_store_host(codes, params.num_buckets, capacity=128)
+    return spec, corpus, params, h, dense, store
+
+
+def test_paper_headline_cnb_beats_lsh_at_equal_cost(tiny_osn):
+    """The paper's core claim (Sec. 6.4): at equal message budget, CNB-LSH
+    achieves higher recall and NCS than plain LSH."""
+    spec, corpus, params, h, dense, store = tiny_osn
+    topo = paper_topology(spec.k)
+    nq = 48
+    qidx = np.arange(nq)
+    qd = dense[qidx] / np.maximum(
+        np.linalg.norm(dense[qidx], axis=1, keepdims=True), 1e-12)
+
+    ideal_s, ideal_i = exact_topk_sparse(corpus, qd, 11)
+    # drop self from the ideal set
+    keep_s = np.empty((nq, 10), np.float32)
+    keep_i = np.empty((nq, 10), np.int32)
+    for i in range(nq):
+        mask = ideal_i[i] != qidx[i]
+        keep_s[i] = ideal_s[i][mask][:10]
+        keep_i[i] = ideal_i[i][mask][:10]
+
+    results = {}
+    for variant in ("lsh", "cnb"):
+        e = LshEngine(params, h, store, corpus, topo,
+                      EngineConfig(variant=variant))
+        r = e.search(jnp.asarray(qd), m=10, exclude=qidx)
+        results[variant] = dict(
+            recall=metrics.recall_at_m(r.ids, keep_i),
+            ncs=metrics.ncs_at_m(r.scores, keep_s),
+            messages=r.cost.messages,
+        )
+    assert results["cnb"]["messages"] == results["lsh"]["messages"]
+    assert results["cnb"]["recall"] > results["lsh"]["recall"]
+    assert results["cnb"]["ncs"] >= results["lsh"]["ncs"] - 1e-9
+
+
+def test_success_probability_tracks_analysis(tiny_osn):
+    """Fig. 4: observed success probability follows Prop. 1/4 curves."""
+    from repro.core import analysis
+
+    spec, corpus, params, h, dense, store = tiny_osn
+    topo = paper_topology(spec.k)
+    nq = 200
+    rng = np.random.default_rng(3)
+    qidx = rng.choice(corpus.n, nq, replace=False)
+    qd = dense[qidx] / np.maximum(
+        np.linalg.norm(dense[qidx], axis=1, keepdims=True), 1e-12)
+    ideal_s, ideal_i = exact_topk_sparse(corpus, qd, 2)
+    # top non-self result
+    y = np.where(ideal_i[:, 0] == qidx, ideal_i[:, 1], ideal_i[:, 0])
+    y_sim = np.where(ideal_i[:, 0] == qidx, ideal_s[:, 1], ideal_s[:, 0])
+
+    for variant, spf in (("lsh", analysis.sp_lsh),
+                         ("nb", analysis.sp_nearbucket)):
+        e = LshEngine(params, h, store, corpus, topo,
+                      EngineConfig(variant=variant))
+        found = e.contains(jnp.asarray(qd), y)
+        s_ang = analysis.angular_from_cosine(np.clip(y_sim, 0, 1))
+        expected = spf(s_ang, params.k, params.L)
+        # mean observed success within a sane band of mean analytical SP
+        assert abs(found.mean() - expected.mean()) < 0.15, (
+            variant, found.mean(), expected.mean())
+
+
+def test_train_driver_with_restart(tmp_path):
+    """Train 4 steps with checkpoints, stop, resume to 6 — the
+    fault-tolerant restart path of launch/train.py."""
+    from repro.launch import train as train_mod
+
+    ckpt_dir = str(tmp_path / "ck")
+    train_mod.main([
+        "--arch", "starcoder2-7b", "--smoke", "--steps", "4",
+        "--batch", "2", "--seq", "32", "--ckpt-dir", ckpt_dir,
+        "--ckpt-every", "2", "--log-every", "2",
+    ])
+    train_mod.main([
+        "--arch", "starcoder2-7b", "--smoke", "--steps", "6",
+        "--batch", "2", "--seq", "32", "--ckpt-dir", ckpt_dir,
+        "--ckpt-every", "2", "--log-every", "2", "--resume",
+    ])
+    from repro.checkpoint import checkpoint as ckpt
+
+    latest = ckpt.latest_step_dir(ckpt_dir)
+    assert ckpt.load_meta(latest)["step"] == 6
+
+
+def test_serve_driver(capsys):
+    from repro.launch import serve as serve_mod
+
+    serve_mod.main([
+        "--arch", "gemma2-2b", "--smoke", "--batch", "2",
+        "--prompt-len", "16", "--gen", "4",
+    ])
+    out = capsys.readouterr().out
+    assert "[done]" in out
+
+
+def test_model_embeddings_to_lsh_index(single_mesh):
+    """Framework integration: embed 'users' with an assigned arch backbone,
+    index with LSH, search — similar users (shared token prefix) retrieved."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models import sharding as sh
+
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    params, _ = M.init_model(cfg, 0)
+    rng = np.random.default_rng(0)
+    n_users, seq = 96, 12
+    # users in 8 communities share a 6-token prefix
+    comm = rng.integers(0, 8, n_users)
+    toks = rng.integers(0, cfg.vocab_size, (n_users, seq))
+    prefix = rng.integers(0, cfg.vocab_size, (8, 6))
+    toks[:, :6] = prefix[comm]
+    with sh.use_mesh(single_mesh):
+        hidden, _, _ = M.forward(
+            params, cfg, {"tokens": jnp.asarray(toks, jnp.int32)})
+    emb = np.array(hidden.mean(axis=1), np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+
+    params_lsh = LshParams(d=emb.shape[1], k=5, L=4, seed=2)
+    h = make_hyperplanes(params_lsh)
+    codes = sketch_codes_batched(jnp.asarray(emb), h)
+    store = build_store_host(codes, params_lsh.num_buckets, capacity=64)
+    e = LshEngine(params_lsh, h, store, DenseCorpus(jnp.asarray(emb)), None,
+                  EngineConfig(variant="cnb"))
+    r = e.search(jnp.asarray(emb[:16]), m=5, exclude=np.arange(16))
+    total = match = 0
+    for i in range(16):
+        for j in r.ids[i]:
+            if j >= 0:
+                total += 1
+                match += int(comm[j] == comm[i])
+    assert total > 0 and match / total > 0.6, (match, total)
