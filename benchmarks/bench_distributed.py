@@ -25,9 +25,8 @@ def rows():
         n_model = 2
     else:
         n_model = 1
-    mesh = jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((n_data, n_model), ("data", "model"))
     params = LshParams(d=128, k=8, L=4, seed=0)
     H = make_hyperplanes(params)
     store = make_store(params.L, params.num_buckets, 64, payload_dim=128)

@@ -1,8 +1,12 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
 
-On this CPU host the numbers measure the jit'd oracle (the kernels run in
-interpret mode and are NOT representative); the derived column records the
-validated tile shapes that the TPU path will use."""
+On this CPU host the Pallas kernels execute in interpret mode, so their
+absolute numbers are NOT representative of the TPU path — the oracle rows
+measure the jit'd reference, the kernel rows validate the exact tile shapes
+the TPU path will use, and the `query_path/*` rows compare the end-to-end
+fused engine dispatch (sketch -> stacked gather -> bucket_topk) against the
+reference engine on identical inputs, reporting the measured ratio rather
+than asserting a speedup."""
 
 import time
 
@@ -14,7 +18,6 @@ from repro.kernels import ops, ref
 
 
 def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
     out = f(*args)
     jax.block_until_ready(out)
     t0 = time.time()
@@ -22,6 +25,48 @@ def _time(f, *args, reps=5):
         out = f(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / reps * 1e6
+
+
+def _query_path_rows():
+    """End-to-end single-host query path: reference vs use_kernels engine."""
+    from repro.core import (
+        DenseCorpus, EngineConfig, LshEngine, LshParams, make_hyperplanes,
+    )
+    from repro.core import hashing
+    from repro.core.store import build_store_host
+
+    rng = np.random.default_rng(0)
+    N, D, k, L, B, m = 20000, 128, 8, 4, 256, 10
+    params = LshParams(d=D, k=k, L=L, seed=0)
+    h = make_hyperplanes(params)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    codes = np.asarray(hashing.sketch_codes(jnp.asarray(vecs), h))
+    store = build_store_host(codes, params.num_buckets, capacity=64)
+    corpus = DenseCorpus(jnp.asarray(vecs))
+    q = jnp.asarray(vecs[:B])
+
+    def bench(cfg):
+        eng = LshEngine(params, h, store, corpus, None, cfg)
+        eng.search(q, m=m)  # warm up / compile
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            eng.search(q, m=m)
+        return (time.time() - t0) / reps * 1e6
+
+    us_ref = bench(EngineConfig(variant="cnb", chunk=64))
+    us_ker = bench(EngineConfig(variant="cnb", chunk=64, use_kernels=True))
+    qps_ref = B / (us_ref / 1e6)
+    qps_ker = B / (us_ker / 1e6)
+    shared = f"B={B};N={N};D={D};k={k};L={L};m={m}"
+    return [
+        (f"kernels/query_path_reference_{B}q", us_ref,
+         f"qps={qps_ref:.0f};{shared}"),
+        (f"kernels/query_path_kernels_{B}q", us_ker,
+         f"qps={qps_ker:.0f};kernel_over_ref={us_ref / us_ker:.3f}x;"
+         f"mode=interpret;{shared}"),
+    ]
 
 
 def rows():
@@ -33,6 +78,9 @@ def rows():
     us = _time(ref_fn, x, h)
     out.append(("kernels/simhash_oracle_4096x512xL4k12", us,
                 "tile=(256,512)xLK128;validated=interpret"))
+    us = _time(lambda a, b: ops.simhash(a, b), x, h)
+    out.append(("kernels/simhash_pallas_4096x512xL4k12", us,
+                "tile=(256,512)xLK128;mode=interpret"))
 
     q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
     cand = jnp.asarray(rng.standard_normal((64, 832, 128)), jnp.float32)
@@ -41,6 +89,9 @@ def rows():
     us = _time(ref_fn2, q, cand, valid)
     out.append(("kernels/bucket_topk_oracle_64x832x128_m10", us,
                 "tile=(8,KC,128);unrolled_m=10;validated=interpret"))
+    us = _time(lambda a, b, c: ops.bucket_topk(a, b, c, 10), q, cand, valid)
+    out.append(("kernels/bucket_topk_pallas_64x832x128_m10", us,
+                "tile=(8,KC,128);unrolled_m=10;mode=interpret"))
 
     c = jnp.asarray(rng.integers(0, 2**31, (4096,)), jnp.uint32)
     cc = jnp.asarray(rng.integers(0, 2**31, (4096, 128)), jnp.uint32)
@@ -48,4 +99,6 @@ def rows():
     us = _time(ref_fn3, c, cc)
     out.append(("kernels/hamming_oracle_4096x128", us,
                 "tile=(256,128);swar_popcount;validated=interpret"))
+
+    out.extend(_query_path_rows())
     return out

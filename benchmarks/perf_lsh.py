@@ -73,6 +73,10 @@ def rows():
         ("D_alltoall_cnb_p4", dict(variant="cnb", routing="alltoall",
                                    num_probes=4)),
         ("E_alltoall_lsh", dict(variant="lsh", routing="alltoall")),
+        # the kernel-backed per-shard score/top-m (same wire bytes as B —
+        # the fused Pallas stage changes compute only, not routing)
+        ("F_alltoall_cnb_kernels", dict(variant="cnb", routing="alltoall",
+                                        use_kernels=True)),
     ]
     out = []
     for name, kw in variants:

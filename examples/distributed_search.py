@@ -23,8 +23,8 @@ from repro.core.store import build_store_host                 # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     N, D = 20_000, 128
     params = LshParams(d=D, k=7, L=4, seed=3)

@@ -25,8 +25,8 @@ from repro.models import sharding as sh
 def main():
     cfg = get_config("gemma2-2b", smoke=True)
     params, _ = M.init_model(cfg, seed=0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(0)
 
     n_users, seq, n_comm = 512, 16, 16

@@ -32,10 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing
+from repro import compat
+from repro.core import hashing, scoring
 from repro.core.can import CanTopology
-from repro.core.engine import dedupe_topk
 from repro.core.hashing import LshParams
+from repro.core.scoring import dedupe_topk
 from repro.core.store import BucketStore
 
 NEG_INF = float("-inf")
@@ -50,6 +51,7 @@ class DistConfig:
     routing: str = "alltoall"     # alltoall | allgather
     cap_factor: float = 2.0       # per-destination buffer slack (alltoall)
     probe_local_near: bool = True  # search local-bit near buckets (nb/cnb)
+    use_kernels: bool = False      # fused Pallas score/top-m on each shard
 
     @property
     def topo(self) -> CanTopology:
@@ -104,9 +106,9 @@ def _score_local(
     r = q.shape[0]
     cand_ids = cand_ids.reshape(r, -1)
     cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
-    scores = jnp.einsum("rkd,rd->rk", cand_vec, q)
-    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
-    return dedupe_topk(cand_ids, scores, m)
+    return scoring.score_topk(
+        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
+    )
 
 
 def _score_cache(
@@ -131,9 +133,9 @@ def _score_cache(
     r = q.shape[0]
     cand_ids = cand_ids.reshape(r, -1)
     cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
-    scores = jnp.einsum("rkd,rd->rk", cand_vec, q)
-    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
-    return dedupe_topk(cand_ids, scores, m)
+    return scoring.score_topk(
+        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
+    )
 
 
 # -----------------------------------------------------------------------------
@@ -357,7 +359,7 @@ def make_refresh_cache(cfg: DistConfig, mesh):
             outs_p.append(jax.lax.ppermute(payload, "model", perm))
         return jnp.stack(outs_i, axis=1), jnp.stack(outs_p, axis=1)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         _refresh,
         mesh=mesh,
         in_specs=(P(None, "model", None), P(None, "model", None, None)),
@@ -365,7 +367,6 @@ def make_refresh_cache(cfg: DistConfig, mesh):
             P(None, None, "model", None),
             P(None, None, "model", None, None),
         ),
-        check_vma=False,
     )
     return jax.jit(fn)
 
@@ -388,24 +389,22 @@ def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
         def step(hyperplanes, ids, payload, c_ids, c_payload, q):
             return _search_shard(cfg, hyperplanes, ids, payload, c_ids, c_payload, q)
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             step,
             mesh=mesh,
             in_specs=(P(), store_i, store_p, cache_i, cache_p, qspec),
             out_specs=(P(batch_axes, None), P(batch_axes, None)),
-            check_vma=False,
         )
     else:
 
         def step(hyperplanes, ids, payload, q):
             return _search_shard(cfg, hyperplanes, ids, payload, None, None, q)
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             step,
             mesh=mesh,
             in_specs=(P(), store_i, store_p, qspec),
             out_specs=(P(batch_axes, None), P(batch_axes, None)),
-            check_vma=False,
         )
     return jax.jit(fn)
 
@@ -448,7 +447,7 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
             )
         return new.ids, new.timestamps, new.write_ptr, new.payload
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         _insert,
         mesh=mesh,
         in_specs=(
@@ -467,7 +466,6 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
             P(None, "model"),
             P(None, "model", None, None),
         ),
-        check_vma=False,
     )
 
     @jax.jit

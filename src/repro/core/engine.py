@@ -9,6 +9,13 @@ Algorithm 1/2 of the paper, with network cost accounted per Table 1:
   * nb            : + the k 1-near buckets of each (forwarded to neighbors).
   * cnb           : + the k 1-near buckets of each (served from local cache).
 Result sets of nb and cnb are identical; only the message cost differs.
+
+Query path (one jit'd dispatch over the whole padded batch):
+  sketch -> multiprobe plan -> stacked bucket gather over all L tables at
+  once -> shared score/top-m stage (`repro.core.scoring`).  With
+  `use_kernels=True` the sketch runs through the fused Pallas simhash
+  kernel and score/top-m through the fused `bucket_topk` kernel; result
+  ids are bit-identical to the reference path (CI-checked).
 """
 
 from __future__ import annotations
@@ -20,10 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, hashing, multiprobe
+from repro.core import costmodel, hashing, multiprobe, scoring
 from repro.core.can import CanTopology
 from repro.core.corpus import DenseCorpus, SparseCorpus
 from repro.core.hashing import LshParams
+from repro.core.scoring import dedupe_topk  # re-export (canonical home moved)
 from repro.core.store import BucketStore
 
 NEG_INF = jnp.float32(-jnp.inf)
@@ -34,7 +42,8 @@ class EngineConfig:
     variant: str = "cnb"          # lsh | layered | nb | cnb
     num_probes: int | None = None  # None => all k 1-near buckets (the paper)
     ranked_probes: bool = False    # beyond-paper: margin-ranked probe subset
-    chunk: int = 32                # queries scored per jit call
+    chunk: int = 32                # queries scored per dispatched chunk
+    use_kernels: bool = False      # fused Pallas sketch + score/top-m path
 
 
 @dataclasses.dataclass
@@ -43,26 +52,6 @@ class SearchResult:
     scores: np.ndarray   # f32   [nq, m]
     cost: costmodel.QueryCost          # closed-form per-query cost (Table 1)
     sim_messages: float | None = None  # simulated avg messages (hop-counted)
-
-
-def dedupe_topk(ids: jax.Array, scores: jax.Array, m: int):
-    """Top-m by score with duplicate ids collapsed (same id => same score).
-
-    ids/scores: [..., K].  Invalid candidates are id -1 / score -inf.
-    """
-    order = jnp.argsort(ids, axis=-1)
-    ids_s = jnp.take_along_axis(ids, order, -1)
-    sc_s = jnp.take_along_axis(scores, order, -1)
-    dup = jnp.concatenate(
-        [jnp.zeros_like(ids_s[..., :1], bool), ids_s[..., 1:] == ids_s[..., :-1]],
-        axis=-1,
-    )
-    sc_s = jnp.where(dup | (ids_s < 0), NEG_INF, sc_s)
-    top_s, top_pos = jax.lax.top_k(sc_s, m)
-    top_i = jnp.take_along_axis(ids_s, top_pos, -1)
-    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
-    top_s = jnp.where(jnp.isfinite(top_s), top_s, -jnp.inf)
-    return top_i, top_s
 
 
 class LshEngine:
@@ -79,14 +68,21 @@ class LshEngine:
     ):
         if config.variant not in costmodel.VARIANTS:
             raise ValueError(f"unknown variant {config.variant!r}")
+        if config.use_kernels and not isinstance(corpus, DenseCorpus):
+            raise ValueError(
+                "use_kernels requires a DenseCorpus: the fused bucket_topk "
+                "kernel scores dense candidate payloads"
+            )
         self.params = params
         self.hyperplanes = hyperplanes
         self.store = store
         self.corpus = corpus
         self.topology = topology or CanTopology(params.k, 1 << params.k)
         self.config = config
-        self._search_chunk = jax.jit(self._search_chunk_impl, static_argnums=(2,))
-        self._contains_chunk = jax.jit(self._contains_chunk_impl)
+        self._search_batched = jax.jit(
+            self._search_batched_impl, static_argnums=(2,)
+        )
+        self._contains_batched = jax.jit(self._contains_batched_impl)
 
     # -- probe planning -------------------------------------------------------
 
@@ -97,9 +93,17 @@ class LshEngine:
         p = self.config.num_probes
         return 1 + (self.params.k if p is None else p)
 
+    def _sketch(self, q: jax.Array) -> jax.Array:
+        """uint32 codes [nq, L] — Pallas simhash kernel or the jnp oracle."""
+        if self.config.use_kernels:
+            from repro.kernels import ops
+
+            return ops.simhash(q, self.hyperplanes)
+        return hashing.sketch_codes(q, self.hyperplanes)
+
     def _probe_codes(self, q: jax.Array) -> jax.Array:
         """[nq, L, P] bucket codes to search for each query."""
-        codes = hashing.sketch_codes(q, self.hyperplanes)  # [nq, L]
+        codes = self._sketch(q)  # [nq, L]
         if self.config.variant in ("lsh", "layered"):
             return codes[..., None]
         k = self.params.k
@@ -116,12 +120,15 @@ class LshEngine:
     # -- candidate gathering + scoring ---------------------------------------
 
     def _candidates(self, probes: jax.Array) -> jax.Array:
-        """[nq, L, P] probe codes -> candidate ids [nq, L*P*C]."""
-        per_table = []
-        for l in range(self.params.L):
-            idx = probes[:, l, :].astype(jnp.int32) % self.store.num_buckets
-            per_table.append(self.store.ids[l][idx])  # [nq, P, C]
-        cand = jnp.stack(per_table, axis=1)  # [nq, L, P, C]
+        """[nq, L, P] probe codes -> candidate ids [nq, L*P*C].
+
+        One stacked gather across all L tables (no per-table host loop):
+        store.ids is [L, NB, C]; indexing with a broadcast table axis pulls
+        every probed bucket of every table in a single XLA gather.
+        """
+        idx = probes.astype(jnp.int32) % self.store.num_buckets  # [nq, L, P]
+        tables = jnp.arange(self.params.L, dtype=jnp.int32)[None, :, None]
+        cand = self.store.ids[tables, idx]  # [nq, L, P, C]
         return cand.reshape(cand.shape[0], -1)
 
     def _score(self, q: jax.Array, cand: jax.Array) -> jax.Array:
@@ -132,16 +139,58 @@ class LshEngine:
     def _search_chunk_impl(self, q: jax.Array, exclude: jax.Array, m: int):
         probes = self._probe_codes(q)
         cand = self._candidates(probes)
-        scores = self._score(q, cand)
         invalid = (cand < 0) | (cand == exclude[:, None])
-        scores = jnp.where(invalid, NEG_INF, scores)
         cand = jnp.where(invalid, -1, cand)
+        if isinstance(self.corpus, DenseCorpus):
+            vecs = self.corpus.gather(cand)
+            return scoring.score_topk(
+                q, cand, vecs, m, use_kernels=self.config.use_kernels
+            )
+        scores = jnp.where(invalid, NEG_INF, self._score(q, cand))
         return dedupe_topk(cand, scores, m)
+
+    def _search_batched_impl(self, q: jax.Array, exclude: jax.Array, m: int):
+        """q [nchunks, chunk, d], exclude [nchunks, chunk] -> [nchunks, chunk, m]."""
+        return jax.lax.map(
+            lambda qe: self._search_chunk_impl(qe[0], qe[1], m), (q, exclude)
+        )
 
     def _contains_chunk_impl(self, q: jax.Array, targets: jax.Array):
         probes = self._probe_codes(q)
         cand = self._candidates(probes)
         return jnp.any(cand == targets[:, None], axis=-1)
+
+    def _contains_batched_impl(self, q: jax.Array, targets: jax.Array):
+        return jax.lax.map(
+            lambda qt: self._contains_chunk_impl(qt[0], qt[1]), (q, targets)
+        )
+
+    def _pad_chunks(self, arrs: list[jax.Array], pad_vals: list):
+        """Pad leading dim to a chunk multiple and add a [nchunks, chunk] axis.
+
+        Pads with jnp so device-resident query batches stay on device (no
+        host roundtrip).  The chunk count rounds up to a power of two (small
+        batches) or a multiple of 16 chunks (large batches), so the batched
+        jit sees few distinct shapes while dead-chunk compute stays bounded
+        at <= 16 chunks, not a 2x blowup.  Padded rows are sliced off by
+        the caller.
+        """
+        c = self.config.chunk
+        nq = arrs[0].shape[0]
+        nchunks = max(1, -(-nq // c))
+        if nchunks <= 16:
+            nchunks = 1 << (nchunks - 1).bit_length()
+        else:
+            nchunks = -(-nchunks // 16) * 16
+        out = []
+        for a, v in zip(arrs, pad_vals):
+            a = jnp.asarray(a)
+            pad = nchunks * c - nq
+            if pad:
+                widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+                a = jnp.pad(a, widths, constant_values=v)
+            out.append(a.reshape(nchunks, c, *a.shape[1:]))
+        return out
 
     # -- public API -----------------------------------------------------------
 
@@ -158,14 +207,12 @@ class LshEngine:
             np.full((nq,), -2, np.int32) if exclude is None
             else np.asarray(exclude, np.int32)
         )
-        out_i = np.empty((nq, m), np.int32)
-        out_s = np.empty((nq, m), np.float32)
-        c = self.config.chunk
-        for s0 in range(0, nq, c):
-            e0 = min(s0 + c, nq)
-            qi = jnp.asarray(queries[s0:e0])
-            ti, ts = self._search_chunk(qi, jnp.asarray(exclude[s0:e0]), m)
-            out_i[s0:e0], out_s[s0:e0] = np.asarray(ti), np.asarray(ts)
+        qc, ec = self._pad_chunks(
+            [jnp.asarray(queries, jnp.float32), jnp.asarray(exclude)], [0.0, -2]
+        )
+        ti, ts = self._search_batched(qc, ec, m)
+        out_i = np.asarray(ti).reshape(-1, m)[:nq]
+        out_s = np.asarray(ts).reshape(-1, m)[:nq]
         bucket_b = float(np.mean(np.asarray(self.store.occupancy())))
         cost = costmodel.table1(
             self.config.variant, self.params.k, self.params.L, bucket_b
@@ -179,17 +226,13 @@ class LshEngine:
         """Was target y searched for query x? (success-probability metric,
         paper Sec. 6.3 — membership in searched buckets, not top-m)."""
         nq = queries.shape[0]
-        out = np.empty((nq,), bool)
-        c = self.config.chunk
-        for s0 in range(0, nq, c):
-            e0 = min(s0 + c, nq)
-            out[s0:e0] = np.asarray(
-                self._contains_chunk(
-                    jnp.asarray(queries[s0:e0]),
-                    jnp.asarray(target_ids[s0:e0], jnp.int32),
-                )
-            )
-        return out
+        qc, tc = self._pad_chunks(
+            [jnp.asarray(queries, jnp.float32),
+             jnp.asarray(np.asarray(target_ids, np.int32))],
+            [0.0, -2],
+        )
+        out = self._contains_batched(qc, tc)
+        return np.asarray(out).reshape(-1)[:nq]
 
     def simulate_messages(
         self, queries: jax.Array, rng: np.random.Generator | None = None

@@ -1,0 +1,85 @@
+"""Shared bucket score + top-m stage (`LocalSimSearch`, Alg. 1 line 11).
+
+One module owns the candidate-scoring semantics for the whole system: the
+single-host `LshEngine` and the distributed `shard_map` runtime both call
+`score_topk`, so the per-shard search is literally the same code as the
+reference path the tests pin down.
+
+Two interchangeable implementations:
+  * reference — plain einsum + `dedupe_topk` (the semantic oracle);
+  * kernel    — candidates are sorted by id (so the Pallas tie-break
+    "lowest index" coincides with the reference's "lowest id"), duplicate
+    ids are masked invalid, and the fused `bucket_topk` Pallas kernel does
+    score + top-m in VMEM.  Returns bit-identical ids to the reference on
+    equal inputs (CI-checked in tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def _sorted_dup_mask(ids: jax.Array):
+    """Sort candidate ids ascending; mark repeats of the previous entry.
+
+    Returns (order, ids_sorted, dup_mask).  Both top-m implementations share
+    this prologue so the dedup semantics (-1 = invalid, lowest id wins score
+    ties) cannot drift apart between the reference and kernel paths.
+    """
+    order = jnp.argsort(ids, axis=-1)
+    ids_s = jnp.take_along_axis(ids, order, -1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids_s[..., :1], bool), ids_s[..., 1:] == ids_s[..., :-1]],
+        axis=-1,
+    )
+    return order, ids_s, dup
+
+
+def dedupe_topk(ids: jax.Array, scores: jax.Array, m: int):
+    """Top-m by score with duplicate ids collapsed (same id => same score).
+
+    ids/scores: [..., K].  Invalid candidates are id -1 / score -inf.
+    """
+    order, ids_s, dup = _sorted_dup_mask(ids)
+    sc_s = jnp.take_along_axis(scores, order, -1)
+    sc_s = jnp.where(dup | (ids_s < 0), NEG_INF, sc_s)
+    top_s, top_pos = jax.lax.top_k(sc_s, m)
+    top_i = jnp.take_along_axis(ids_s, top_pos, -1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    top_s = jnp.where(jnp.isfinite(top_s), top_s, -jnp.inf)
+    return top_i, top_s
+
+
+def score_topk(
+    q: jax.Array,          # [b, d] unit queries
+    cand_ids: jax.Array,   # int32 [b, K] candidate ids, -1 = invalid
+    cand_vecs: jax.Array,  # f32 [b, K, d] candidate payloads (zeros where -1)
+    m: int,
+    *,
+    use_kernels: bool = False,
+    interpret: bool | None = None,
+):
+    """Score candidates against their query and keep the best m distinct ids.
+
+    Returns (ids int32 [b, m], scores f32 [b, m]); empty slots are
+    id -1 / score -inf, ordered by descending score.
+    """
+    if not use_kernels:
+        scores = jnp.einsum("bkd,bd->bk", cand_vecs, q)
+        scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
+        return dedupe_topk(cand_ids, scores, m)
+    return _score_topk_kernel(q, cand_ids, cand_vecs, m, interpret)
+
+
+def _score_topk_kernel(q, cand_ids, cand_vecs, m, interpret):
+    from repro.kernels import ops
+
+    order, ids_s, dup = _sorted_dup_mask(cand_ids)               # [b, K]
+    vecs_s = jnp.take_along_axis(cand_vecs, order[..., None], -2)
+    valid = (ids_s >= 0) & ~dup
+    scores, idx = ops.bucket_topk(q, vecs_s, valid, m, interpret=interpret)
+    top_i = jnp.take_along_axis(ids_s, jnp.maximum(idx, 0), -1)
+    return jnp.where(idx >= 0, top_i, -1), scores

@@ -2,32 +2,26 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run must set XLA_FLAGS before any jax initialization).
+Mesh construction goes through `repro.compat` so the same code runs on
+jax versions with and without `jax.sharding.AxisType`.
 """
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     """Small mesh over host devices (tests / examples)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

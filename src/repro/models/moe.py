@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models import sharding as sh
 from repro.models.config import ModelConfig
 from repro.models.layers import _init
@@ -191,12 +192,11 @@ def moe(p, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, MoeAux]:
         xspec = P(batch_axes, None, None)
         kspec = P(batch_axes, None, None)
         wspec = P("model", None, None)
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             partial(_moe_shard, e_total=e, cap=cap, axis="model"),
             mesh=mesh,
             in_specs=(xspec, kspec, kspec, wspec, wspec, wspec),
             out_specs=xspec,
-            check_vma=False,
         )
         y = fn(x, topk_idx, topk_w, p["w_gate"], p["w_up"], p["w_down"])
 

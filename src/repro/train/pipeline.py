@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -84,11 +85,10 @@ def pipeline_forward(
         )
         return out
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(P(stage_axis), P(), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(blocks, x, positions)

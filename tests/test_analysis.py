@@ -1,7 +1,7 @@
 """Propositions 1-4 closed forms (paper Sec. 5) as executable properties."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from repro.core import analysis, costmodel
 

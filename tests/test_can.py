@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from repro.core import multiprobe
 from repro.core.can import CanTopology, paper_topology

@@ -66,20 +66,19 @@ ELASTIC = r"""
 import numpy as np, jax, jax.numpy as jnp, sys, os
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.checkpoint import checkpoint as ckpt
+from repro.compat import make_mesh
 
 tmp = sys.argv[1]
 rng = np.random.default_rng(0)
 tree = {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}
 
 # write under a (4, 2) mesh sharding
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_a = make_mesh((4, 2), ("data", "model"))
 sharded = jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))
 d = ckpt.save(tmp, 1, {"w": sharded})
 
 # restore under a DIFFERENT mesh shape (2, 4) — elastic re-sharding
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = make_mesh((2, 4), ("data", "model"))
 target = NamedSharding(mesh_b, P("data", "model"))
 restored = ckpt.restore(d, {"w": tree["w"]}, shardings={"w": target})
 assert restored["w"].sharding == target

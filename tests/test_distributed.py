@@ -11,9 +11,9 @@ from repro.core import *
 from repro.core import distributed as dist
 from repro.core.store import build_store_host
 from repro.core.hashing import sketch_codes_batched
+from repro.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 N, D, k, L, m = 3000, 64, 5, 3, 10
 params = LshParams(d=D, k=k, L=L, seed=3)
@@ -36,9 +36,11 @@ for variant in ("lsh", "nb", "cnb"):
 
 store_sh = dist.shard_store(mesh, store_host)
 for variant in ("lsh", "nb", "cnb"):
-    for routing in ("alltoall", "allgather"):
+    for routing, use_kernels in (("alltoall", False), ("allgather", False),
+                                 ("alltoall", True)):
         cfg = dist.DistConfig(params=params, n_shards=4, variant=variant,
-                              m=m, routing=routing, cap_factor=3.0)
+                              m=m, routing=routing, cap_factor=3.0,
+                              use_kernels=use_kernels)
         args = [H, store_sh.ids, store_sh.payload]
         if variant == "cnb" and cfg.node_bits > 0:
             refresh = dist.make_refresh_cache(cfg, mesh)
@@ -52,7 +54,7 @@ for variant in ("lsh", "nb", "cnb"):
         want = ref[variant]
         for i in range(B):
             assert set(ids[i][ids[i] >= 0]) == set(
-                want.ids[i][want.ids[i] >= 0]), (variant, routing, i)
+                want.ids[i][want.ids[i] >= 0]), (variant, routing, use_kernels, i)
 print("EQUIV-OK")
 """
 
@@ -63,9 +65,9 @@ from repro.core import *
 from repro.core import distributed as dist
 from repro.core.store import make_store
 from repro.core import hashing
+from repro.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(1)
 N, D, k, L = 256, 32, 5, 2
 params = LshParams(d=D, k=k, L=L, seed=9)

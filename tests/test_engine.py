@@ -106,6 +106,64 @@ def test_dedupe_topk():
     assert np.allclose(np.asarray(top_s), [[0.9, 0.7, 0.5]])
 
 
+@pytest.mark.parametrize("variant", ["lsh", "nb", "cnb"])
+@pytest.mark.parametrize(
+    "probe_kw",
+    [dict(), dict(num_probes=2, ranked_probes=True), dict(num_probes=3)],
+    ids=["all-probes", "ranked-p2", "unranked-p3"],
+)
+def test_kernel_path_equals_reference(setup, variant, probe_kw):
+    """use_kernels=True (fused Pallas simhash + bucket_topk, interpret mode
+    on CPU) returns bit-identical ids to the reference path."""
+    params, h, store, corpus, topo, q, _ = setup
+    nq = q.shape[0]
+    exclude = np.arange(nq)
+    ref = LshEngine(
+        params, h, store, corpus, topo, EngineConfig(variant=variant, **probe_kw)
+    ).search(q, m=10, exclude=exclude)
+    ker = LshEngine(
+        params, h, store, corpus, topo,
+        EngineConfig(variant=variant, use_kernels=True, **probe_kw),
+    ).search(q, m=10, exclude=exclude)
+    assert np.array_equal(ref.ids, ker.ids)
+    # empty slots must be -inf on BOTH paths (score_topk contract), and the
+    # finite scores must agree to float tolerance.
+    assert np.array_equal(np.isfinite(ref.scores), np.isfinite(ker.scores))
+    np.testing.assert_allclose(
+        np.where(np.isfinite(ref.scores), ref.scores, 0.0),
+        np.where(np.isfinite(ker.scores), ker.scores, 0.0),
+        atol=1e-5,
+    )
+
+
+def test_kernel_path_rejects_sparse_corpus(setup):
+    """The fused kernel scores dense payloads; sparse corpora must refuse
+    the knob instead of silently densifying."""
+    from repro.core.corpus import SparseCorpus
+    import jax.numpy as jnp2
+
+    params, h, store, _, topo, _, _ = setup
+    sparse = SparseCorpus(
+        jnp2.zeros((4, 2), jnp2.int32), jnp2.zeros((4, 2), jnp2.float32),
+        d=params.d,
+    )
+    with pytest.raises(ValueError, match="use_kernels"):
+        LshEngine(params, h, store, sparse, topo,
+                  EngineConfig(variant="cnb", use_kernels=True))
+
+
+def test_ragged_batch_padding(setup):
+    """Batch sizes that don't divide the chunk size pad internally and
+    return exactly nq rows — same results as a chunk-aligned run."""
+    params, h, store, corpus, topo, q, _ = setup
+    e = _engine(setup, "cnb")
+    r_full = e.search(q, m=10)
+    odd = q[:37]  # 37 % 32 != 0
+    r_odd = _engine(setup, "cnb").search(odd, m=10)
+    assert r_odd.ids.shape == (37, 10)
+    assert np.array_equal(r_odd.ids, r_full.ids[:37])
+
+
 def test_layered_equivalence(setup):
     """Sec. 5.2: Hamming-LSH over cosine sketches == cosine-LSH(k_node)."""
     params, h, store, corpus, topo, q, vecs = setup

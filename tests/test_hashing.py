@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from repro.core import hashing
 from repro.core.hashing import LshParams

@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from repro.core import store as st_mod
 from repro.core.store import build_store_host, expire, insert_batch, make_store

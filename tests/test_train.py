@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from conftest import run_in_subprocess
 from repro.train import optimizer as opt
@@ -126,10 +126,10 @@ def test_grad_accum_equivalence(single_mesh):
 COMPRESSION = r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.train import compression as C
 
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 rng = np.random.default_rng(0)
 g_global = rng.standard_normal((4, 64, 33)).astype(np.float32)
 
@@ -137,10 +137,9 @@ def body(g_local, err):
     red, new_err = C.compressed_psum({"w": g_local}, {"w": err}, "pod")
     return red["w"], new_err["w"]
 
-fn = jax.shard_map(body, mesh=mesh,
-                   in_specs=(P("pod", None, None), P("pod", None, None)),
-                   out_specs=(P("pod", None, None), P("pod", None, None)),
-                   check_vma=False)
+fn = shard_map(body, mesh=mesh,
+               in_specs=(P("pod", None, None), P("pod", None, None)),
+               out_specs=(P("pod", None, None), P("pod", None, None)))
 
 want = g_global.sum(0)
 err = jnp.zeros_like(jnp.asarray(g_global))
@@ -177,8 +176,8 @@ cfg = get_config("starcoder2-7b", smoke=True)  # 3 layers -> pad to 4 periods? 3
 import dataclasses
 cfg = dataclasses.replace(cfg, num_layers=4)
 params, _ = M.init_model(cfg, 0)
-mesh = jax.make_mesh((2,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((2,), ("stage",))
 rng = np.random.default_rng(0)
 B, S = 4, 16
 x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32) * 0.1
