@@ -1,11 +1,83 @@
 """Churn/soft-state benchmark (paper Sec. 4.1 dynamics, beyond-paper
 quantification): CNB recall vs refresh period under profile updates and
-node churn."""
+node churn — single-host, plus the same trajectory on a 2-shard mesh
+(recall + estimated wire bytes/epoch vs refresh period).
+
+The distributed cells run in a subprocess: the host device count is fixed
+at jax backend init, so a multi-shard mesh needs its own process with
+XLA_FLAGS set before the first jax import."""
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 from repro.core.churn import ChurnConfig, run_churn
+
+N_SHARDS = 2
+
+_DIST_SCRIPT = r"""
+import json, sys, time
+import dataclasses
+import numpy as np
+from repro.core.churn import ChurnConfig, run_churn_distributed
+from repro.core import distributed as dist
+from repro.core.hashing import LshParams
+
+base = ChurnConfig(**json.loads(sys.argv[1]))
+n_shards = int(sys.argv[2])
+out = []
+for period in (1, 2, 4, 8):
+    cfg = dataclasses.replace(base, refresh_every=period)
+    t0 = time.time()
+    r = run_churn_distributed(cfg, n_shards=n_shards)
+    us = (time.time() - t0) / cfg.epochs * 1e6
+    params = LshParams(d=cfg.dim, k=cfg.k, L=cfg.L, seed=cfg.seed + 1)
+    dcfg = dist.DistConfig(params=params, n_shards=n_shards, variant="cnb",
+                           m=cfg.m + 1, cap_factor=float(n_shards))
+    qbytes = dist.estimate_query_bytes(
+        dcfg, batch=cfg.num_queries, d=cfg.dim, n_total=n_shards)["total"]
+    rbytes = dist.estimate_refresh_bytes(dcfg, cfg.capacity, cfg.dim)
+    bytes_per_epoch = qbytes + rbytes / period  # refresh amortized
+    out.append(dict(period=period, us=us,
+                    mean_recall=r["mean_recall"],
+                    final_recall=r["final_recall"],
+                    dropped=int(r["dropped_probes"].sum()),
+                    max_stale=int(r["cache_staleness"].max()),
+                    bytes_per_epoch=bytes_per_epoch))
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _dist_rows(base: ChurnConfig):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_SHARDS}"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _DIST_SCRIPT,
+         json.dumps(dataclasses.asdict(base)), str(N_SHARDS)],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"distributed churn failed:\n{proc.stderr}")
+    payload = next(ln for ln in proc.stdout.splitlines()
+                   if ln.startswith("RESULT "))
+    out = []
+    for r in json.loads(payload[len("RESULT "):]):
+        out.append((
+            f"churn/dist{N_SHARDS}shard/refresh_every={r['period']}",
+            r["us"],
+            f"mean_recall={r['mean_recall']:.3f};"
+            f"final_recall={r['final_recall']:.3f};"
+            f"bytes_per_epoch={r['bytes_per_epoch']:.3e};"
+            f"dropped={r['dropped']};max_cache_stale={r['max_stale']}"))
+    return out
 
 
 def rows():
@@ -20,4 +92,12 @@ def rows():
             f"churn/refresh_every={period}", us,
             f"mean_recall={r['mean_recall']:.3f};"
             f"final_recall={r['final_recall']:.3f}"))
+    try:
+        out.extend(_dist_rows(base))
+    except Exception as e:  # e.g. accelerator jaxlib: the subprocess's
+        # host-platform device flag can't split a GPU/TPU backend — keep
+        # the single-host rows and record the actual failure in the row.
+        reason = " ".join(str(e).split())[:300]
+        out.append((f"churn/dist{N_SHARDS}shard/FAILED", 0.0,
+                    f"{type(e).__name__}: {reason}"))
     return out

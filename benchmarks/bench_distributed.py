@@ -7,7 +7,6 @@ Also validates the closed-form byte estimator."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import LshParams, make_hyperplanes

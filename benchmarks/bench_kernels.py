@@ -69,6 +69,38 @@ def _query_path_rows():
     ]
 
 
+def _planner_rows():
+    """Probe-planner overhead on the sketch stage: make_plan = sketch +
+    near-code/mask/zone arithmetic; the delta is the planner's cost."""
+    from repro.core import LshParams, make_hyperplanes
+    from repro.core import plan as plan_mod
+    from repro.core.can import CanTopology
+
+    rng = np.random.default_rng(1)
+    B, D, k, L = 4096, 128, 12, 4
+    params = LshParams(d=D, k=k, L=L, seed=0)
+    h = make_hyperplanes(params)
+    q = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    topo = CanTopology(k, 16)
+    shared = f"B={B};D={D};k={k};L={L};shards=16"
+
+    sketch_fn = jax.jit(lambda x: plan_mod.sketch(x, h))
+    us_sketch = _time(sketch_fn, q)
+    out = [("kernels/probe_sketch_only", us_sketch, shared)]
+    for name, spec in (
+        ("full", plan_mod.ProbeSpec(params, "cnb")),
+        ("ranked_p4", plan_mod.ProbeSpec(params, "cnb", num_probes=4,
+                                         ranked_probes=True)),
+    ):
+        fn = jax.jit(lambda x, s=spec: plan_mod.make_plan(s, x, h, topo))
+        us = _time(fn, q)
+        out.append((
+            f"kernels/probe_planner_{name}", us,
+            f"overhead_over_sketch={us / max(us_sketch, 1e-9):.2f}x;"
+            f"P={spec.probes_per_table};{shared}"))
+    return out
+
+
 def rows():
     rng = np.random.default_rng(0)
     out = []
@@ -100,5 +132,6 @@ def rows():
     out.append(("kernels/hamming_oracle_4096x128", us,
                 "tile=(256,128);swar_popcount;validated=interpret"))
 
+    out.extend(_planner_rows())
     out.extend(_query_path_rows())
     return out

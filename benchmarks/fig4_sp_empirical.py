@@ -12,7 +12,6 @@ import numpy as np
 
 from benchmarks.common import FAST_SPECS, FULL_SPECS, build_dataset
 from repro.core import EngineConfig, LshEngine, analysis, metrics, paper_topology
-from repro.core.corpus import exact_topk_sparse
 
 
 def rows(full: bool = False, num_pairs: int = 600):

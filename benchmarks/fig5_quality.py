@@ -4,7 +4,6 @@ Sweeps L per variant; reports quality at (approximately) matched message
 budgets.  The headline `derived` per dataset: recall uplift of CNB over
 LSH at LSH's own message cost (paper: >50% on LiveJournal)."""
 
-import numpy as np
 
 from benchmarks.common import FAST_SPECS, FULL_SPECS, build_dataset, evaluate_variant
 

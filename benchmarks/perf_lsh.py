@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import LshParams, make_hyperplanes
+from repro.core import LshParams
 from repro.core import distributed as dist
 # store shapes built as ShapeDtypeStructs directly
 from repro.launch.dryrun import parse_collectives
@@ -70,8 +70,10 @@ def rows():
         ("A_allgather_cnb", dict(variant="cnb", routing="allgather")),
         ("B_alltoall_cnb", dict(variant="cnb", routing="alltoall")),
         ("C_alltoall_nb", dict(variant="nb", routing="alltoall")),
-        ("D_alltoall_cnb_p4", dict(variant="cnb", routing="alltoall",
-                                   num_probes=4)),
+        # margin-ranked probe budget: p=4 of the k near buckets per table,
+        # chosen per query by the shared planner's probe mask
+        ("D_alltoall_cnb_ranked_p4", dict(variant="cnb", routing="alltoall",
+                                          num_probes=4, ranked_probes=True)),
         ("E_alltoall_lsh", dict(variant="lsh", routing="alltoall")),
         # the kernel-backed per-shard score/top-m (same wire bytes as B —
         # the fused Pallas stage changes compute only, not routing)
@@ -80,23 +82,16 @@ def rows():
     ]
     out = []
     for name, kw in variants:
-        p = kw.pop("num_probes", None)
         cfg = dist.DistConfig(params=params, n_shards=16, cap_factor=2.0, **kw)
-        if p is not None:
-            # ranked probing probes only p of the local_bits near buckets
-            cfg = dist.DistConfig(params=params, n_shards=16, cap_factor=2.0,
-                                  probe_local_near=True, **kw)
         compiled = lower_search(cfg, mesh, B, D, capacity)
         coll = parse_collectives(compiled.as_text())
         mem = compiled.memory_analysis()
-        probes = cfg.probes_per_table_local() + (
-            cfg.node_bits if cfg.variant in ("nb", "cnb") else 0)
         out.append((
             f"perf_lsh/{name}",
             coll["total_wire_bytes"] / B,
             f"wire_total={coll['total_wire_bytes']:.3e};"
             f"by_op={json.dumps(coll['bytes_by_op']).replace(',', ';')};"
-            f"buckets_per_query={L * probes};"
+            f"buckets_per_query={L * cfg.probe_spec.probes_per_table};"
             f"args_gib={(mem.argument_size_in_bytes or 0)/2**30:.2f}",
         ))
     return out

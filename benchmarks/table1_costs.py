@@ -5,7 +5,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EngineConfig, LshEngine, costmodel, paper_topology
+from repro.core import EngineConfig, LshEngine, paper_topology
 from benchmarks.common import build_dataset
 from repro.data import osn
 

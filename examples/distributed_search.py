@@ -46,18 +46,43 @@ def main():
     B = 64
     q = jax.device_put(jnp.asarray(vecs[:B]),
                        NamedSharding(mesh, P(("data", "model"), None)))
-    ids, scores = search(H, store.ids, store.payload,
-                         cache_ids, cache_payload, q)
+    ids, scores, dropped = search(H, store.ids, store.payload,
+                                  cache_ids, cache_payload, q)
     ids, scores = np.asarray(ids), np.asarray(scores)
     self_hit = float(np.mean(ids[:, 0] == np.arange(B)))
     est = dist.estimate_query_bytes(cfg, batch=B, d=D, n_total=8)
     print(f"searched {B} queries over {N} vectors on mesh "
           f"{dict(mesh.shape)}")
     print(f"top-1 self-hit rate: {self_hit:.2f} (should be ~1.0)")
+    print(f"dropped probes (routing overflow): {int(dropped)} "
+          f"(0 in healthy operation; raise cap_factor otherwise)")
     print(f"estimated wire bytes/step: {est['total']:.0f} "
           f"(routing {est['query_routing']}, results {est['results']}, "
           f"neighbor {est['neighbor']})")
     assert self_hit > 0.95
+    assert int(dropped) == 0
+
+    # margin-ranked probe budget (beyond paper): probe only the p=3 most
+    # promising near buckets per table — same planner as the single-host
+    # engine, so results stay engine-identical at the same budget.
+    cfg_p3 = dist.DistConfig(params=params, n_shards=4, variant="cnb",
+                             m=10, num_probes=3, ranked_probes=True)
+    search_p3 = dist.make_search_step(cfg_p3, mesh)
+    ids3, _, _ = search_p3(H, store.ids, store.payload,
+                           cache_ids, cache_payload, q)
+    p3_hit = float(np.mean(np.asarray(ids3)[:, 0] == np.arange(B)))
+    print(f"ranked p=3 probes: top-1 self-hit {p3_hit:.2f} at "
+          f"{cfg_p3.probe_spec.probes_per_table}/"
+          f"{cfg.probe_spec.probes_per_table} buckets per table")
+
+    # distributed `contains` (paper Sec. 6.3): was y's id inside ANY bucket
+    # the query searched — metadata-only routing, no payload bytes.
+    contains = dist.make_contains_step(cfg, mesh)
+    targets = jax.device_put(jnp.arange(B, dtype=jnp.int32),
+                             NamedSharding(mesh, P(("data", "model"))))
+    hits, _ = contains(H, store.ids, cache_ids, q, targets)
+    print(f"contains(self) success probability: "
+          f"{float(np.mean(np.asarray(hits))):.2f}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ modern twist that the interest vectors come from an LM.
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config

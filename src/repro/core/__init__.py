@@ -2,11 +2,16 @@
 
 Layers:
   hashing     — cosine LSH (sign random projection), sketch packing
-  multiprobe  — near-bucket enumeration / probe plans (Sec. 4.2)
+  multiprobe  — near-bucket enumeration (Sec. 4.2)
+  plan        — the shared probe planner: ONE query discipline feeding the
+                engine, the shard_map runtime, and the benchmarks
+  routing     — capacitated compaction/routing (run ranks, send buffers,
+                overflow accounting) shared by store/distributed/moe
   can         — CAN overlay geometry: bucket->node map, neighbors, hops
   store       — soft-state bucket store (insert/refresh/GC, Sec. 4.1)
   engine      — single-host reference engine (Algorithms 1-2)
   distributed — shard_map runtime (all_to_all routing, neighbor permutes)
+  churn       — dynamic-OSN soft-state trajectories, single-host + sharded
   layered     — Layered-LSH and its LSH-equivalence (Sec. 5.2)
   analysis    — Propositions 1-4 closed forms (Sec. 5)
   costmodel   — Table 1 cost accounting
@@ -30,3 +35,6 @@ from repro.core.store import BucketStore, make_store, insert_batch, expire  # no
 from repro.core.engine import EngineConfig, LshEngine, SearchResult, dedupe_topk  # noqa: F401
 from repro.core.corpus import DenseCorpus, SparseCorpus  # noqa: F401
 from repro.core import analysis, costmodel, metrics, multiprobe  # noqa: F401
+from repro.core import plan, routing  # noqa: F401
+from repro.core.plan import ProbePlan, ProbeSpec, make_plan  # noqa: F401
+from repro.core.routing import RoutePlan, plan_routes, run_ranks  # noqa: F401

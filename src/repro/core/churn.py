@@ -19,6 +19,15 @@ Output: recall trajectory vs refresh period — the freshness/cost trade the
 paper's design argues about, quantified.  Uses the same BucketStore /
 engine code paths as production (streaming insert_batch + expire, not the
 host bulk builder).
+
+Two drivers over ONE trajectory generator (same RNG stream, so their
+recall curves are directly comparable):
+
+  * `run_churn`             — single-host `LshEngine` (the reference);
+  * `run_churn_distributed` — the shard_map runtime on a >= 2-shard host
+    mesh, driving `make_insert_step` + `expire` + `make_refresh_cache`
+    (the paper's actual P2P scenario on the production code path).  Also
+    reports per-epoch CNB cache staleness and routed-probe drop counts.
 """
 
 from __future__ import annotations
@@ -57,28 +66,25 @@ def _unit(x):
     return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
 
 
-def run_churn(cfg: ChurnConfig) -> dict:
-    """Returns dict with per-epoch recall and bookkeeping counters."""
-    rng = np.random.default_rng(cfg.seed)
+def _lsh_setup(cfg: ChurnConfig):
     params = LshParams(d=cfg.dim, k=cfg.k, L=cfg.L, seed=cfg.seed + 1)
-    hp = hashing.make_hyperplanes(params)
+    return params, hashing.make_hyperplanes(params)
 
+
+def _trajectory(cfg: ChurnConfig):
+    """Yield the per-epoch world state — one RNG stream shared by both
+    drivers, so single-host and distributed runs see identical vectors,
+    churn events, and query draws.
+
+    Yields (epoch, vecs, do_refresh, qidx, ideal); epoch 0 is the initial
+    announce (qidx/ideal None).
+    """
+    rng = np.random.default_rng(cfg.seed)
     vecs = _unit(rng.standard_normal((cfg.num_users, cfg.dim))).astype(
         np.float32
     )
-    alive = np.ones(cfg.num_users, bool)
-    store = make_store(cfg.L, params.num_buckets, cfg.capacity)
+    yield 0, vecs, True, None, None
 
-    def announce(ids, epoch):
-        codes = hashing.sketch_codes(jnp.asarray(vecs[ids]), hp)
-        return insert_batch(
-            store, jnp.asarray(ids, jnp.int32), codes, jnp.int32(epoch)
-        )
-
-    # initial announce
-    store = announce(np.arange(cfg.num_users), 0)
-
-    recalls, staleness = [], []
     for epoch in range(1, cfg.epochs + 1):
         # 1. profile updates (vector drift)
         n_upd = int(cfg.update_rate * cfg.num_users)
@@ -93,28 +99,176 @@ def run_churn(cfg: ChurnConfig) -> dict:
             rng.standard_normal((n_churn, cfg.dim))
         ).astype(np.float32)
 
-        # 3. periodic refresh + GC (the paper's soft-state maintenance)
-        if epoch % cfg.refresh_every == 0:
-            store = announce(np.arange(cfg.num_users)[alive], epoch)
-            store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
+        # 4. current ground truth for this epoch's query draw
+        qidx = rng.choice(cfg.num_users, cfg.num_queries, replace=False)
+        sims = vecs[qidx] @ vecs.T
+        sims[np.arange(cfg.num_queries), qidx] = -np.inf
+        ideal = np.argsort(-sims, axis=1)[:, : cfg.m].astype(np.int32)
 
-        # 4. measure recall against CURRENT ground truth
-        corpus = DenseCorpus(jnp.asarray(vecs))
+        yield epoch, vecs, epoch % cfg.refresh_every == 0, qidx, ideal
+
+
+def run_churn(cfg: ChurnConfig) -> dict:
+    """Single-host reference trajectory: per-epoch recall and bookkeeping.
+
+    Scoring uses the ANNOUNCED snapshot of each vector, not the live one:
+    the paper's LocalSimSearch runs at the bucket node against the copies
+    users last announced (Alg. 1), so between refreshes both the buckets
+    AND the scores are stale — recall is measured against the current
+    ground truth, which is exactly the freshness cost being quantified.
+    """
+    params, hp = _lsh_setup(cfg)
+    store = make_store(cfg.L, params.num_buckets, cfg.capacity)
+    announced = None
+
+    recalls, staleness = [], []
+    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
+        # 3. periodic refresh + GC (the paper's soft-state maintenance)
+        if do_refresh:
+            announced = vecs.copy()
+            codes = hashing.sketch_codes(jnp.asarray(announced), hp)
+            store = insert_batch(
+                store,
+                jnp.arange(cfg.num_users, dtype=jnp.int32),
+                codes,
+                jnp.int32(epoch),
+            )
+            if epoch > 0:
+                store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
+        if epoch == 0:
+            continue
+
+        corpus = DenseCorpus(jnp.asarray(announced))
         engine = LshEngine(
             params, hp, store, corpus, None, EngineConfig(variant="cnb")
         )
-        qidx = rng.choice(cfg.num_users, cfg.num_queries, replace=False)
-        q = vecs[qidx]
-        sims = q @ vecs.T
-        sims[np.arange(cfg.num_queries), qidx] = -np.inf
-        ideal = np.argsort(-sims, axis=1)[:, : cfg.m].astype(np.int32)
-        res = engine.search(jnp.asarray(q), m=cfg.m, exclude=qidx)
+        res = engine.search(jnp.asarray(vecs[qidx]), m=cfg.m, exclude=qidx)
         recalls.append(metrics.recall_at_m(res.ids, ideal))
         staleness.append(epoch % cfg.refresh_every)
 
     return dict(
         recalls=np.asarray(recalls),
         staleness=np.asarray(staleness),
+        final_recall=float(recalls[-1]),
+        mean_recall=float(np.mean(recalls)),
+        refresh_every=cfg.refresh_every,
+    )
+
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    if x.shape[0] == n:
+        return x
+    pad = np.full((n - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+def run_churn_distributed(
+    cfg: ChurnConfig,
+    n_shards: int = 2,
+    mesh=None,
+    cap_factor: float | None = None,
+) -> dict:
+    """The same churn trajectory driven through the shard_map runtime.
+
+    Buckets shard over `model`; announces go through `make_insert_step`
+    (+ `expire`), queries through the all_to_all-routed search step, and
+    the CNB neighbor cache is rebuilt by `make_refresh_cache` at each
+    announce — so between refreshes the cache is STALE, which is the
+    freshness/cost trade the paper's periodic bucket exchange makes.
+    Returns the single-host dict plus `cache_staleness` (epochs since the
+    cache was rebuilt) and `dropped_probes` (router overflow, per epoch).
+
+    Requires a host mesh whose `model` axis has n_shards devices — in a
+    plain CPU process set XLA_FLAGS=--xla_force_host_platform_device_count
+    before importing jax (see tests/test_churn.py / bench_churn.py).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import distributed as dist
+    from repro.launch.mesh import make_host_mesh, require_host_devices
+
+    if mesh is None:
+        require_host_devices(n_shards)
+        mesh = make_host_mesh(data=1, model=n_shards)
+    params, hp = _lsh_setup(cfg)
+    # cap_factor = n_shards guarantees zero drops (worst case routes every
+    # probe of a device to one owner shard); callers may lower it to trade
+    # buffer bytes for reported drops.
+    dcfg = dist.DistConfig(
+        params=params, n_shards=n_shards, variant="cnb",
+        m=cfg.m + 1,  # +1: self-match is filtered on the host (no exclude
+        #               support on the wire — the id is not secret, Sec. 6)
+        routing="alltoall",
+        cap_factor=float(n_shards if cap_factor is None else cap_factor),
+    )
+    n_dev = int(np.prod([mesh.shape[a] for a in ("data", "model")]))
+    nu_pad = -(-cfg.num_users // n_dev) * n_dev
+    nq_pad = -(-cfg.num_queries // n_dev) * n_dev
+
+    store = dist.shard_store(
+        mesh, make_store(cfg.L, params.num_buckets, cfg.capacity,
+                         payload_dim=cfg.dim)
+    )
+    insert = dist.make_insert_step(dcfg, mesh)
+    search = dist.make_search_step(dcfg, mesh)
+    payload_sync = dist.make_payload_sync(dcfg, mesh)
+    refresh_cache = (
+        dist.make_refresh_cache(dcfg, mesh) if dcfg.node_bits > 0 else None
+    )
+    vspec = NamedSharding(mesh, P(("data", "model"), None))
+    ispec = NamedSharding(mesh, P(("data", "model")))
+    all_ids = _pad_to(np.arange(cfg.num_users, dtype=np.int32), nu_pad, -1)
+
+    cache = None
+    last_refresh = 0
+    recalls, staleness, dropped = [], [], []
+    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
+        if do_refresh:
+            vd = jax.device_put(
+                jnp.asarray(_pad_to(vecs, nu_pad, 0.0)), vspec)
+            store = insert(
+                hp, store, vd, jax.device_put(jnp.asarray(all_ids), ispec),
+                jnp.int32(epoch),
+            )
+            if epoch > 0:
+                store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
+            # entries left in a mover's OLD buckets must score with its
+            # latest announced vector (the LshEngine corpus semantics)
+            store = payload_sync(store, vd)
+            if refresh_cache is not None:
+                cache = refresh_cache(store.ids, store.payload)
+            last_refresh = epoch
+        if epoch == 0:
+            continue
+
+        q = jax.device_put(
+            jnp.asarray(_pad_to(vecs[qidx], nq_pad, 0.0)), vspec)
+        args = (hp, store.ids, store.payload)
+        if cache is not None:
+            args += cache
+        ids, _, drop = search(*args, q)
+        ids = np.asarray(ids)[: cfg.num_queries]
+        # host-side self-exclusion: drop the query's own id, keep top-m
+        keep = ids != qidx[:, None]
+        ids_m = np.full((cfg.num_queries, cfg.m), -1, np.int32)
+        for i in range(cfg.num_queries):
+            ids_m[i] = ids[i][keep[i]][: cfg.m]
+        recalls.append(metrics.recall_at_m(ids_m, ideal))
+        # epochs since the last announce+cache rebuild — the single-host
+        # driver's `epoch % refresh_every` convention, kept comparable
+        staleness.append(epoch - last_refresh)
+        dropped.append(int(drop))
+
+    stale_arr = np.asarray(staleness)
+    return dict(
+        recalls=np.asarray(recalls),
+        # one measurement, two names: announce and cache rebuild share the
+        # refresh schedule, so store staleness == cache staleness here
+        # (`staleness` mirrors the single-host dict's key).
+        staleness=stale_arr,
+        cache_staleness=stale_arr,
+        dropped_probes=np.asarray(dropped),
         final_recall=float(recalls[-1]),
         mean_recall=float(np.mean(recalls)),
         refresh_every=cfg.refresh_every,

@@ -6,10 +6,17 @@ device j owns the contiguous sketch-prefix zone {codes with high bits == j}
 device is both a peer that receives queries and a bucket node, exactly as in
 the paper's P2P OSN).  Bucket state is replicated across the data/pod axes.
 
+Probe planning is NOT implemented here: `repro.core.plan` turns each query
+into a `ProbePlan` (owner shard, local bucket, probe bitmask), exactly the
+planner the single-host `LshEngine` runs — so `ranked_probes` and the
+`num_probes` budget behave identically on both runtimes (equivalence
+CI-checked in tests/test_distributed.py).  The probe bitmask rides the
+routed metadata: the owner shard applies its local bits, the neighbor
+cache / XOR-neighbor forwards apply its node bits.
+
 Per-variant communication on the query path (mirrors Table 1):
   lsh  : route each (query, table) to its owner shard  [all_to_all]
-         + search the exact bucket + the local-bit near buckets? NO —
-         plain LSH probes the exact bucket only.
+         and search the exact bucket only.
   nb   : lsh + forward to the log2(n_shards) XOR-neighbors [2 ppermutes/bit]
          to cover node-bit near buckets; local-bit near buckets are free.
   cnb  : lsh routing, with node-bit near buckets served from a local cache
@@ -17,8 +24,12 @@ Per-variant communication on the query path (mirrors Table 1):
          `refresh_cache` (the paper's periodic bucket exchange).
 
 Routing modes (a §Perf knob):
-  alltoall : per-destination padded send buffers, one fused all_to_all each
-             way — bytes ~ L*cap_factor/n_shards of the all_gather cost.
+  alltoall : per-destination padded send buffers built by
+             `repro.core.routing` (one fused all_to_all each way) — bytes
+             ~ L*cap_factor/n_shards of the all_gather cost.  Overflowed
+             probes are COUNTED, not silently eaten: every step returns a
+             `dropped_probes` scalar (0 in healthy operation; raise
+             `cap_factor` if it isn't).
   allgather: replicate queries along `model`, return per-origin results via
              all_to_all — simple, no overflow, more bytes.
 """
@@ -26,14 +37,15 @@ Routing modes (a §Perf knob):
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import hashing, scoring
+from repro.core import plan as plan_mod
+from repro.core import routing as routing_mod
+from repro.core import scoring
 from repro.core.can import CanTopology
 from repro.core.hashing import LshParams
 from repro.core.scoring import dedupe_topk
@@ -51,6 +63,8 @@ class DistConfig:
     routing: str = "alltoall"     # alltoall | allgather
     cap_factor: float = 2.0       # per-destination buffer slack (alltoall)
     probe_local_near: bool = True  # search local-bit near buckets (nb/cnb)
+    num_probes: int | None = None  # None => all k 1-near buckets (the paper)
+    ranked_probes: bool = False    # margin-ranked probe subset (beyond paper)
     use_kernels: bool = False      # fused Pallas score/top-m on each shard
 
     @property
@@ -65,11 +79,15 @@ class DistConfig:
     def local_bits(self) -> int:
         return self.topo.local_bits
 
-    def probes_per_table_local(self) -> int:
-        """Buckets searched at the owner shard per (query, table)."""
-        if self.variant == "lsh":
-            return 1
-        return 1 + (self.local_bits if self.probe_local_near else 0)
+    @property
+    def probe_spec(self) -> plan_mod.ProbeSpec:
+        """The shared probe discipline (same planner as `LshEngine`)."""
+        return plan_mod.ProbeSpec(
+            params=self.params,
+            variant=self.variant,
+            num_probes=self.num_probes,
+            ranked_probes=self.ranked_probes,
+        )
 
 
 # -----------------------------------------------------------------------------
@@ -77,17 +95,21 @@ class DistConfig:
 # -----------------------------------------------------------------------------
 
 
-def _local_probe_buckets(cfg: DistConfig, local_idx: jax.Array) -> jax.Array:
-    """Local bucket indices to probe for a query landing on this shard.
+def _local_include_near(cfg: DistConfig) -> bool:
+    return cfg.variant != "lsh" and cfg.probe_local_near
 
-    local_idx: int32 [...]. Returns [..., P_local] — exact bucket first,
-    then the local-bit 1-near buckets (free probes: same device).
-    """
-    if cfg.variant == "lsh" or not cfg.probe_local_near or cfg.local_bits == 0:
-        return local_idx[..., None]
-    flips = (1 << jnp.arange(cfg.local_bits, dtype=jnp.int32))
-    near = jnp.bitwise_xor(local_idx[..., None], flips)
-    return jnp.concatenate([local_idx[..., None], near], axis=-1)
+
+def _node_bit_valid(cfg: DistConfig, mask: jax.Array) -> jax.Array:
+    """[r, node_bits] — is the flip of node bit j probed for each query?
+    (the planner's mask-layout helper, stacked over this config's bits)"""
+    if cfg.node_bits == 0:
+        return jnp.zeros(mask.shape + (0,), bool)
+    topo = cfg.topo
+    return jnp.stack(
+        [plan_mod.node_bit_probe_valid(topo, mask, b)
+         for b in range(cfg.node_bits)],
+        axis=-1,
+    )
 
 
 def _score_local(
@@ -97,11 +119,15 @@ def _score_local(
     q: jax.Array,              # [r, d]
     table: jax.Array,          # [r] int32
     local_idx: jax.Array,      # [r] int32 bucket index within shard
+    mask: jax.Array,           # [r] int32/uint32 probe bitmask (plan)
     m: int,
 ):
-    """Top-m among (exact + local near) buckets of each routed query."""
-    probes = _local_probe_buckets(cfg, local_idx)          # [r, P]
+    """Top-m among (exact + masked local near) buckets of a routed query."""
+    probes, pvalid = plan_mod.shard_local_probes(
+        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
+    )                                                      # [r, P] both
     cand_ids = store_ids[table[:, None], probes]           # [r, P, C]
+    cand_ids = jnp.where(pvalid[..., None], cand_ids, -1)
     cand_vec = store_payload[table[:, None], probes]       # [r, P, C, D]
     r = q.shape[0]
     cand_ids = cand_ids.reshape(r, -1)
@@ -118,24 +144,53 @@ def _score_cache(
     q: jax.Array,              # [r, d]
     table: jax.Array,          # [r]
     local_idx: jax.Array,      # [r]
+    mask: jax.Array,           # [r]
     m: int,
 ):
-    """CNB: score the node-bit near buckets from the neighbor cache.
+    """CNB: score the masked node-bit near buckets from the neighbor cache.
 
     Flipping node bit j keeps the local index unchanged, so the near bucket
-    of bit j is cache[table, j, local_idx] — a pure local gather.
+    of bit j is cache[table, j, local_idx] — a pure local gather, gated per
+    query by node bit j of the probe mask.
     """
     nbits = cache_ids.shape[1]
-    cand_ids = cache_ids[table[:, None], jnp.arange(nbits)[None, :], local_idx[:, None]]
-    cand_vec = cache_payload[
-        table[:, None], jnp.arange(nbits)[None, :], local_idx[:, None]
-    ]  # [r, nbits, C, D]
+    jj = jnp.arange(nbits)[None, :]
+    cand_ids = cache_ids[table[:, None], jj, local_idx[:, None]]  # [r, nbits, C]
+    cand_ids = jnp.where(_node_bit_valid(cfg, mask)[..., None], cand_ids, -1)
+    cand_vec = cache_payload[table[:, None], jj, local_idx[:, None]]
     r = q.shape[0]
     cand_ids = cand_ids.reshape(r, -1)
     cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
     return scoring.score_topk(
         q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
     )
+
+
+def _neighbor_parts(
+    cfg: DistConfig, store_ids, store_payload, rq, rtable, rlocal, rmask, m
+):
+    """NB: forward routed queries to each XOR-neighbor; it scores ITS exact
+    bucket at the same local index (node-bit flip keeps local bits), then
+    returns the partial top-m.  2 ppermutes per node bit; the origin query's
+    probe mask gates each bit's contribution."""
+    nbit_valid = _node_bit_valid(cfg, rmask)           # [r, nbits]
+    ids_parts, sc_parts = [], []
+    for j in range(cfg.node_bits):
+        perm = cfg.topo.neighbor_perm(j)
+        nq = jax.lax.ppermute(rq, "model", perm)
+        nt = jax.lax.ppermute(rtable, "model", perm)
+        nl = jax.lax.ppermute(rlocal, "model", perm)
+        ids_j, sc_j = _score_local(
+            dataclasses.replace(cfg, variant="lsh"),   # exact bucket only
+            store_ids, store_payload, nq, nt, nl,
+            jnp.zeros_like(rmask), m,
+        )
+        ids_j = jax.lax.ppermute(ids_j, "model", perm)
+        sc_j = jax.lax.ppermute(sc_j, "model", perm)
+        keep = nbit_valid[:, j][:, None]
+        ids_parts.append(jnp.where(keep, ids_j, -1))
+        sc_parts.append(jnp.where(keep, sc_j, NEG_INF))
+    return ids_parts, sc_parts
 
 
 # -----------------------------------------------------------------------------
@@ -149,6 +204,26 @@ def _merge_topk(ids_list, scores_list, m):
     return dedupe_topk(ids, scores, m)
 
 
+def _flat_plan(cfg: DistConfig, q: jax.Array, hyperplanes: jax.Array):
+    """Run the shared planner and flatten to (query, table) granularity."""
+    L = cfg.params.L
+    b_loc = q.shape[0]
+    plan = plan_mod.make_plan(cfg.probe_spec, q, hyperplanes, cfg.topo)
+    flat = dict(
+        owner=plan.owner.reshape(-1),                   # [b_loc*L]
+        local=plan.local_idx.reshape(-1),
+        mask=plan.probe_mask.astype(jnp.int32).reshape(-1),
+        table=jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_loc,)),
+        qidx=jnp.repeat(jnp.arange(b_loc, dtype=jnp.int32), L),
+    )
+    return plan, flat
+
+
+def _route_cap(cfg: DistConfig, b_loc: int) -> int:
+    cap = int(np.ceil(b_loc * cfg.params.L / cfg.n_shards * cfg.cap_factor))
+    return max(cap, 1)
+
+
 def _search_shard(
     cfg: DistConfig,
     hyperplanes: jax.Array,
@@ -158,91 +233,61 @@ def _search_shard(
     cache_payload: jax.Array | None,
     q: jax.Array,  # [b_loc, d] — this device's slice of the query batch
 ):
-    """Runs on every device under shard_map; returns ([b_loc, m] ids, scores)."""
-    L, k, m = cfg.params.L, cfg.params.k, cfg.m
+    """Runs on every device under shard_map.
+
+    Returns (ids [b_loc, m], scores [b_loc, m], dropped int32) — `dropped`
+    counts this device's (query, table) probes that overflowed the
+    capacitated all_to_all send buffers (always 0 for allgather routing).
+    """
+    L, m = cfg.params.L, cfg.m
     n = cfg.n_shards
     b_loc, d = q.shape
-    codes = hashing.sketch_codes(q, hyperplanes)            # [b_loc, L]
-    owner = (codes >> cfg.local_bits).astype(jnp.int32)     # [b_loc, L]
-    local_idx = (codes & ((1 << cfg.local_bits) - 1)).astype(jnp.int32)
+    _, flat = _flat_plan(cfg, q, hyperplanes)
 
     if cfg.routing == "allgather":
-        return _search_allgather(
-            cfg, store_ids, store_payload, cache_ids, cache_payload,
-            q, owner, local_idx,
+        ids, sc = _search_allgather(
+            cfg, store_ids, store_payload, cache_ids, cache_payload, q, flat
         )
+        return ids, sc, jnp.int32(0)
 
     # ---- all_to_all routing (DHT-lookup analogue) ---------------------------
-    cap = int(np.ceil(b_loc * L / n * cfg.cap_factor))
-    cap = max(cap, 1)
-    flat_owner = owner.reshape(-1)              # [b_loc*L]
-    flat_local = local_idx.reshape(-1)
-    flat_table = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_loc,))
-    flat_qidx = jnp.repeat(jnp.arange(b_loc, dtype=jnp.int32), L)
-
-    order = jnp.argsort(flat_owner)
-    o_sorted = flat_owner[order]
-    pos = jnp.arange(o_sorted.shape[0], dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), o_sorted[1:] != o_sorted[:-1]]
+    cap = _route_cap(cfg, b_loc)
+    route = routing_mod.plan_routes(flat["owner"], n, cap)
+    meta = jnp.stack(
+        [flat["qidx"], flat["table"], flat["local"], flat["mask"]], axis=-1
     )
-    run_start = jax.lax.associative_scan(
-        jnp.maximum, jnp.where(is_start, pos, 0)
-    )
-    slot = pos - run_start                      # rank within destination
-    ok = slot < cap                             # overflow dropped (counted)
-
-    dest = jnp.where(ok, o_sorted, 0)
-    slot_c = jnp.where(ok, slot, cap - 1)
-
-    send_q = jnp.zeros((n, cap, d), q.dtype)
-    send_meta = jnp.full((n, cap, 3), -1, jnp.int32)  # (qidx, table, local)
-    src_vals = jnp.stack(
-        [flat_qidx[order], flat_table[order], flat_local[order]], axis=-1
-    )
-    send_q = send_q.at[dest, slot_c].set(
-        jnp.where(ok[:, None], q[flat_qidx[order]], 0.0)
-    )
-    send_meta = send_meta.at[dest, slot_c].set(
-        jnp.where(ok[:, None], src_vals, -1)
-    )
+    send_q = routing_mod.build_send_buffer(route, n, cap, q[flat["qidx"]], 0.0)
+    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
 
     recv_q = jax.lax.all_to_all(send_q, "model", 0, 0, tiled=True)
     recv_meta = jax.lax.all_to_all(send_meta, "model", 0, 0, tiled=True)
     rq = recv_q.reshape(n * cap, d)
     rtable = recv_meta[..., 1].reshape(-1)
     rlocal = recv_meta[..., 2].reshape(-1)
+    rmask = recv_meta[..., 3].reshape(-1)
     rvalid = rtable >= 0
     rtable_c = jnp.maximum(rtable, 0)
     rlocal_c = jnp.maximum(rlocal, 0)
+    rmask_c = jnp.maximum(rmask, 0)
 
     ids_o, sc_o = _score_local(
-        cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, m
+        cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, rmask_c, m
     )
     ids_parts, sc_parts = [ids_o], [sc_o]
 
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
         ids_c, sc_c = _score_cache(
-            cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, m
+            cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, rmask_c, m
         )
         ids_parts.append(ids_c)
         sc_parts.append(sc_c)
 
     if cfg.variant == "nb":
-        # forward routed queries to each XOR-neighbor; it scores ITS bucket
-        # at the same local index (node-bit flip keeps local bits), then
-        # returns the partial top-m. 2 ppermutes per node bit.
-        for j in range(cfg.node_bits):
-            perm = [(i, i ^ (1 << j)) for i in range(n)]
-            nq = jax.lax.ppermute(rq, "model", perm)
-            nt = jax.lax.ppermute(rtable_c, "model", perm)
-            nl = jax.lax.ppermute(rlocal_c, "model", perm)
-            ids_j, sc_j = _score_local(
-                dataclasses.replace(cfg, variant="lsh"),  # exact bucket only
-                store_ids, store_payload, nq, nt, nl, m,
-            )
-            ids_parts.append(jax.lax.ppermute(ids_j, "model", perm))
-            sc_parts.append(jax.lax.ppermute(sc_j, "model", perm))
+        ids_n, sc_n = _neighbor_parts(
+            cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, rmask_c, m
+        )
+        ids_parts += ids_n
+        sc_parts += sc_n
 
     ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)   # [n*cap, m]
     ids_r = jnp.where(rvalid[:, None], ids_r, -1)
@@ -251,21 +296,34 @@ def _search_shard(
     # ---- return results to origin -------------------------------------------
     back_i = jax.lax.all_to_all(ids_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
     back_s = jax.lax.all_to_all(sc_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
-    # origin gathers its (query, table) slots: entry for flat index f went to
-    # (dest[f], slot[f]); after all_to_all those live at [dest[f], slot[f]].
-    gather_i = back_i[dest, slot_c]                     # [b_loc*L, m] (sorted order)
-    gather_s = back_s[dest, slot_c]
-    gather_i = jnp.where(ok[:, None], gather_i, -1)
-    gather_s = jnp.where(ok[:, None], gather_s, NEG_INF)
-    # unsort back to (query, table) order
-    unsort = jnp.argsort(order)
-    gather_i = gather_i[unsort].reshape(b_loc, L * m)
-    gather_s = gather_s[unsort].reshape(b_loc, L * m)
-    return dedupe_topk(gather_i, gather_s, m)
+    gather_i = routing_mod.return_to_origin(route, back_i, -1)      # [b_loc*L, m]
+    gather_s = routing_mod.return_to_origin(route, back_s, NEG_INF)
+    gather_i = gather_i.reshape(b_loc, L * m)
+    gather_s = gather_s.reshape(b_loc, L * m)
+    ids, sc = dedupe_topk(gather_i, gather_s, m)
+    return ids, sc, route.dropped
+
+
+def _gather_flat_meta(flat: dict, b_loc: int, L: int, names):
+    """all_gather the named per-(query, table) flat fields along `model`.
+
+    Shared prologue of the two allgather branches (search + contains), so
+    the [b_loc, L] re-flatten layout cannot drift between them.  Returns
+    ({name: [b_all*L]}, table index [b_all*L], b_all).
+    """
+    gathered = {
+        name: jax.lax.all_gather(
+            flat[name].reshape(b_loc, L), "model", axis=0, tiled=True
+        ).reshape(-1)
+        for name in names
+    }
+    b_all = next(iter(gathered.values())).shape[0] // L
+    rtable = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_all,))
+    return gathered, rtable, b_all
 
 
 def _search_allgather(
-    cfg, store_ids, store_payload, cache_ids, cache_payload, q, owner, local_idx
+    cfg, store_ids, store_payload, cache_ids, cache_payload, q, flat
 ):
     """Dense fallback: replicate queries along `model`, each shard scores the
     (query, table) pairs it owns, results return via all_to_all."""
@@ -273,34 +331,30 @@ def _search_allgather(
     b_loc = q.shape[0]
     me = jax.lax.axis_index("model")
 
-    q_all = jax.lax.all_gather(q, "model", axis=0, tiled=True)          # [b_all, d]
-    owner_all = jax.lax.all_gather(owner, "model", axis=0, tiled=True)  # [b_all, L]
-    local_all = jax.lax.all_gather(local_idx, "model", axis=0, tiled=True)
-
-    b_all = q_all.shape[0]
+    g, rtable, b_all = _gather_flat_meta(
+        flat, b_loc, L, ("owner", "local", "mask"))
+    q_all = jax.lax.all_gather(q, "model", axis=0, tiled=True)  # [b_all, d]
     rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d]
-    rtable = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_all,))
-    rlocal = local_all.reshape(-1)
-    mine = owner_all.reshape(-1) == me
+    rlocal = g["local"]
+    rmask = g["mask"]
+    mine = g["owner"] == me
 
-    ids_o, sc_o = _score_local(cfg, store_ids, store_payload, rq, rtable, rlocal, m)
+    ids_o, sc_o = _score_local(
+        cfg, store_ids, store_payload, rq, rtable, rlocal, rmask, m
+    )
     ids_parts, sc_parts = [ids_o], [sc_o]
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
-        ids_c, sc_c = _score_cache(cfg, cache_ids, cache_payload, rq, rtable, rlocal, m)
+        ids_c, sc_c = _score_cache(
+            cfg, cache_ids, cache_payload, rq, rtable, rlocal, rmask, m
+        )
         ids_parts.append(ids_c)
         sc_parts.append(sc_c)
     if cfg.variant == "nb":
-        for j in range(cfg.node_bits):
-            perm = [(i, i ^ (1 << j)) for i in range(n)]
-            nq = jax.lax.ppermute(rq, "model", perm)
-            nt = jax.lax.ppermute(rtable, "model", perm)
-            nl = jax.lax.ppermute(rlocal, "model", perm)
-            ids_j, sc_j = _score_local(
-                dataclasses.replace(cfg, variant="lsh"),
-                store_ids, store_payload, nq, nt, nl, m,
-            )
-            ids_parts.append(jax.lax.ppermute(ids_j, "model", perm))
-            sc_parts.append(jax.lax.ppermute(sc_j, "model", perm))
+        ids_n, sc_n = _neighbor_parts(
+            cfg, store_ids, store_payload, rq, rtable, rlocal, rmask, m
+        )
+        ids_parts += ids_n
+        sc_parts += sc_n
 
     ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)       # [b_all*L, m]
     ids_r = jnp.where(mine[:, None], ids_r, -1)
@@ -315,6 +369,107 @@ def _search_allgather(
     got_i = got_i.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
     got_s = got_s.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
     return dedupe_topk(got_i, got_s, m)
+
+
+# -----------------------------------------------------------------------------
+# the sharded contains step (success-probability metric, paper Sec. 6.3)
+# -----------------------------------------------------------------------------
+
+
+def _contains_local(cfg, store_ids, table, local_idx, mask, target):
+    """bool [r]: does `target` sit in the (exact + masked local near)
+    buckets of each routed query?  Metadata-only — no payload gathers."""
+    probes, pvalid = plan_mod.shard_local_probes(
+        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
+    )
+    cand = store_ids[table[:, None], probes]                # [r, P, C]
+    hit = (cand == target[:, None, None]) & pvalid[..., None]
+    return jnp.any(hit, axis=(1, 2))
+
+
+def _contains_shard(
+    cfg: DistConfig,
+    hyperplanes: jax.Array,
+    store_ids: jax.Array,
+    cache_ids: jax.Array | None,
+    q: jax.Array,        # [b_loc, d]
+    targets: jax.Array,  # [b_loc] int32
+):
+    """Distributed `LshEngine.contains`: was target y's id in ANY searched
+    bucket of query x?  Routes only metadata (no query payload): membership
+    needs bucket ids, not vectors.  Returns (hits bool [b_loc], dropped)."""
+    L, n = cfg.params.L, cfg.n_shards
+    b_loc = q.shape[0]
+    _, flat = _flat_plan(cfg, q, hyperplanes)
+    flat_tgt = jnp.repeat(targets.astype(jnp.int32), L)
+
+    if cfg.routing == "allgather":
+        me = jax.lax.axis_index("model")
+        g, rtable, b_all = _gather_flat_meta(
+            dict(flat, target=flat_tgt), b_loc, L,
+            ("owner", "local", "mask", "target"))
+        hit = _contains_hits(
+            cfg, store_ids, cache_ids, rtable, g["local"], g["mask"],
+            g["target"],
+        )
+        hit = hit & (g["owner"] == me)
+        # OR across shards == psum of disjoint indicators, then own slice.
+        hit_all = jax.lax.psum(
+            hit.reshape(b_all, L).any(axis=-1).astype(jnp.int32), "model"
+        )
+        hits = jax.lax.dynamic_slice_in_dim(hit_all, me * b_loc, b_loc) > 0
+        return hits, jnp.int32(0)
+
+    cap = _route_cap(cfg, b_loc)
+    route = routing_mod.plan_routes(flat["owner"], n, cap)
+    meta = jnp.stack(
+        [flat["qidx"], flat["table"], flat["local"], flat["mask"], flat_tgt],
+        axis=-1,
+    )
+    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
+    recv_meta = jax.lax.all_to_all(send_meta, "model", 0, 0, tiled=True)
+    rtable = jnp.maximum(recv_meta[..., 1].reshape(-1), 0)
+    rlocal = jnp.maximum(recv_meta[..., 2].reshape(-1), 0)
+    rmask = jnp.maximum(recv_meta[..., 3].reshape(-1), 0)
+    rtgt = recv_meta[..., 4].reshape(-1)
+
+    hit = _contains_hits(cfg, store_ids, cache_ids, rtable, rlocal, rmask, rtgt)
+    # empty-slot rows carry rtgt = -1, which DOES match empty bucket ids
+    # (-1); this validity mask is what discards those spurious hits.
+    hit = hit & (recv_meta[..., 1].reshape(-1) >= 0)
+
+    back = jax.lax.all_to_all(
+        hit.reshape(n, cap).astype(jnp.int32), "model", 0, 0, tiled=True
+    )
+    got = routing_mod.return_to_origin(route, back, 0)       # [b_loc*L]
+    hits = got.reshape(b_loc, L).any(axis=-1)
+    return hits, route.dropped
+
+
+def _contains_hits(cfg, store_ids, cache_ids, rtable, rlocal, rmask, rtgt):
+    """Membership across owner buckets + node-bit coverage (cache or
+    neighbor forwards), mirroring the search step's candidate pool."""
+    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt)
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        nbits = cache_ids.shape[1]
+        jj = jnp.arange(nbits)[None, :]
+        cand = cache_ids[rtable[:, None], jj, rlocal[:, None]]  # [r, nbits, C]
+        valid = _node_bit_valid(cfg, rmask)[..., None]
+        hit |= jnp.any((cand == rtgt[:, None, None]) & valid, axis=(1, 2))
+    if cfg.variant == "nb":
+        nbit_valid = _node_bit_valid(cfg, rmask)
+        for j in range(cfg.node_bits):
+            perm = cfg.topo.neighbor_perm(j)
+            nt = jax.lax.ppermute(rtable, "model", perm)
+            nl = jax.lax.ppermute(rlocal, "model", perm)
+            ntgt = jax.lax.ppermute(rtgt, "model", perm)
+            hit_j = _contains_local(
+                dataclasses.replace(cfg, variant="lsh"),
+                store_ids, nt, nl, jnp.zeros_like(nl), ntgt,
+            )
+            hit_j = jax.lax.ppermute(hit_j, "model", perm)
+            hit |= hit_j & nbit_valid[:, j]
+    return hit
 
 
 # -----------------------------------------------------------------------------
@@ -346,7 +501,7 @@ def make_refresh_cache(cfg: DistConfig, mesh):
     Returns (cache_ids [T, nbits, NB/n, C], cache_payload [T, nbits, NB/n, C, D])
     sharded like the store.
     """
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     n = cfg.n_shards
     nbits = cfg.node_bits
@@ -371,9 +526,19 @@ def make_refresh_cache(cfg: DistConfig, mesh):
     return jax.jit(fn)
 
 
+def _psum_axes(batch_axes) -> tuple[str, ...]:
+    """Axes the per-device drop counts are distinct over (dedup'd)."""
+    return tuple(dict.fromkeys(tuple(batch_axes) + ("model",)))
+
+
 def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed search: queries [B, d] sharded over batch_axes ->
-    (ids [B, m], scores [B, m]) with the same sharding."""
+    (ids [B, m], scores [B, m], dropped_probes int32 scalar).
+
+    ids/scores keep the query sharding; `dropped_probes` is the GLOBAL
+    count of (query, table) probes that overflowed the capacitated
+    all_to_all buffers this step (replicated; 0 under allgather routing).
+    """
     from jax.sharding import PartitionSpec as P
 
     qspec = P(batch_axes, None)
@@ -381,30 +546,86 @@ def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     store_p = P(None, "model", None, None)
     cache_i = P(None, None, "model", None)
     cache_p = P(None, None, "model", None, None)
+    out_specs = (P(batch_axes, None), P(batch_axes, None), P())
+    psum_axes = _psum_axes(batch_axes)
 
     has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
 
     if has_cache:
 
         def step(hyperplanes, ids, payload, c_ids, c_payload, q):
-            return _search_shard(cfg, hyperplanes, ids, payload, c_ids, c_payload, q)
+            i, s, drop = _search_shard(
+                cfg, hyperplanes, ids, payload, c_ids, c_payload, q
+            )
+            return i, s, jax.lax.psum(drop, psum_axes)
 
         fn = compat.shard_map(
             step,
             mesh=mesh,
             in_specs=(P(), store_i, store_p, cache_i, cache_p, qspec),
-            out_specs=(P(batch_axes, None), P(batch_axes, None)),
+            out_specs=out_specs,
         )
     else:
 
         def step(hyperplanes, ids, payload, q):
-            return _search_shard(cfg, hyperplanes, ids, payload, None, None, q)
+            i, s, drop = _search_shard(
+                cfg, hyperplanes, ids, payload, None, None, q
+            )
+            return i, s, jax.lax.psum(drop, psum_axes)
 
         fn = compat.shard_map(
             step,
             mesh=mesh,
             in_specs=(P(), store_i, store_p, qspec),
-            out_specs=(P(batch_axes, None), P(batch_axes, None)),
+            out_specs=out_specs,
+        )
+    return jax.jit(fn)
+
+
+def make_contains_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+    """jit'd distributed `contains` (paper Sec. 6.3 success probability):
+    (hyperplanes, store_ids, [cache_ids,] queries [B, d], targets [B]) ->
+    (hits bool [B], dropped_probes int32).
+
+    Was target y's id inside ANY bucket the query searched — membership in
+    the probed buckets, not top-m.  Uses the same `ProbePlan` and router
+    as the search step, so the measured success probability is exactly the
+    deployed query discipline's.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    qspec = P(batch_axes, None)
+    tspec = P(batch_axes)
+    store_i = P(None, "model", None)
+    cache_i = P(None, None, "model", None)
+    out_specs = (P(batch_axes), P())
+    psum_axes = _psum_axes(batch_axes)
+
+    has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
+
+    if has_cache:
+
+        def step(hyperplanes, ids, c_ids, q, targets):
+            h, drop = _contains_shard(cfg, hyperplanes, ids, c_ids, q, targets)
+            return h, jax.lax.psum(drop, psum_axes)
+
+        fn = compat.shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(P(), store_i, cache_i, qspec, tspec),
+            out_specs=out_specs,
+        )
+    else:
+
+        def step(hyperplanes, ids, q, targets):
+            h, drop = _contains_shard(cfg, hyperplanes, ids, None, q, targets)
+            return h, jax.lax.psum(drop, psum_axes)
+
+        fn = compat.shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(P(), store_i, qspec, tspec),
+            out_specs=out_specs,
         )
     return jax.jit(fn)
 
@@ -428,13 +649,15 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
         # see every vector, not just its own data-row's slice.
         vec_all = jax.lax.all_gather(vec, batch_axes, axis=0, tiled=True)
         vid_all = jax.lax.all_gather(vid, batch_axes, axis=0, tiled=True)
-        codes = hashing.sketch_codes(vec_all, hyperplanes)      # [nv, L]
-        owner = (codes >> cfg.local_bits).astype(jnp.int32)
-        local = (codes & ((1 << cfg.local_bits) - 1)).astype(jnp.uint32)
-        # mark foreign (table, vector) entries invalid: ring insert skips id<0?
-        # store.insert_batch inserts everything, so blank foreign rows by
-        # pointing them at bucket 0 with id -1 (harmless: -1 ids are invalid
-        # everywhere and get overwritten by the ring buffer).
+        plan = plan_mod.make_plan(
+            # insert wants only the owner/local split of the exact bucket
+            dataclasses.replace(cfg.probe_spec, variant="lsh"),
+            vec_all, hyperplanes, cfg.topo,
+        )
+        owner, local = plan.owner, plan.local_idx.astype(jnp.uint32)
+        # mark foreign (table, vector) entries invalid: blank foreign rows
+        # with id -1; insert_masked routes them out of bounds (mode='drop')
+        # so they can't clobber live slots.
         st = store_mod.BucketStore(ids_store, ts_store, ptr, payload_store)
         mine_any = owner == me[None, None]                       # [nv, L]
         new = st
@@ -479,6 +702,52 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     return insert
 
 
+def make_payload_sync(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+    """jit'd payload re-sync: point every live bucket entry's payload at the
+    latest announced vector of its id.
+
+    The semantic reference (`LshEngine`) scores candidates through an
+    id-keyed corpus — always the LATEST announced vector — while the
+    embedded-payload store keeps whatever was announced into each bucket.
+    After a re-announce moves a user to new buckets, copies left in its
+    old buckets (alive until the TTL GC collects them) would score with
+    outdated vectors; this step restores the reference semantics.
+    Timestamps are untouched, so GC behaviour is unchanged.
+
+    Contract: `vec` row i must be the vector of user id i (dense 0-based
+    ids), sharded over `batch_axes` — the layout the churn driver uses.
+    Donates and returns the store.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def _sync(ids_store, payload_store, vec):
+        vec_all = jax.lax.all_gather(vec, batch_axes, axis=0, tiled=True)
+        nv = vec_all.shape[0]
+        live = (ids_store >= 0) & (ids_store < nv)
+        gathered = vec_all[jnp.clip(ids_store, 0, nv - 1)]
+        return jnp.where(live[..., None], gathered, payload_store)
+
+    fn = compat.shard_map(
+        _sync,
+        mesh=mesh,
+        in_specs=(
+            P(None, "model", None),
+            P(None, "model", None, None),
+            P(batch_axes, None),
+        ),
+        out_specs=P(None, "model", None, None),
+    )
+
+    def _apply(store: BucketStore, vec):
+        return dataclasses.replace(
+            store, payload=fn(store.ids, store.payload, vec)
+        )
+
+    # donate the store: payload is the system's largest buffer and the old
+    # generation is dead after the sync (same convention as store.expire)
+    return jax.jit(_apply, donate_argnums=(0,))
+
+
 def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> dict:
     """Closed-form ICI bytes per search step (the Table-1 analogue in the
     byte domain); verified against HLO in benchmarks/bench_distributed.py."""
@@ -487,8 +756,8 @@ def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> d
     m = cfg.m
     L = cfg.params.L
     if cfg.routing == "alltoall":
-        cap = int(np.ceil(b_loc * L / n * cfg.cap_factor))
-        q_bytes = n * cap * d * 4 + n * cap * 3 * 4
+        cap = _route_cap(cfg, b_loc)
+        q_bytes = n * cap * d * 4 + n * cap * _META_INTS * 4
         r_bytes = 2 * n * cap * m * 4
     else:
         q_bytes = (n - 1) * b_loc * d * 4  # all_gather
@@ -501,3 +770,14 @@ def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> d
         nb_bytes = cfg.node_bits * per_bit * (d * 4 + 8 + 2 * m * 4 * 2)
     return dict(query_routing=q_bytes, results=r_bytes, neighbor=nb_bytes,
                 total=q_bytes + r_bytes + nb_bytes)
+
+
+_META_INTS = 4  # (qidx, table, local, probe_mask) per routed probe
+
+
+def estimate_refresh_bytes(cfg: DistConfig, capacity: int, d: int) -> int:
+    """ICI bytes of one CNB cache refresh per device: `node_bits` ppermutes
+    of the full local store shard (ids + payload)."""
+    nb_local = cfg.params.num_buckets // cfg.n_shards
+    per_permute = cfg.params.L * nb_local * capacity * (4 + d * 4)
+    return cfg.node_bits * per_permute

@@ -21,13 +21,13 @@ Query path (one jit'd dispatch over the whole padded batch):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, hashing, multiprobe, scoring
+from repro.core import costmodel, hashing, scoring
+from repro.core import plan as plan_mod
 from repro.core.can import CanTopology
 from repro.core.corpus import DenseCorpus, SparseCorpus
 from repro.core.hashing import LshParams
@@ -52,6 +52,10 @@ class SearchResult:
     scores: np.ndarray   # f32   [nq, m]
     cost: costmodel.QueryCost          # closed-form per-query cost (Table 1)
     sim_messages: float | None = None  # simulated avg messages (hop-counted)
+    dropped_probes: int = 0  # probes lost to routing overflow — always 0 on
+    #   the single-host engine (no capacitated routing); kept for API parity
+    #   with the distributed steps, which return the real count as their
+    #   third output (not through this class)
 
 
 class LshEngine:
@@ -84,38 +88,27 @@ class LshEngine:
         )
         self._contains_batched = jax.jit(self._contains_batched_impl)
 
-    # -- probe planning -------------------------------------------------------
+    # -- probe planning (thin view over the shared planner, core.plan) --------
+
+    @property
+    def probe_spec(self) -> plan_mod.ProbeSpec:
+        return plan_mod.ProbeSpec(
+            params=self.params,
+            variant=self.config.variant,
+            num_probes=self.config.num_probes,
+            ranked_probes=self.config.ranked_probes,
+        )
 
     @property
     def probes_per_table(self) -> int:
-        if self.config.variant in ("lsh", "layered"):
-            return 1
-        p = self.config.num_probes
-        return 1 + (self.params.k if p is None else p)
-
-    def _sketch(self, q: jax.Array) -> jax.Array:
-        """uint32 codes [nq, L] — Pallas simhash kernel or the jnp oracle."""
-        if self.config.use_kernels:
-            from repro.kernels import ops
-
-            return ops.simhash(q, self.hyperplanes)
-        return hashing.sketch_codes(q, self.hyperplanes)
+        return self.probe_spec.probes_per_table
 
     def _probe_codes(self, q: jax.Array) -> jax.Array:
         """[nq, L, P] bucket codes to search for each query."""
-        codes = self._sketch(q)  # [nq, L]
-        if self.config.variant in ("lsh", "layered"):
-            return codes[..., None]
-        k = self.params.k
-        p = self.config.num_probes
-        if p is None or p >= k:
-            return multiprobe.probe_codes(codes, k)
-        if self.config.ranked_probes:
-            margins = hashing.projection_margins(q, self.hyperplanes)
-            near = multiprobe.ranked_near_codes(codes, margins, k, p)
-        else:
-            near = multiprobe.near_codes(codes, k)[..., :p]
-        return jnp.concatenate([codes[..., None], near], axis=-1)
+        return plan_mod.make_plan(
+            self.probe_spec, q, self.hyperplanes, self.topology,
+            use_kernels=self.config.use_kernels,
+        ).probes
 
     # -- candidate gathering + scoring ---------------------------------------
 
@@ -220,7 +213,8 @@ class LshEngine:
         sim = (
             self.simulate_messages(queries, rng) if simulate_messages else None
         )
-        return SearchResult(out_i, out_s, cost, sim)
+        # single-host search has no capacitated routing: genuinely 0 drops
+        return SearchResult(out_i, out_s, cost, sim, dropped_probes=0)
 
     def contains(self, queries: jax.Array, target_ids: np.ndarray) -> np.ndarray:
         """Was target y searched for query x? (success-probability metric,

@@ -5,11 +5,11 @@ g_l(q) plus its k 1-near buckets (one flipped bit).  Proposition 3 shows
 1-near buckets dominate any b-near bucket with b >= 2, making that choice
 optimal for k extra probes.
 
-Beyond-paper extensions implemented here:
-  * margin-ranked probing (MultiProb-LSH style): probe only the p most
-    promising near buckets, ranked by the query's projection margin;
-  * b-near enumeration for b = 2 (for ablations showing diminishing returns,
-    matching Prop. 3).
+This module owns the raw near-bucket ENUMERATION only; probe *planning*
+(which near buckets to probe under a budget, margin ranking, the
+owner/local split) lives in `repro.core.plan`, the single planner both
+runtimes consume.  `b_near_codes_host` enumerates b = 2 for ablations
+showing diminishing returns, matching Prop. 3.
 """
 
 from __future__ import annotations
@@ -38,25 +38,6 @@ def probe_codes(codes: jax.Array, k: int) -> jax.Array:
     )
 
 
-def ranked_near_codes(
-    codes: jax.Array, margins: jax.Array, k: int, num_probes: int
-) -> jax.Array:
-    """Margin-ranked 1-near probes (beyond paper).
-
-    Args:
-      codes: uint32 [..., L] exact bucket ids.
-      margins: [..., L, k] |projection| per bit (small = likely flip).
-      num_probes: p <= k near buckets to probe per table.
-
-    Returns:
-      uint32 [..., L, p]: the p near buckets with smallest margins.
-    """
-    # Indices of the p smallest margins per (query, table).
-    order = jnp.argsort(margins, axis=-1)[..., :num_probes]
-    flips = (jnp.uint32(1) << order.astype(jnp.uint32))
-    return jnp.bitwise_xor(codes[..., None].astype(jnp.uint32), flips)
-
-
 def b_near_codes_host(code: int, k: int, b: int) -> np.ndarray:
     """Host-side enumeration of all C(k, b) b-near buckets of one code."""
     out = []
@@ -69,10 +50,13 @@ def b_near_codes_host(code: int, k: int, b: int) -> np.ndarray:
 
 
 def probe_plan_size(k: int, L: int, variant: str, num_probes: int | None = None) -> int:
-    """Buckets searched per query, per Table 1 ('vectors searched' / B)."""
-    p = k if num_probes is None else num_probes
-    if variant in ("lsh", "layered"):
-        return L
-    if variant in ("nb", "cnb"):
-        return L * (1 + p)
-    raise ValueError(f"unknown variant {variant!r}")
+    """Buckets searched per query, per Table 1 ('vectors searched' / B).
+
+    Thin view over `repro.core.plan.ProbeSpec` — the one owner of probe
+    sizing (deferred import: plan imports this module's enumerators).
+    """
+    from repro.core.hashing import LshParams
+    from repro.core.plan import ProbeSpec
+
+    spec = ProbeSpec(LshParams(d=1, k=k, L=L), variant, num_probes)
+    return L * spec.probes_per_table

@@ -1,0 +1,128 @@
+"""Capacitated compaction / routing shared across the system (DESIGN.md
+Sec. 3.2).
+
+One mechanism, three uses:
+  * the bucket store's ring-buffer insert (`repro.core.store`) ranks each
+    entry within its destination bucket to pick a write slot;
+  * the distributed all_to_all query router (`repro.core.distributed`)
+    ranks each (query, table) within its destination shard to pick a slot
+    in the padded per-destination send buffer;
+  * the MoE dispatch (`repro.models.moe`) ranks each routed token within
+    its destination expert to pick a capacity slot.
+
+All three are the same sort + run-rank + capacitated scatter; this module
+owns that machinery so the semantics (stable destination-major compaction,
+bounded buffers, explicit — never silent — overflow accounting) cannot
+drift apart between the layers.
+
+The router half (`plan_routes` / `build_send_buffer` / `return_to_origin`)
+additionally owns the all_to_all send-buffer layout: `[n_dests, cap, ...]`
+buffers whose leading axis is split by the collective, and the
+origin-side gather that returns per-item results after the reverse
+all_to_all.  Overflowed items are *counted* (`RoutePlan.dropped`) and
+surfaced by the callers (the `dropped_probes` output of every
+distributed step) instead of being silently eaten.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def run_ranks(sorted_keys: jax.Array) -> jax.Array:
+    """Rank of each element within its run of equal keys.
+
+    Args:
+      sorted_keys: int [n], sorted ascending (equal keys contiguous).
+
+    Returns:
+      int32 [n]; the j-th occurrence of a key gets rank j.
+    """
+    n = sorted_keys.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, pos, 0)
+    )
+    return pos - run_start
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoutePlan:
+    """Where each of n items goes in a [n_dests, cap] buffer.
+
+    All per-item arrays are in DESTINATION-SORTED order; `order` maps
+    sorted position -> original index (`items[order]` is the sorted view).
+    """
+
+    order: jax.Array    # int32 [n] sort permutation (by destination)
+    dest: jax.Array     # int32 [n] destination (sorted; overflow clamped to 0)
+    slot: jax.Array     # int32 [n] slot within dest (clamped to cap - 1)
+    ok: jax.Array       # bool  [n] item landed (slot < cap)
+    dropped: jax.Array  # int32 scalar: items that overflowed their dest
+
+
+def plan_routes(dest: jax.Array, n_dests: int, cap: int) -> RoutePlan:
+    """Assign each item a (dest, slot) in a capacitated per-dest buffer.
+
+    Items beyond `cap` for a destination are marked not-ok and counted in
+    `dropped`; their (dest, slot) are clamped so downstream scatters and
+    gathers stay in bounds.
+    """
+    order = jnp.argsort(dest)
+    d_sorted = dest[order].astype(jnp.int32)
+    slot = run_ranks(d_sorted)
+    ok = slot < cap
+    return RoutePlan(
+        order=order.astype(jnp.int32),
+        dest=jnp.where(ok, d_sorted, 0),
+        slot=jnp.where(ok, slot, cap - 1),
+        ok=ok,
+        dropped=jnp.sum(~ok).astype(jnp.int32),
+    )
+
+
+def _expand(mask: jax.Array, ndim: int) -> jax.Array:
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def build_send_buffer(
+    route: RoutePlan,
+    n_dests: int,
+    cap: int,
+    values: jax.Array,  # [n, ...] per-item payload, ORIGINAL order
+    fill,
+) -> jax.Array:
+    """Scatter per-item payloads into the [n_dests, cap, ...] send buffer.
+
+    Empty slots hold `fill`, so receivers detect them by the fill sentinel
+    of the metadata channel.  Overflowed items scatter to an out-of-bounds
+    destination and are dropped by the scatter (mode='drop') — they can
+    never clobber a surviving item's slot, no matter the scatter order.
+    """
+    v_sorted = values[route.order]
+    buf = jnp.full((n_dests, cap) + values.shape[1:], fill, values.dtype)
+    dest = jnp.where(route.ok, route.dest, n_dests)  # OOB => dropped
+    return buf.at[dest, route.slot].set(v_sorted, mode="drop")
+
+
+def return_to_origin(
+    route: RoutePlan,
+    back: jax.Array,  # [n_dests, cap, ...] returned per-slot results
+    fill,
+) -> jax.Array:
+    """Gather each item's result back out of the returned buffer.
+
+    Returns [n, ...] in ORIGINAL item order; overflowed (dropped) items
+    get `fill`.
+    """
+    g = back[route.dest, route.slot]
+    g = jnp.where(_expand(route.ok, back.ndim - 1), g, fill)
+    unsort = jnp.argsort(route.order)
+    return g[unsort]

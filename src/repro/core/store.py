@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.routing import run_ranks
+
 EMPTY = jnp.int32(-1)
 
 
@@ -83,17 +85,6 @@ def make_store(
     )
 
 
-def _batch_ranks(sorted_buckets: jax.Array) -> jax.Array:
-    """Rank of each element within its run of equal bucket ids (sorted)."""
-    n = sorted_buckets.shape[0]
-    pos = jnp.arange(n, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_buckets[1:] != sorted_buckets[:-1]]
-    )
-    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, pos, 0))
-    return pos - run_start
-
-
 def insert_masked(
     store: BucketStore,
     table: int,
@@ -102,32 +93,58 @@ def insert_masked(
     timestamp: jax.Array,  # int32 scalar
     payload: jax.Array | None = None,  # [n, D]
 ) -> BucketStore:
-    """Ring-buffer insert into one table; invalid (id < 0) entries dropped.
+    """Soft-state insert/refresh into one table (Sec. 4.1 semantics).
 
-    Invalid entries are routed to an out-of-bounds bucket and dropped by the
-    scatter (mode='drop'), so they can't clobber live slots — this is what
-    lets the sharded runtime insert 'only the vectors I own' branch-free.
+    An entry whose id already sits in its target bucket is REFRESHED IN
+    PLACE (timestamp + payload updated, slot kept) — re-announcing is an
+    update, not an append, so a bucket never holds two copies of one user
+    and stale payload generations cannot accumulate between GC passes.
+    New ids ring-append, overwriting the oldest slots on overflow.
+
+    Invalid (id < 0) entries are routed to an out-of-bounds bucket and
+    dropped by the scatter (mode='drop'), so they can't clobber live
+    slots — this is what lets the sharded runtime insert 'only the
+    vectors I own' branch-free.
     """
     l = table
     nb, cap = store.num_buckets, store.capacity
     valid = ids >= 0
     bucket = jnp.where(valid, buckets.astype(jnp.int32) % nb, nb)  # nb = OOB
-    order = jnp.argsort(bucket)
-    b_sorted = bucket[order]
-    ranks = _batch_ranks(b_sorted)
+    bucket_c = jnp.minimum(bucket, nb - 1)
+
+    # -- split: refresh-in-place (id already present) vs ring-append ------
+    match = store.ids[l, bucket_c] == ids[:, None]        # [n, C]
+    found = jnp.any(match, axis=-1) & valid
+    exist_slot = jnp.argmax(match, axis=-1)               # first match
+    upd_bucket = jnp.where(found, bucket_c, nb)           # not-found -> OOB
+
+    # -- ring-append the new ids (shared sort+rank machinery, core.routing)
+    app_bucket = jnp.where(found, nb, bucket)             # found -> OOB
+    order = jnp.argsort(app_bucket)
+    b_sorted = app_bucket[order]
+    ranks = run_ranks(b_sorted)
     base = store.write_ptr[l, jnp.minimum(b_sorted, nb - 1)]
     slot = (base + ranks) % cap
 
+    # refresh scatter FIRST, append scatter second: if an append wraps the
+    # ring onto a slot being refreshed, the appended entry wins wholesale
+    # (ids/ts/payload all from the append == a consistent ring eviction).
     new_ids = store.ids.at[l, b_sorted, slot].set(ids[order], mode="drop")
-    new_ts = store.timestamps.at[l, b_sorted, slot].set(timestamp, mode="drop")
+    new_ts = (
+        store.timestamps
+        .at[l, upd_bucket, exist_slot].set(timestamp, mode="drop")
+        .at[l, b_sorted, slot].set(timestamp, mode="drop")
+    )
     counts = jnp.zeros((nb,), jnp.int32).at[b_sorted].add(1, mode="drop")
     new_ptr = store.write_ptr.at[l].set((store.write_ptr[l] + counts) % cap)
     new_payload = store.payload
     if store.payload is not None:
         if payload is None:
             raise ValueError("store has payload; insert must provide vectors")
-        new_payload = store.payload.at[l, b_sorted, slot].set(
-            payload[order], mode="drop"
+        new_payload = (
+            store.payload
+            .at[l, upd_bucket, exist_slot].set(payload, mode="drop")
+            .at[l, b_sorted, slot].set(payload[order], mode="drop")
         )
     return BucketStore(new_ids, new_ts, new_ptr, new_payload)
 

@@ -9,11 +9,9 @@ interpret=False.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import bucket_topk as _bt
 from repro.kernels import hamming as _hm

@@ -18,7 +18,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -26,7 +25,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config

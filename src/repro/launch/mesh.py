@@ -24,5 +24,23 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
+def require_host_devices(n: int) -> None:
+    """Fail fast, with the recipe, when fewer than n host devices exist.
+
+    XLA fixes the device count at backend init, so this cannot be repaired
+    from inside the process — callers that need a multi-shard host mesh
+    (distributed churn, the subprocess tests) must set the flag first.
+    """
+    import jax
+
+    have = jax.device_count()
+    if have < n:
+        raise RuntimeError(
+            f"need {n} host devices, have {have}: set "
+            f'XLA_FLAGS="--xla_force_host_platform_device_count={n}" '
+            "before the first jax import"
+        )
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

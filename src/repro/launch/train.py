@@ -22,7 +22,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_config
 from repro.data import tokens as data_tokens
-from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models import sharding as sh
 from repro.train import optimizer as opt_mod

@@ -9,8 +9,9 @@ outputs, and a single psum over `model` combines the partial outputs.
 
 Routing (top-k + load-balance loss) happens outside the shard_map in plain
 GSPMD; only dispatch/compute/combine are manual.  The gather/scatter slot
-assignment reuses the same sort-rank trick as the LSH store and the LSH
-all_to_all router — one mechanism, three uses.
+assignment is `repro.core.routing.run_ranks` — the same sort-rank
+machinery as the LSH store and the LSH all_to_all router (one mechanism,
+three uses; DESIGN.md Sec. 3.2).
 
 The `dense_ep` combine (psum of [B,S,d]) is the robust baseline; §Perf
 iterations may switch hot configs to sequence-sharded all_to_all dispatch.
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.core import routing
 from repro.models import sharding as sh
 from repro.models.config import ModelConfig
 from repro.models.layers import _init
@@ -64,15 +66,6 @@ def init_moe(cfg: ModelConfig, key):
     return params, specs
 
 
-def _rank_in_runs(sorted_vals: jax.Array) -> jax.Array:
-    pos = jnp.arange(sorted_vals.shape[0], dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]]
-    )
-    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, pos, 0))
-    return pos - run_start
-
-
 def _expert_compute(wg, wu, wd, xe):
     """xe: [E_loc, cap, d] -> [E_loc, cap, d]."""
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
@@ -104,7 +97,7 @@ def _moe_shard(
     sort_key = jnp.where(mine, local_e, e_loc)      # foreign last
     order = jnp.argsort(sort_key)
     e_sorted = sort_key[order]
-    rank = _rank_in_runs(e_sorted)
+    rank = routing.run_ranks(e_sorted)
     # dispatch table [E_loc, cap] of flat token indices (-1 = empty);
     # foreign entries (e_sorted == e_loc) and over-capacity ranks fall
     # out-of-bounds and are dropped by the scatter.

@@ -152,7 +152,6 @@ def mamba_with_state(
 def mamba_decode(p, x: jax.Array, state, cfg: ModelConfig):
     """One-token step. x: [B, 1, d]; state = (h [B,di,N], conv [B,dc-1,di])."""
     h, conv_state = state
-    b = x.shape[0]
     di, n, r, dc = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_d_conv
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
     x_in, z = jnp.split(xz, 2, axis=-1)                 # [B,1,di]

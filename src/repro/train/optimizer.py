@@ -9,7 +9,6 @@ inside 16 GB/chip on a single 256-chip pod (DESIGN.md Sec. 6).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

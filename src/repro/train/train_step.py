@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
-from repro.models import sharding as sh
 from repro.models.config import ModelConfig
-from repro.models.unroll import maybe_checkpoint, scan as maybe_unrolled_scan
+from repro.models.unroll import maybe_checkpoint
 from repro.train import optimizer as opt
 
 

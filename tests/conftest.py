@@ -27,7 +27,7 @@ if SRC not in sys.path:  # keep subprocess-free runs working without PYTHONPATH
     sys.path.insert(0, SRC)
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAS_HYPOTHESIS = True
 except ImportError:

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import run_in_subprocess
 from repro.checkpoint import checkpoint as ckpt
 
 

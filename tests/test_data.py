@@ -30,8 +30,6 @@ def test_batch_shapes_per_modality():
 
 
 def test_input_specs_match_batches():
-    import jax
-
     for arch in ("gemma2-2b", "phi-3-vision-4.2b", "seamless-m4t-medium"):
         cfg = get_config(arch, smoke=True)
         specs = tokens.input_specs(cfg, 2, 32, kind="train")

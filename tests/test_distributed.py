@@ -1,5 +1,9 @@
-"""Distributed LSH runtime == reference engine (8 host devices, subprocess)."""
+"""Distributed LSH runtime == reference engine (8 host devices, subprocess),
+plus single-device (tier-1) coverage of the shared planner/router plumbing:
+overflow drop accounting, distributed `contains`, and the byte estimator.
+"""
 
+import numpy as np
 import pytest
 
 from conftest import run_in_subprocess
@@ -25,37 +29,110 @@ store_host = build_store_host(codes, params.num_buckets, capacity=512,
                               payload=vecs)
 B = 64
 q = vecs[rng.choice(N, B, replace=False)]
+targets = rng.integers(0, N, size=B).astype(np.int32)
 ids_only = BucketStore(store_host.ids, store_host.timestamps,
                        store_host.write_ptr, None)
 corpus = DenseCorpus(jnp.asarray(vecs))
-ref = {}
+
+# (variant, probe kwargs) cells: the paper's full-probe discipline plus the
+# beyond-paper budgeted/ranked modes the planner must keep identical across
+# the two runtimes.
+probe_cells = [
+    dict(),
+    dict(num_probes=2),
+    dict(num_probes=3, ranked_probes=True),
+]
+ref, ref_contains = {}, {}
 for variant in ("lsh", "nb", "cnb"):
-    e = LshEngine(params, H, ids_only, corpus, None,
-                  EngineConfig(variant=variant))
-    ref[variant] = e.search(jnp.asarray(q), m=m)
+    for pi, pkw in enumerate(probe_cells):
+        e = LshEngine(params, H, ids_only, corpus, None,
+                      EngineConfig(variant=variant, **pkw))
+        ref[variant, pi] = e.search(jnp.asarray(q), m=m)
+        ref_contains[variant, pi] = e.contains(jnp.asarray(q), targets)
 
 store_sh = dist.shard_store(mesh, store_host)
+qspec = NamedSharding(mesh, P(("data", "model"), None))
+tspec = NamedSharding(mesh, P(("data", "model")))
+qd = jax.device_put(jnp.asarray(q), qspec)
+td = jax.device_put(jnp.asarray(targets), tspec)
+# (routing, use_kernels, probe-cell indices to search, cells to contains):
+# full probe matrix on the routed path; spot checks elsewhere to bound the
+# compile count of this subprocess.
+runs = [
+    ("alltoall", False, (0, 1, 2), (0, 2)),
+    ("allgather", False, (0, 2), (0,)),
+    ("alltoall", True, (0,), ()),
+]
 for variant in ("lsh", "nb", "cnb"):
-    for routing, use_kernels in (("alltoall", False), ("allgather", False),
-                                 ("alltoall", True)):
-        cfg = dist.DistConfig(params=params, n_shards=4, variant=variant,
-                              m=m, routing=routing, cap_factor=3.0,
-                              use_kernels=use_kernels)
-        args = [H, store_sh.ids, store_sh.payload]
-        if variant == "cnb" and cfg.node_bits > 0:
-            refresh = dist.make_refresh_cache(cfg, mesh)
-            ci, cp = refresh(store_sh.ids, store_sh.payload)
-            args += [ci, cp]
-        step = dist.make_search_step(cfg, mesh)
-        qd = jax.device_put(jnp.asarray(q),
-                            NamedSharding(mesh, P(("data", "model"), None)))
-        ids, sc = step(*args, qd)
-        ids = np.asarray(ids)
-        want = ref[variant]
-        for i in range(B):
-            assert set(ids[i][ids[i] >= 0]) == set(
-                want.ids[i][want.ids[i] >= 0]), (variant, routing, use_kernels, i)
+    for routing, use_kernels, search_cells, contains_cells in runs:
+        for pi in sorted(set(search_cells) | set(contains_cells)):
+            pkw = probe_cells[pi]
+            cfg = dist.DistConfig(params=params, n_shards=4, variant=variant,
+                                  m=m, routing=routing, cap_factor=3.0,
+                                  use_kernels=use_kernels, **pkw)
+            args = [H, store_sh.ids, store_sh.payload]
+            cargs = [H, store_sh.ids]
+            if variant == "cnb" and cfg.node_bits > 0:
+                refresh = dist.make_refresh_cache(cfg, mesh)
+                ci, cp = refresh(store_sh.ids, store_sh.payload)
+                args += [ci, cp]
+                cargs += [ci]
+            if pi in search_cells:
+                step = dist.make_search_step(cfg, mesh)
+                ids, sc, dropped = step(*args, qd)
+                ids = np.asarray(ids)
+                assert int(dropped) == 0, (variant, routing, pi, int(dropped))
+                want = ref[variant, pi]
+                for i in range(B):
+                    assert set(ids[i][ids[i] >= 0]) == set(
+                        want.ids[i][want.ids[i] >= 0]), (
+                            variant, routing, use_kernels, pi, i)
+            if pi in contains_cells:
+                cstep = dist.make_contains_step(cfg, mesh)
+                hits, cdropped = cstep(*cargs, qd, td)
+                assert int(cdropped) == 0
+                assert np.array_equal(np.asarray(hits),
+                                      ref_contains[variant, pi]), (
+                    variant, routing, pi)
 print("EQUIV-OK")
+"""
+
+CAP_SWEEP = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import *
+from repro.core import distributed as dist
+from repro.core.store import build_store_host
+from repro.core.hashing import sketch_codes_batched
+from repro.compat import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(2)
+N, D, k, L, m = 2000, 32, 5, 3, 5
+params = LshParams(d=D, k=k, L=L, seed=3)
+H = make_hyperplanes(params)
+vecs = rng.standard_normal((N, D)).astype(np.float32)
+vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+codes = sketch_codes_batched(jnp.asarray(vecs), H)
+store = dist.shard_store(
+    mesh, build_store_host(codes, params.num_buckets, 128, payload=vecs))
+B = 64
+qd = jax.device_put(jnp.asarray(vecs[:B]),
+                    NamedSharding(mesh, P(("data", "model"), None)))
+drops = {}
+for cap_factor in (0.25, float(L)):
+    cfg = dist.DistConfig(params=params, n_shards=4, variant="cnb", m=m,
+                          routing="alltoall", cap_factor=cap_factor)
+    refresh = dist.make_refresh_cache(cfg, mesh)
+    ci, cp = refresh(store.ids, store.payload)
+    step = dist.make_search_step(cfg, mesh)
+    _, _, dropped = step(H, store.ids, store.payload, ci, cp, qd)
+    drops[cap_factor] = int(dropped)
+# generous buffers (cap_factor >= L) lose nothing; a deliberately tiny cap
+# must REPORT its losses instead of silently eating them.
+assert drops[float(L)] == 0, drops
+assert drops[0.25] > 0, drops
+print("CAP-OK", drops)
 """
 
 INSERT = r"""
@@ -108,9 +185,106 @@ def test_distributed_equals_reference():
 
 
 @pytest.mark.slow
+def test_cap_factor_sweep_drop_accounting():
+    out = run_in_subprocess(CAP_SWEEP, devices=8)
+    assert "CAP-OK" in out
+
+
+@pytest.mark.slow
 def test_distributed_insert_then_search():
     out = run_in_subprocess(INSERT, devices=8)
     assert "INSERT-OK" in out
+
+
+# -----------------------------------------------------------------------------
+# tier-1 coverage (single device, mesh (1, 1)): the planner/router plumbing
+# runs identically through shard_map; n_shards=1 makes every near bucket a
+# local-bit probe, so the full engine equivalence is checkable without
+# subprocesses.
+# -----------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_setup(single_mesh):
+    import jax.numpy as jnp
+
+    from repro.core import (
+        BucketStore, DenseCorpus, LshParams, make_hyperplanes,
+    )
+    from repro.core.hashing import sketch_codes_batched
+    from repro.core.store import build_store_host
+
+    rng = np.random.default_rng(4)
+    N, D, k, L = 800, 24, 5, 3
+    params = LshParams(d=D, k=k, L=L, seed=5)
+    H = make_hyperplanes(params)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    codes = sketch_codes_batched(jnp.asarray(vecs), H)
+    store = build_store_host(codes, params.num_buckets, capacity=128,
+                             payload=vecs)
+    ids_only = BucketStore(store.ids, store.timestamps, store.write_ptr, None)
+    corpus = DenseCorpus(jnp.asarray(vecs))
+    q = jnp.asarray(vecs[:32])
+    return single_mesh, params, H, store, ids_only, corpus, q, vecs
+
+
+@pytest.mark.parametrize(
+    "probe_kw",
+    [dict(), dict(num_probes=2), dict(num_probes=2, ranked_probes=True)],
+    ids=["all-probes", "p2", "ranked-p2"],
+)
+def test_single_shard_equals_engine(small_setup, probe_kw):
+    from repro.core import EngineConfig, LshEngine
+    from repro.core import distributed as dist
+
+    mesh, params, H, store, ids_only, corpus, q, vecs = small_setup
+    eng = LshEngine(params, H, ids_only, corpus, None,
+                    EngineConfig(variant="cnb", **probe_kw))
+    want = eng.search(q, m=8)
+    cfg = dist.DistConfig(params=params, n_shards=1, variant="cnb", m=8,
+                          cap_factor=float(params.L), **probe_kw)
+    step = dist.make_search_step(cfg, mesh)
+    ids, sc, dropped = step(H, store.ids, store.payload, q)
+    assert int(dropped) == 0
+    ids = np.asarray(ids)
+    for i in range(ids.shape[0]):
+        assert set(ids[i][ids[i] >= 0]) == set(
+            want.ids[i][want.ids[i] >= 0]), (probe_kw, i)
+
+
+def test_single_shard_contains_equals_engine(small_setup):
+    import jax.numpy as jnp
+
+    from repro.core import EngineConfig, LshEngine
+    from repro.core import distributed as dist
+
+    mesh, params, H, store, ids_only, corpus, q, vecs = small_setup
+    rng = np.random.default_rng(9)
+    targets = rng.integers(0, vecs.shape[0], size=q.shape[0]).astype(np.int32)
+    for variant in ("lsh", "cnb"):
+        eng = LshEngine(params, H, ids_only, corpus, None,
+                        EngineConfig(variant=variant))
+        want = eng.contains(q, targets)
+        cfg = dist.DistConfig(params=params, n_shards=1, variant=variant,
+                              m=8, cap_factor=float(params.L))
+        cstep = dist.make_contains_step(cfg, mesh)
+        hits, dropped = cstep(H, store.ids, q, jnp.asarray(targets))
+        assert int(dropped) == 0
+        assert np.array_equal(np.asarray(hits), want), variant
+    assert want.any()  # the metric is non-degenerate on this data
+
+
+def test_tiny_cap_reports_drops(small_setup):
+    from repro.core import distributed as dist
+
+    mesh, params, H, store, ids_only, corpus, q, vecs = small_setup
+    cfg = dist.DistConfig(params=params, n_shards=1, variant="cnb", m=8,
+                          cap_factor=0.1)
+    step = dist.make_search_step(cfg, mesh)
+    ids, sc, dropped = step(H, store.ids, store.payload, q)
+    # 32 queries * 3 tables = 96 probes into ceil(96*0.1)=10 slots
+    assert int(dropped) == 96 - 10
 
 
 def test_byte_estimates():
@@ -132,3 +306,26 @@ def test_byte_estimates():
                    routing="alltoall"), batch=4096, d=128, n_total=256)
     assert nb["neighbor"] > 0
     assert a2a["neighbor"] == 0
+
+
+def test_byte_estimates_nb_allgather():
+    """The nb + allgather branch (neighbor traffic on replicated queries)
+    must produce finite, larger-than-cnb neighbor bytes."""
+    from repro.core import LshParams
+    from repro.core.distributed import DistConfig, estimate_query_bytes
+
+    params = LshParams(d=128, k=12, L=4)
+    nb_ag = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="nb",
+                   routing="allgather"), batch=4096, d=128, n_total=256)
+    cnb_ag = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="cnb",
+                   routing="allgather"), batch=4096, d=128, n_total=256)
+    assert nb_ag["neighbor"] > 0
+    assert cnb_ag["neighbor"] == 0
+    assert nb_ag["total"] > cnb_ag["total"]
+    # replicated-query neighbor traffic dominates the routed-buffer version
+    nb_a2a = estimate_query_bytes(
+        DistConfig(params=params, n_shards=16, variant="nb",
+                   routing="alltoall"), batch=4096, d=128, n_total=256)
+    assert nb_ag["neighbor"] > nb_a2a["neighbor"]

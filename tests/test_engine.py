@@ -1,13 +1,12 @@
 """Reference engine: Algorithms 1-2, Table-1 costs, Layered equivalence."""
 
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
-    BucketStore, DenseCorpus, EngineConfig, LshEngine, LshParams,
+    DenseCorpus, EngineConfig, LshEngine, LshParams,
     make_hyperplanes, paper_topology,
 )
 from repro.core import layered as lay

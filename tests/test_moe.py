@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import model as M
 from repro.models import moe as moe_mod
 from repro.models import sharding as sh
 

@@ -1,0 +1,121 @@
+"""Shared probe planner: one query discipline for both runtimes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LshParams, make_hyperplanes
+from repro.core import hashing, plan
+from repro.core.can import CanTopology
+
+
+@pytest.fixture(scope="module")
+def setup(rng):
+    params = LshParams(d=16, k=6, L=3, seed=2)
+    h = make_hyperplanes(params)
+    q = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    return params, h, q
+
+
+def test_spec_sizes(setup):
+    params, _, _ = setup
+    assert plan.ProbeSpec(params, "lsh").probes_per_table == 1
+    assert plan.ProbeSpec(params, "cnb").probes_per_table == 7
+    assert plan.ProbeSpec(params, "cnb", num_probes=2).probes_per_table == 3
+    # budgets beyond k clamp (there are only k 1-near buckets)
+    assert plan.ProbeSpec(params, "nb", num_probes=99).probes_per_table == 7
+    with pytest.raises(ValueError):
+        plan.ProbeSpec(params, "bogus")
+
+
+def test_full_probe_plan(setup):
+    params, h, q = setup
+    p = plan.make_plan(plan.ProbeSpec(params, "cnb"), q, h)
+    codes = hashing.sketch_codes(q, h)
+    assert np.array_equal(np.asarray(p.codes), np.asarray(codes))
+    assert p.probes.shape == (8, params.L, 1 + params.k)
+    # entry 0 is the exact bucket; entry 1+j flips bit j
+    assert np.array_equal(np.asarray(p.probes[..., 0]), np.asarray(codes))
+    for j in range(params.k):
+        assert np.array_equal(
+            np.asarray(p.probes[..., 1 + j]),
+            np.asarray(codes) ^ (1 << j))
+    assert np.all(np.asarray(p.probe_mask) == (1 << params.k) - 1)
+
+
+def test_lsh_plan_probes_nothing_near(setup):
+    params, h, q = setup
+    p = plan.make_plan(plan.ProbeSpec(params, "lsh"), q, h)
+    assert p.probes.shape == (8, params.L, 1)
+    assert np.all(np.asarray(p.probe_mask) == 0)
+
+
+def test_unranked_budget_mask(setup):
+    params, h, q = setup
+    p = plan.make_plan(plan.ProbeSpec(params, "cnb", num_probes=2), q, h)
+    assert p.probes.shape == (8, params.L, 3)
+    # unranked budget takes the first p bits
+    assert np.all(np.asarray(p.probe_mask) == 0b11)
+
+
+def test_ranked_budget_mask_matches_margins(setup):
+    params, h, q = setup
+    spec = plan.ProbeSpec(params, "cnb", num_probes=2, ranked_probes=True)
+    p = plan.make_plan(spec, q, h)
+    margins = np.asarray(hashing.projection_margins(q, h))  # [8, L, k]
+    mask = np.asarray(p.probe_mask)
+    for i in range(8):
+        for l in range(params.L):
+            want_bits = set(np.argsort(margins[i, l])[:2].tolist())
+            got_bits = {j for j in range(params.k) if (mask[i, l] >> j) & 1}
+            assert got_bits == want_bits, (i, l)
+    # the probe codes flip exactly the masked bits
+    probes = np.asarray(p.probes)
+    codes = np.asarray(p.codes)
+    for i in range(8):
+        for l in range(params.L):
+            flips = {int(codes[i, l] ^ c) for c in probes[i, l, 1:]}
+            want = {1 << j for j in range(params.k) if (mask[i, l] >> j) & 1}
+            assert flips == want
+
+
+def test_owner_local_split(setup):
+    params, h, q = setup
+    topo = CanTopology(params.k, 4)
+    p = plan.make_plan(plan.ProbeSpec(params, "cnb"), q, h, topo)
+    codes = np.asarray(p.codes)
+    assert np.array_equal(np.asarray(p.owner), codes >> topo.local_bits)
+    assert np.array_equal(
+        np.asarray(p.local_idx), codes & ((1 << topo.local_bits) - 1))
+
+
+def test_shard_local_probes_mask(setup):
+    params, _, _ = setup
+    topo = CanTopology(params.k, 4)  # local_bits = 4
+    local = jnp.asarray([5, 9], jnp.int32)
+    mask = jnp.asarray([0b0011, 0b1000], jnp.uint32)
+    probes, valid = plan.shard_local_probes(topo, local, mask,
+                                            include_near=True)
+    assert probes.shape == (2, 1 + topo.local_bits)
+    assert np.array_equal(np.asarray(probes[0]),
+                          [5, 5 ^ 1, 5 ^ 2, 5 ^ 4, 5 ^ 8])
+    # exact always valid; near entries follow the mask bits
+    assert np.asarray(valid).tolist() == [
+        [True, True, True, False, False],
+        [True, False, False, False, True],
+    ]
+    exact, always = plan.shard_local_probes(topo, local, mask,
+                                            include_near=False)
+    assert exact.shape == (2, 1) and bool(np.all(np.asarray(always)))
+
+
+def test_node_bit_probe_valid(setup):
+    params, _, _ = setup
+    topo = CanTopology(params.k, 4)  # local_bits=4, node_bits=2
+    mask = jnp.asarray([0b110000, 0b010000, 0], jnp.uint32)
+    got = np.stack([
+        np.asarray(plan.node_bit_probe_valid(topo, mask, b))
+        for b in range(topo.node_bits)
+    ], axis=-1)
+    assert got.tolist() == [[True, True], [True, False], [False, False]]

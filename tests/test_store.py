@@ -92,6 +92,67 @@ def test_payload_store(rng):
     assert np.allclose(np.asarray(store.payload[0, 0, slot]), np.asarray(vecs[1]))
 
 
+def test_reannounce_refreshes_in_place():
+    """Soft-state semantics: re-announcing an id UPDATES its entry (slot,
+    timestamp, payload) instead of appending a second copy."""
+    store = make_store(1, 4, 8, payload_dim=2)
+    ids = jnp.arange(3, dtype=jnp.int32)
+    codes = jnp.zeros((3, 1), jnp.uint32)
+    v0 = jnp.asarray([[0., 0.], [1., 1.], [2., 2.]], jnp.float32)
+    store = insert_batch(store, ids, codes, jnp.int32(0), v0)
+    v1 = v0 + 10.0
+    store = insert_batch(store, ids, codes, jnp.int32(5), v1)
+    assert _occupied(store, 0, 0) == {0, 1, 2}          # no duplicates
+    assert int(jnp.sum(store.ids[0, 0] >= 0)) == 3
+    slot = int(np.where(np.asarray(store.ids[0, 0]) == 1)[0][0])
+    assert int(store.timestamps[0, 0, slot]) == 5
+    assert np.allclose(np.asarray(store.payload[0, 0, slot]), [11., 11.])
+
+
+def test_wraparound_expire_reannounce_never_resurrects():
+    """Ring wraparound x expire interplay: insert past capacity, GC, then
+    re-announce different ids — evicted/expired ids must never reappear."""
+    cap = 4
+    store = make_store(1, 2, cap)
+    # 6 distinct ids into bucket 0 of capacity 4: ring wraps, keeps 2..5
+    store = insert_batch(
+        store, jnp.arange(6, dtype=jnp.int32),
+        jnp.zeros((6, 1), jnp.uint32), jnp.int32(0),
+    )
+    assert _occupied(store, 0, 0) == {2, 3, 4, 5}
+    assert int(store.write_ptr[0, 0]) == 6 % cap
+    # everything is stale at t=10: GC empties the bucket, ptr keeps moving
+    store = expire(store, jnp.int32(10), ttl=5)
+    assert _occupied(store, 0, 0) == set()
+    # re-announce two FRESH ids; the expired ones must not resurrect
+    store = insert_batch(
+        store, jnp.asarray([7, 8], jnp.int32),
+        jnp.zeros((2, 1), jnp.uint32), jnp.int32(10),
+    )
+    assert _occupied(store, 0, 0) == {7, 8}
+    # and a later expire pass cannot bring anything back either
+    store = expire(store, jnp.int32(11), ttl=5)
+    assert _occupied(store, 0, 0) == {7, 8}
+
+
+def test_wraparound_then_refresh_keeps_single_copy():
+    """An id that survived a wraparound refreshes in place on re-announce
+    even when the write pointer has lapped its slot."""
+    store = make_store(1, 2, 4)
+    store = insert_batch(
+        store, jnp.arange(6, dtype=jnp.int32),
+        jnp.zeros((6, 1), jnp.uint32), jnp.int32(0),
+    )  # bucket holds {2,3,4,5}, ptr=2
+    store = insert_batch(
+        store, jnp.asarray([4], jnp.int32),
+        jnp.zeros((1, 1), jnp.uint32), jnp.int32(3),
+    )
+    assert _occupied(store, 0, 0) == {2, 3, 4, 5}       # still one copy of 4
+    slot = int(np.where(np.asarray(store.ids[0, 0]) == 4)[0][0])
+    assert int(store.timestamps[0, 0, slot]) == 3
+    assert int(store.write_ptr[0, 0]) == 2              # no append happened
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     st.integers(1, 40), st.integers(1, 4), st.integers(2, 8),

@@ -8,7 +8,6 @@ framework feature of DESIGN.md Sec. 4).
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -95,7 +95,6 @@ def test_grad_accum_equivalence(single_mesh):
 
     cfg = get_config("starcoder2-7b", smoke=True)
     params, _ = M.init_model(cfg, 0)
-    ocfg = opt.OptConfig(peak_lr=0.0, warmup_steps=1, weight_decay=0.0)
     hp = ts.TrainHParams(loss_chunk=64)
     batch = dt.make_batch(cfg, dt.DataConfig(), 0, 4, 32)
     with sh.use_mesh(single_mesh):
