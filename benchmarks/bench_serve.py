@@ -1,0 +1,148 @@
+"""Online serving benchmark (DESIGN.md Sec. 7): frontend throughput vs
+dispatch granularity and offered load, and the cache's message saving.
+
+Cells:
+  * serve/one_at_a_time    — max_batch=1, cache off: every arrival is its
+                             own jit dispatch (the no-batcher baseline);
+  * serve/batched          — max_batch=64, cache off: the dynamic batcher
+                             coalescing the same workload (derived reports
+                             the speedup — the >= 5x acceptance cell) at
+                             identical recall (ids are bit-identical, so
+                             recall is equal BY CONSTRUCTION; both are
+                             still measured and reported);
+  * serve/offered=N        — closed-loop load sweep: qps / p99 / counted
+                             admission rejects as offered load rises;
+  * serve/cache_zipf       — repeated-query workload: hit rate and
+                             measured messages/query vs the Table-1
+                             closed form (cache hits cost zero network).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    DenseCorpus, EngineConfig, LshEngine, LshParams, make_hyperplanes,
+    metrics,
+)
+from repro.core.hashing import sketch_codes_batched
+from repro.core.store import build_store_host
+from repro.serve import EngineBackend, FrontendConfig, RetrievalFrontend
+
+# shapes chosen so the serving-layer effect is measurable on CPU: small
+# buckets (k=12, capacity 8) keep per-query score work light, so the fixed
+# per-dispatch overhead dominates one-at-a-time serving and the batcher's
+# amortization shows as a real throughput multiple.
+N, D, K, L, M = 20000, 32, 12, 4, 10
+CAPACITY = 8
+NQ = 256          # workload size for the throughput cells
+POOL = 64         # distinct queries in the cache cell
+CACHE_ARRIVALS = 512
+
+
+def _build(seed=0):
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((N, D)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    params = LshParams(d=D, k=K, L=L, seed=seed + 1)
+    h = make_hyperplanes(params)
+    codes = sketch_codes_batched(jnp.asarray(emb), h)
+    store = build_store_host(codes, params.num_buckets, capacity=CAPACITY)
+    engine = LshEngine(params, h, store, DenseCorpus(jnp.asarray(emb)), None,
+                       EngineConfig(variant="cnb"))
+    return emb, engine
+
+
+def _exact_ideal(emb, qrows, m):
+    sims = emb[qrows] @ emb.T
+    sims[np.arange(len(qrows)), qrows] = -np.inf
+    return np.argsort(-sims, axis=1)[:, :m].astype(np.int32)
+
+
+def _serve_all(frontend, emb, qrows, offered):
+    """Closed-loop: submit `offered` per tick, one step per tick; returns
+    wall seconds for the served stream."""
+    t0 = time.perf_counter()
+    sent = 0
+    while sent < len(qrows) or frontend.pending:
+        for row in qrows[sent:sent + offered]:
+            frontend.submit(emb[row], exclude=int(row))
+        sent = min(sent + offered, len(qrows))
+        frontend.step()
+    frontend.flush()
+    return time.perf_counter() - t0
+
+
+def rows():
+    emb, engine = _build()
+    rng = np.random.default_rng(7)
+    qrows = rng.integers(0, N, size=NQ)
+    ideal = _exact_ideal(emb, qrows, M)
+    backend = EngineBackend(engine)
+    out = []
+
+    def fresh(max_batch, cache, queue=512):
+        return RetrievalFrontend(
+            backend,
+            FrontendConfig(m=M, max_batch=max_batch, queue_capacity=queue,
+                           cache=cache),
+        )
+
+    # warm both dispatch shapes once so the cells time serving, not tracing
+    fresh(1, False).search(emb[qrows[:2]], exclude=qrows[:2])
+    fresh(64, False).search(emb[qrows[:65]], exclude=qrows[:65])
+
+    # -- one-at-a-time vs batched (best of 2 — first pass absorbs any
+    # remaining cold-start noise; ids come from the timed pass) --------------
+    def timed(max_batch, offered):
+        best, ids = np.inf, None
+        for _ in range(2):
+            fe = fresh(max_batch, False)
+            dt = _serve_all(fe, emb, qrows, offered=offered)
+            ids = np.stack(
+                [fe.poll(t)[0] for t in range(fe.stats.completed)]
+            )  # tickets are 0..NQ-1 in submit order on a fresh frontend
+            best = min(best, dt)
+        return best, ids
+
+    dt1, ids1 = timed(1, offered=1)
+    rec1 = metrics.recall_at_m(ids1, ideal)
+    out.append(("serve/one_at_a_time", dt1 / NQ * 1e6,
+                f"qps={NQ/dt1:.0f};recall={rec1:.3f}"))
+
+    dtB, idsB = timed(64, offered=64)
+    recB = metrics.recall_at_m(idsB, ideal)
+    out.append(("serve/batched_64", dtB / NQ * 1e6,
+                f"qps={NQ/dtB:.0f};recall={recB:.3f};"
+                f"speedup_vs_one_at_a_time={dt1/dtB:.1f}x;"
+                f"ids_identical={bool(np.array_equal(ids1, idsB))}"))
+
+    # -- offered-load sweep (fixed service rate, queue=128) -------------------
+    for offered in (4, 16, 64, 256):
+        fe = fresh(32, False, queue=128)
+        dt = _serve_all(fe, emb, qrows, offered=offered)
+        s = fe.stats.summary()
+        served = s["completed"]
+        out.append((
+            f"serve/offered={offered}", dt / max(served, 1) * 1e6,
+            f"qps={served/dt:.0f};p99_us={s['p99_us']:.0f};"
+            f"rejected={s['rejected']};mean_batch={s['mean_batch']:.1f}"))
+
+    # -- repeated-query workload: the cache cell ------------------------------
+    pool = rng.integers(0, N, size=POOL)
+    w = 1.0 / (np.arange(POOL) + 1.0)
+    arrivals = pool[rng.choice(POOL, size=CACHE_ARRIVALS, p=w / w.sum())]
+    fe = fresh(32, True)
+    dt = _serve_all(fe, emb, arrivals, offered=32)
+    s = fe.stats.summary()
+    closed = backend.cost().messages
+    out.append((
+        "serve/cache_zipf", dt / CACHE_ARRIVALS * 1e6,
+        f"hit_rate={s['hit_rate']:.2f};"
+        f"messages_per_query={s['messages_per_query']:.1f};"
+        f"closed_form_no_cache={closed:.1f};"
+        f"qps={CACHE_ARRIVALS/dt:.0f}"))
+    return out

@@ -2,12 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV.  `--full` switches in the larger
 LiveJournal/Friendster-scale synthetic datasets (slower); default exercises
-every benchmark at CPU-friendly scale.
+every benchmark at CPU-friendly scale.  `--json PATH` additionally writes
+the same rows as machine-readable JSON (a list of
+``{"name", "us_per_call", "derived", "suite"}`` objects, e.g.
+``BENCH_serve.json``), so perf trajectories can be tracked across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -18,12 +22,14 @@ def main(argv=None) -> None:
                     help="use all three OSN-scale datasets")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark prefixes to run")
+    ap.add_argument("--json", default="",
+                    help="also write rows as JSON to this path")
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        bench_churn, bench_distributed, bench_kernels, fig1_sp_vs_buckets,
-        fig2_sp_vs_L, fig3_sp_vs_cost, fig4_sp_empirical, fig5_quality,
-        table1_costs,
+        bench_churn, bench_distributed, bench_kernels, bench_serve,
+        fig1_sp_vs_buckets, fig2_sp_vs_L, fig3_sp_vs_cost, fig4_sp_empirical,
+        fig5_quality, table1_costs,
     )
     from benchmarks import roofline
 
@@ -37,9 +43,11 @@ def main(argv=None) -> None:
         ("churn", lambda: bench_churn.rows()),
         ("kernels", lambda: bench_kernels.rows()),
         ("dist", lambda: bench_distributed.rows()),
+        ("serve", lambda: bench_serve.rows()),
         ("roofline", lambda: roofline.rows()),
     ]
     wanted = [w for w in args.only.split(",") if w]
+    collected: list[dict] = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if wanted and not any(name.startswith(w) for w in wanted):
@@ -48,10 +56,23 @@ def main(argv=None) -> None:
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.2f},{derived}")
+                collected.append(dict(
+                    name=row_name, us_per_call=round(float(us), 2),
+                    derived=str(derived), suite=name,
+                ))
             print(f"# suite {name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            collected.append(dict(
+                name=f"{name}/ERROR", us_per_call=0.0,
+                derived=f"{type(e).__name__}:{e}", suite=name,
+            ))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=1)
+        print(f"# wrote {len(collected)} rows to {args.json}",
+              file=sys.stderr)
     sys.stdout.flush()
 
 

@@ -1,9 +1,13 @@
 """Framework integration: model-produced embeddings behind NearBucket-LSH.
 
 Embeds "users" (token histories) with an assigned-architecture backbone,
-indexes the embeddings in the LSH store, and serves batched similar-user
-queries — the user-similarity-search application of the paper, with the
-modern twist that the interest vectors come from an LM.
+indexes the embeddings in the LSH store, and serves similar-user queries
+through the ONLINE serving frontend (`repro.serve`, DESIGN.md Sec. 7) —
+dynamic batching plus the sketch-keyed result cache, with the modern
+twist that the interest vectors come from an LM.  Users re-query (second
+pass over the same queries), so the cache hit rate and the resulting
+messages/query saving are visible alongside the paper's community-purity
+quality check.
 
     PYTHONPATH=src python examples/retrieval_serve.py
 """
@@ -19,6 +23,7 @@ from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host
 from repro.models import model as M
 from repro.models import sharding as sh
+from repro.serve import EngineBackend, FrontendConfig, RetrievalFrontend
 
 
 def main():
@@ -52,17 +57,35 @@ def main():
     engine = LshEngine(lsh, h, store, DenseCorpus(jnp.asarray(emb)), None,
                        EngineConfig(variant="cnb"))
 
+    frontend = RetrievalFrontend(
+        EngineBackend(engine),
+        FrontendConfig(m=10, max_batch=32, queue_capacity=128),
+    )
+
     nq = 64
-    r = engine.search(jnp.asarray(emb[:nq]), m=10, exclude=np.arange(nq))
+    ids, _scores = frontend.search(emb[:nq], exclude=np.arange(nq))
+    # the served ids are bit-identical to a direct engine.search (CI-pinned
+    # in tests/test_serve.py); the purity check is unchanged
     total = match = 0
     for i in range(nq):
-        for j in r.ids[i]:
+        for j in ids[i]:
             if j >= 0:
                 total += 1
                 match += int(comm[j] == comm[i])
+
+    # second pass: the users re-query — served from the sketch-keyed cache
+    ids2, _ = frontend.search(emb[:nq], exclude=np.arange(nq))
+    assert np.array_equal(ids2, ids)
+
+    s = frontend.stats.summary()
     print(f"community purity of retrieved neighbors: {match/total:.2f} "
-          f"({match}/{total}); messages/query = {r.cost.messages:.0f}")
+          f"({match}/{total})")
+    print(f"cache hit rate = {s['hit_rate']:.2f}; "
+          f"messages/query = {s['messages_per_query']:.1f} "
+          f"(no-cache closed form {frontend.backend.cost().messages:.0f}); "
+          f"p99 latency = {s['p99_us']:.0f}us")
     assert match / total > 0.5
+    assert s["hit_rate"] >= 0.5  # the whole second pass hit
 
 
 if __name__ == "__main__":

@@ -152,6 +152,9 @@ def run_churn(cfg: ChurnConfig) -> dict:
         final_recall=float(recalls[-1]),
         mean_recall=float(np.mean(recalls)),
         refresh_every=cfg.refresh_every,
+        # store mutation counter after the run — the serving layer's cache
+        # invalidation signal (every insert/expire bumped it)
+        store_generation=int(store.generation),
     )
 
 
@@ -272,4 +275,5 @@ def run_churn_distributed(
         final_recall=float(recalls[-1]),
         mean_recall=float(np.mean(recalls)),
         refresh_every=cfg.refresh_every,
+        store_generation=int(store.generation),
     )

@@ -492,6 +492,7 @@ def shard_store(mesh, store: BucketStore) -> BucketStore:
         payload=None
         if store.payload is None
         else jax.device_put(store.payload, spec4),
+        generation=jax.device_put(store.generation, NamedSharding(mesh, P())),
     )
 
 
@@ -640,7 +641,7 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     """
     from jax.sharding import PartitionSpec as P
 
-    def _insert(hyperplanes, ids_store, ts_store, ptr, payload_store,
+    def _insert(hyperplanes, ids_store, ts_store, ptr, payload_store, gen,
                 vec, vid, now):
         from repro.core import store as store_mod
 
@@ -658,7 +659,8 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
         # mark foreign (table, vector) entries invalid: blank foreign rows
         # with id -1; insert_masked routes them out of bounds (mode='drop')
         # so they can't clobber live slots.
-        st = store_mod.BucketStore(ids_store, ts_store, ptr, payload_store)
+        st = store_mod.BucketStore(ids_store, ts_store, ptr, payload_store,
+                                   gen)
         mine_any = owner == me[None, None]                       # [nv, L]
         new = st
         for l in range(cfg.params.L):
@@ -668,7 +670,10 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
             new = store_mod.insert_masked(
                 new, l, ids_l, codes_l, now, vec_all
             )
-        return new.ids, new.timestamps, new.write_ptr, new.payload
+        # every shard bumps its replica by the same L, so the replicated
+        # generation stays consistent across the mesh.
+        return new.ids, new.timestamps, new.write_ptr, new.payload, \
+            new.generation
 
     fn = compat.shard_map(
         _insert,
@@ -679,6 +684,7 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
             P(None, "model", None),
             P(None, "model"),
             P(None, "model", None, None),
+            P(),
             P(batch_axes, None),
             P(batch_axes),
             P(),
@@ -688,16 +694,17 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
             P(None, "model", None),
             P(None, "model"),
             P(None, "model", None, None),
+            P(),
         ),
     )
 
     @jax.jit
     def insert(hyperplanes, store: BucketStore, vec, vid, now):
-        i, t, p, pay = fn(
+        i, t, p, pay, gen = fn(
             hyperplanes, store.ids, store.timestamps, store.write_ptr,
-            store.payload, vec, vid, now,
+            store.payload, store.generation, vec, vid, now,
         )
-        return BucketStore(i, t, p, pay)
+        return BucketStore(i, t, p, pay, gen)
 
     return insert
 
@@ -739,8 +746,12 @@ def make_payload_sync(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     )
 
     def _apply(store: BucketStore, vec):
+        # a payload rewrite changes scores, so it invalidates cached results
+        # the same way insert/expire do: bump the store generation.
         return dataclasses.replace(
-            store, payload=fn(store.ids, store.payload, vec)
+            store,
+            payload=fn(store.ids, store.payload, vec),
+            generation=store.generation + 1,
         )
 
     # donate the store: payload is the system's largest buffer and the old

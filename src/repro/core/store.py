@@ -40,12 +40,23 @@ class BucketStore:
       timestamps: int32 [T, NB, C]
       write_ptr:  int32 [T, NB]      (ring pointer)
       payload:    f32   [T, NB, C, D] or None
+      generation: int32 scalar       (mutation counter, see below)
+
+    `generation` counts store mutations: every `insert_masked` and every
+    `expire` bumps it.  Readers that cache derived results (the serving
+    layer's sketch-keyed query cache, `repro.serve.qcache`) record the
+    generation they computed at and treat any bump as invalidation — the
+    DESIGN.md Sec. 7 read/write-epoch discipline.  It is a traced data
+    field (not static), so bumping never retriggers compilation.
     """
 
     ids: jax.Array
     timestamps: jax.Array
     write_ptr: jax.Array
     payload: jax.Array | None
+    generation: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32)
+    )
 
     @property
     def num_tables(self) -> int:
@@ -146,7 +157,9 @@ def insert_masked(
             .at[l, upd_bucket, exist_slot].set(payload, mode="drop")
             .at[l, b_sorted, slot].set(payload[order], mode="drop")
         )
-    return BucketStore(new_ids, new_ts, new_ptr, new_payload)
+    return BucketStore(
+        new_ids, new_ts, new_ptr, new_payload, store.generation + 1
+    )
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -174,7 +187,9 @@ def expire(store: BucketStore, now: jax.Array, ttl: int) -> BucketStore:
     """Garbage-collect entries not refreshed within `ttl` ticks (Sec. 4.1)."""
     stale = (now - store.timestamps) > ttl
     return dataclasses.replace(
-        store, ids=jnp.where(stale, EMPTY, store.ids)
+        store,
+        ids=jnp.where(stale, EMPTY, store.ids),
+        generation=store.generation + 1,
     )
 
 

@@ -1,0 +1,32 @@
+"""Serving layer.
+
+Two services share this package:
+
+  * LM serving — `repro.serve.serve_step` (batched prefill + decode),
+    driven by `repro.launch.serve`;
+  * online retrieval — the NearBucket-LSH query service (DESIGN.md
+    Sec. 7), driven by `repro.launch.serve_retrieval`:
+      - `frontend`  — request ring, dynamic pow-2 batching, admission
+                      control, pluggable engine/mesh dispatch backends;
+      - `qcache`    — sketch-keyed result cache with generation-based
+                      invalidation wired to store churn;
+      - `lifecycle` — read/write epochs: churn maintenance interleaved
+                      with serving;
+      - `telemetry` — p50/p99 latency, qps, hit rate, Table-1 cost and
+                      dropped-probe aggregation.
+
+`serve_step` is intentionally NOT imported here: it pulls the model
+stack, which the retrieval service does not need.
+"""
+
+from repro.serve.frontend import (  # noqa: F401
+    DistBackend,
+    EngineBackend,
+    FrontendConfig,
+    RetrievalFrontend,
+    dispatch_pad,
+    pow2_pad,
+)
+from repro.serve.lifecycle import ServeChurnConfig, run_serve_churn  # noqa: F401
+from repro.serve.qcache import CacheEntry, QueryCache  # noqa: F401
+from repro.serve.telemetry import ServeStats  # noqa: F401

@@ -1,0 +1,426 @@
+"""Online retrieval frontend: request ring, dynamic batching, admission
+control (DESIGN.md Sec. 7).
+
+Turns the batch-oriented query runtimes into an online service without
+adding a serving-only query path:
+
+  * requests land in a FIXED-CAPACITY ring (`submit`); arrivals beyond
+    capacity are rejected and COUNTED (`ServeStats.rejected`) — the same
+    counted-never-silent discipline as the router's `dropped_probes`;
+  * `step` coalesces up to `max_batch` pending requests, pads the batch
+    to a power of two (so the jit'd dispatch sees a BOUNDED set of
+    compiled shapes — at most log2(max_batch)+1 — instead of one trace
+    per arrival count), consults the sketch-keyed result cache
+    (`repro.serve.qcache`), dispatches only the misses, and scatters
+    results back per request;
+  * dispatch goes through a pluggable backend: `EngineBackend` wraps the
+    single-host `LshEngine`'s own chunk implementation (result ids are
+    bit-identical to a direct `engine.search` — CI-checked), and
+    `DistBackend` wraps a `make_search_step` mesh step.  Both take the
+    store as a jit ARGUMENT, so live store updates (churn) never retrace
+    the query path.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import costmodel
+from repro.core import plan as plan_mod
+from repro.core.engine import LshEngine
+from repro.serve.qcache import QueryCache
+from repro.serve.telemetry import ServeStats
+
+NO_EXCLUDE = -2  # matches LshEngine.search's "no self id" sentinel
+
+
+def pow2_pad(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — the dispatch shape grid."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def dispatch_pad(n: int, multiple: int = 1) -> int:
+    """Dispatch size for `n` live rows: the smallest multiple of
+    `multiple` >= pow2_pad(n).  `multiple` is a sharded backend's device
+    count — the global batch must divide evenly over the mesh, which a
+    bare power of two does not guarantee on non-pow-2 meshes.  Still a
+    bounded shape set: each pow-2 value maps to exactly one padded size."""
+    m = max(int(multiple), 1)
+    return -(-pow2_pad(n) // m) * m
+
+
+# -----------------------------------------------------------------------------
+# dispatch backends
+# -----------------------------------------------------------------------------
+
+
+class EngineBackend:
+    """Dispatch adapter over the single-host `LshEngine` query path.
+
+    Reuses `engine._search_chunk_impl` verbatim — the scoring/top-m/dedup
+    semantics cannot drift from the reference — but re-jits it with the
+    store and corpus as ARGUMENTS instead of closed-over constants, so a
+    churn update (`update`) swaps state without recompiling.  `traces`
+    counts actual retraces (trace-time side effect), which is what the
+    pow-2 shape-budget test asserts on.
+    """
+
+    max_m = None  # no backend-imposed ceiling
+
+    def __init__(self, engine: LshEngine):
+        self._engine = engine
+        self._store = engine.store
+        self._corpus = engine.corpus
+        self._generation = int(np.asarray(engine.store.generation))
+        self._cost_gen: int | None = None
+        self._cost: costmodel.QueryCost | None = None
+        self.traces = 0
+        self.sketch_traces = 0
+
+        def _impl(store, corpus, q, ex, m):
+            self.traces += 1  # runs at trace time only
+            eng = copy.copy(engine)
+            eng.store = store
+            eng.corpus = corpus
+            return eng._search_chunk_impl(q, ex, m)
+
+        def _sketch(q):
+            self.sketch_traces += 1
+            return plan_mod.sketch(
+                q, engine.hyperplanes, use_kernels=engine.config.use_kernels
+            )
+
+        self._dispatch_jit = jax.jit(_impl, static_argnums=(4,))
+        self._sketch_jit = jax.jit(_sketch)
+
+    @property
+    def dim(self) -> int:
+        return self._engine.hyperplanes.shape[-1]
+
+    @property
+    def min_batch(self) -> int:
+        return 1
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def update(self, store, corpus=None) -> None:
+        """Install a new store (and optionally corpus) — a write epoch.
+        The host-side generation snapshot is what cache lookups compare
+        against, so it syncs here, once per update, off the query path.
+        It bumps on EVERY update, even when the store object is unchanged:
+        a corpus-only swap also changes scores, so cached results must
+        die with it."""
+        self._store = store
+        if corpus is not None:
+            self._corpus = corpus
+        self._generation = max(
+            int(np.asarray(store.generation)), self._generation + 1
+        )
+
+    def sketch_codes(self, q_pad: np.ndarray) -> np.ndarray:
+        return np.asarray(self._sketch_jit(q_pad))
+
+    def cost(self) -> costmodel.QueryCost:
+        """Table-1 closed form at the current store occupancy (cached per
+        generation — occupancy only changes when the store does)."""
+        if self._cost_gen != self._generation:
+            b = float(np.mean(np.asarray(self._store.occupancy())))
+            c = self._engine.config
+            self._cost = costmodel.table1(
+                c.variant, self._engine.params.k, self._engine.params.L, b
+            )
+            self._cost_gen = self._generation
+        return self._cost
+
+    def dispatch(self, q_pad: np.ndarray, ex_pad: np.ndarray, m: int):
+        ids, scores = self._dispatch_jit(
+            self._store, self._corpus, q_pad, ex_pad, m
+        )
+        return np.asarray(ids), np.asarray(scores), 0
+
+
+class DistBackend:
+    """Dispatch adapter over the `make_search_step` mesh step.
+
+    The wire path has no exclusion support (the id is not secret, paper
+    Sec. 6), so the step is built with one result of headroom
+    (`dcfg.m = serve_m + 1`) and the self id is filtered host-side —
+    exactly the distributed churn driver's convention.  `dropped_probes`
+    from the capacitated router flows through to the telemetry.
+    """
+
+    def __init__(self, dcfg, mesh, hyperplanes, store, cache=None,
+                 batch_axes=("data", "model")):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core import distributed as dist
+
+        self._dcfg = dcfg
+        self._mesh = mesh
+        self._hp = hyperplanes
+        self._store = store
+        self._cache = cache
+        self._step = dist.make_search_step(dcfg, mesh, batch_axes)
+        self._qspec = NamedSharding(mesh, P(batch_axes, None))
+        self._n_dev = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        self._generation = int(np.asarray(store.generation))
+        self._cost_gen: int | None = None
+        self._cost: costmodel.QueryCost | None = None
+        self.traces = 0
+        self.sketch_traces = 0
+
+        def _sketch(q):
+            self.sketch_traces += 1
+            return plan_mod.sketch(q, hyperplanes)
+
+        self._sketch_jit = jax.jit(_sketch)
+
+    @property
+    def dim(self) -> int:
+        return self._hp.shape[-1]
+
+    @property
+    def min_batch(self) -> int:
+        # the global batch shards over every device, so dispatch sizes
+        # must be multiples of the device count (dispatch_pad enforces it)
+        return self._n_dev
+
+    @property
+    def max_m(self) -> int:
+        return self._dcfg.m - 1  # headroom for host-side self-exclusion
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def update(self, store, cache=None) -> None:
+        """Install new store state and/or a refreshed neighbor cache.
+        Bumps the serving generation unconditionally (like EngineBackend):
+        an NB-cache refresh changes results without touching the store."""
+        self._store = store
+        if cache is not None:
+            self._cache = cache
+        self._generation = max(
+            int(np.asarray(store.generation)), self._generation + 1
+        )
+
+    def sketch_codes(self, q_pad: np.ndarray) -> np.ndarray:
+        return np.asarray(self._sketch_jit(q_pad))
+
+    def cost(self) -> costmodel.QueryCost:
+        if self._cost_gen != self._generation:
+            b = float(np.mean(np.asarray(self._store.occupancy())))
+            self._cost = costmodel.table1(
+                self._dcfg.variant, self._dcfg.params.k, self._dcfg.params.L, b
+            )
+            self._cost_gen = self._generation
+        return self._cost
+
+    def dispatch(self, q_pad: np.ndarray, ex_pad: np.ndarray, m: int):
+        import jax.numpy as jnp
+
+        if m > self.max_m:
+            raise ValueError(
+                f"m={m} exceeds the step's headroom (built with "
+                f"dcfg.m={self._dcfg.m}; serveable m <= {self.max_m})"
+            )
+        q = jax.device_put(jnp.asarray(q_pad, jnp.float32), self._qspec)
+        args = (self._hp, self._store.ids, self._store.payload)
+        if self._cache is not None:
+            args += tuple(self._cache)
+        ids, scores, dropped = self._step(*args, q)
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        # host-side self-exclusion + slice to the serving m
+        out_i = np.full((ids.shape[0], m), -1, np.int32)
+        out_s = np.full((ids.shape[0], m), -np.inf, np.float32)
+        for i in range(ids.shape[0]):
+            keep = ids[i] != ex_pad[i]
+            out_i[i] = ids[i][keep][:m]
+            out_s[i] = scores[i][keep][:m]
+        return out_i, out_s, int(dropped)
+
+
+# -----------------------------------------------------------------------------
+# the frontend
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    m: int = 10                   # results per query
+    max_batch: int = 64           # max requests coalesced per dispatch
+    queue_capacity: int = 256     # request ring size (admission control)
+    cache: bool = True            # sketch-keyed result cache on/off
+    cache_capacity: int = 4096
+    sketch_only_cache: bool = False  # approximate keying (see qcache)
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1, got {self.queue_capacity}"
+            )
+
+
+class RetrievalFrontend:
+    """Single-threaded event-loop frontend over a dispatch backend.
+
+    submit() -> ticket (or None on admission reject); step() serves one
+    coalesced batch; poll(ticket) -> (ids, scores) once served.  The
+    convenience `search()` drives the loop synchronously for a whole
+    query matrix and is the surface the bit-identity tests compare
+    against `engine.search`.
+    """
+
+    def __init__(
+        self,
+        backend,
+        config: FrontendConfig = FrontendConfig(),
+        stats: ServeStats | None = None,
+    ):
+        if backend.max_m is not None and config.m > backend.max_m:
+            raise ValueError(
+                f"m={config.m} unsupported by backend (max {backend.max_m})"
+            )
+        self.backend = backend
+        self.cfg = config
+        self.stats = stats if stats is not None else ServeStats()
+        self.cache = (
+            QueryCache(config.cache_capacity, config.sketch_only_cache)
+            if config.cache
+            else None
+        )
+        cap, d = config.queue_capacity, backend.dim
+        # fixed-capacity request ring (preallocated; no per-request alloc)
+        self._ring_q = np.zeros((cap, d), np.float32)
+        self._ring_ex = np.full((cap,), NO_EXCLUDE, np.int32)
+        self._ring_ticket = np.zeros((cap,), np.int64)
+        self._ring_t = np.zeros((cap,), np.float64)
+        self._head = 0
+        self._size = 0
+        self._next_ticket = 0
+        self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- request lifecycle ----------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return self._size
+
+    @property
+    def free(self) -> int:
+        return self.cfg.queue_capacity - self._size
+
+    def submit(self, q: np.ndarray, exclude: int = NO_EXCLUDE) -> int | None:
+        """Admit one query into the ring; None (counted) when over capacity."""
+        if self._size >= self.cfg.queue_capacity:
+            self.stats.record_submit(False)
+            return None
+        slot = (self._head + self._size) % self.cfg.queue_capacity
+        self._ring_q[slot] = q
+        self._ring_ex[slot] = exclude
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._ring_ticket[slot] = ticket
+        self._ring_t[slot] = time.perf_counter()
+        self._size += 1
+        self.stats.record_submit(True)
+        return ticket
+
+    def poll(self, ticket: int):
+        """(ids, scores) for a served ticket, else None. Pops the result."""
+        return self._results.pop(ticket, None)
+
+    def step(self) -> int:
+        """Serve one coalesced batch from the ring; returns #completed."""
+        n = min(self._size, self.cfg.max_batch)
+        if n == 0:
+            return 0
+        cap = self.cfg.queue_capacity
+        idx = (self._head + np.arange(n)) % cap
+        q = self._ring_q[idx].copy()
+        ex = self._ring_ex[idx].copy()
+        tickets = self._ring_ticket[idx].copy()
+        t_sub = self._ring_t[idx].copy()
+        self._head = (self._head + n) % cap
+        self._size -= n
+
+        gen = self.backend.generation
+        m = self.cfg.m
+        miss_rows = list(range(n))
+        keys: list[tuple | None] = [None] * n
+        if self.cache is not None:
+            # sketch once for the whole coalesced batch (pow-2 padded, so
+            # the sketch jit shares the dispatch shape grid)
+            pad = dispatch_pad(n, self.backend.min_batch)
+            q_pad = np.zeros((pad, q.shape[1]), np.float32)
+            q_pad[:n] = q
+            codes = self.backend.sketch_codes(q_pad)[:n]
+            miss_rows = []
+            for i in range(n):
+                keys[i] = self.cache.key(codes[i], int(ex[i]), q[i])
+                e = self.cache.get(keys[i], gen)
+                if e is None:
+                    miss_rows.append(i)
+                else:
+                    self._results[int(tickets[i])] = (e.ids, e.scores)
+                    lat = (time.perf_counter() - t_sub[i]) * 1e6
+                    self.stats.record_done(lat, hit=True)
+
+        if miss_rows:
+            nm = len(miss_rows)
+            pad = dispatch_pad(nm, self.backend.min_batch)
+            mq = np.zeros((pad, q.shape[1]), np.float32)
+            mex = np.full((pad,), NO_EXCLUDE, np.int32)
+            mq[:nm] = q[miss_rows]
+            mex[:nm] = ex[miss_rows]
+            ids, scores, dropped = self.backend.dispatch(mq, mex, m)
+            self.stats.record_batch(nm, pad - nm, dropped, self.backend.cost())
+            t_done = time.perf_counter()
+            for j, i in enumerate(miss_rows):
+                ids_i, sc_i = ids[j], scores[j]
+                self._results[int(tickets[i])] = (ids_i, sc_i)
+                if self.cache is not None:
+                    self.cache.put(keys[i], ids_i, sc_i, gen)
+                self.stats.record_done((t_done - t_sub[i]) * 1e6, hit=False)
+        return n
+
+    def flush(self) -> None:
+        while self._size:
+            self.step()
+
+    # -- synchronous convenience (tests / examples) ---------------------------
+
+    def search(
+        self, queries: np.ndarray, exclude: np.ndarray | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Submit a whole query matrix, drive the loop, gather results in
+        order — the drop-in replacement for `engine.search(...)[:2]`."""
+        queries = np.asarray(queries, np.float32)
+        nq = queries.shape[0]
+        m = self.cfg.m
+        out_i = np.full((nq, m), -1, np.int32)
+        out_s = np.full((nq, m), -np.inf, np.float32)
+        tickets = np.empty((nq,), np.int64)
+        for i in range(nq):
+            if self.free == 0:
+                self.step()  # drain before the ring would reject
+            ex = NO_EXCLUDE if exclude is None else int(exclude[i])
+            t = self.submit(queries[i], ex)
+            assert t is not None  # free>=1 guaranteed above
+            tickets[i] = t
+        self.flush()
+        for i in range(nq):
+            ids_i, sc_i = self._results.pop(int(tickets[i]))
+            out_i[i], out_s[i] = ids_i, sc_i
+        return out_i, out_s

@@ -1,0 +1,107 @@
+"""Online updates: interleave churn maintenance with serving (DESIGN.md
+Sec. 7 read/write epochs).
+
+The churn module measures index freshness with a fresh engine per epoch;
+this driver measures it END-TO-END through the serving stack instead: ONE
+long-lived `RetrievalFrontend` serves every epoch's queries while the
+soft-state maintenance (`insert_batch` + `expire`, paper Sec. 4.1) runs
+between read epochs.  Each write epoch bumps the store generation, which
+is exactly what invalidates the sketch-keyed result cache — so the run
+demonstrates the full contract: repeated queries hit the cache WITHIN a
+store generation, never across a mutation, and recall under live churn
+matches the reference trajectory (`core.churn.run_churn`) bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, metrics
+from repro.core.churn import ChurnConfig, _lsh_setup, _trajectory
+from repro.core.corpus import DenseCorpus
+from repro.core.engine import EngineConfig, LshEngine
+from repro.core.store import expire, insert_batch, make_store
+from repro.serve.frontend import EngineBackend, FrontendConfig, RetrievalFrontend
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeChurnConfig:
+    churn: ChurnConfig = ChurnConfig()
+    query_repeats: int = 2     # replays of each epoch's query batch — the
+    #                            repeats exercise the cache within an epoch
+    max_batch: int = 32
+    queue_capacity: int = 512
+    cache: bool = True
+    variant: str = "cnb"
+
+
+def run_serve_churn(cfg: ServeChurnConfig) -> dict:
+    """Drive the churn trajectory through the serving frontend.
+
+    Write epochs: announce (insert_batch) + GC (expire) + backend.update —
+    one generation bump per mutation, invalidating the cache.  Read
+    epochs: the epoch's query batch is served `query_repeats` times; all
+    repeats must return identical ids (cache hits are real results, never
+    stale ones), and repeat recall is measured per epoch.
+    """
+    c = cfg.churn
+    params, hp = _lsh_setup(c)
+    store = make_store(c.L, params.num_buckets, c.capacity)
+    announced = None
+
+    # one engine for the whole run; the backend swaps store/corpus per
+    # write epoch WITHOUT retracing (they are jit arguments, not closures)
+    engine = LshEngine(
+        params, hp, store, DenseCorpus(jnp.zeros((c.num_users, c.dim))),
+        None, EngineConfig(variant=cfg.variant),
+    )
+    backend = EngineBackend(engine)
+    frontend = RetrievalFrontend(
+        backend,
+        FrontendConfig(
+            m=c.m, max_batch=cfg.max_batch,
+            queue_capacity=cfg.queue_capacity, cache=cfg.cache,
+        ),
+    )
+
+    recalls, generations, repeat_mismatches = [], [], 0
+    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(c):
+        if do_refresh:  # -- write epoch -----------------------------------
+            announced = vecs.copy()
+            codes = hashing.sketch_codes(jnp.asarray(announced), hp)
+            store = insert_batch(
+                store, jnp.arange(c.num_users, dtype=jnp.int32), codes,
+                jnp.int32(epoch),
+            )
+            if epoch > 0:
+                store = expire(store, jnp.int32(epoch), ttl=c.ttl_epochs)
+            backend.update(store, DenseCorpus(jnp.asarray(announced)))
+        if epoch == 0:
+            continue
+
+        # -- read epoch -----------------------------------------------------
+        q = vecs[qidx]
+        first_ids = None
+        for _ in range(max(cfg.query_repeats, 1)):
+            ids, _scores = frontend.search(q, exclude=qidx)
+            if first_ids is None:
+                first_ids = ids
+                recalls.append(metrics.recall_at_m(ids, ideal))
+            elif not np.array_equal(ids, first_ids):
+                repeat_mismatches += 1  # a cache hit diverged — must be 0
+        generations.append(backend.generation)
+
+    return dict(
+        recalls=np.asarray(recalls),
+        final_recall=float(recalls[-1]),
+        mean_recall=float(np.mean(recalls)),
+        generations=np.asarray(generations),
+        store_generation=int(store.generation),
+        repeat_mismatches=repeat_mismatches,
+        stats=frontend.stats,
+        summary=frontend.stats.summary(),
+        refresh_every=c.refresh_every,
+    )
