@@ -30,7 +30,7 @@ from repro.core import (
 )
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host
-from repro.serve import EngineBackend, FrontendConfig, RetrievalFrontend
+from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
 # shapes chosen so the serving-layer effect is measurable on CPU: small
 # buckets (k=12, capacity 8) keep per-query score work light, so the fixed
@@ -81,7 +81,7 @@ def rows():
     rng = np.random.default_rng(7)
     qrows = rng.integers(0, N, size=NQ)
     ideal = _exact_ideal(emb, qrows, M)
-    backend = EngineBackend(engine)
+    backend = RuntimeBackend(engine)
     out = []
 
     def fresh(max_batch, cache, queue=512):

@@ -23,7 +23,7 @@ from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host
 from repro.models import model as M
 from repro.models import sharding as sh
-from repro.serve import EngineBackend, FrontendConfig, RetrievalFrontend
+from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
 
 def main():
@@ -58,7 +58,7 @@ def main():
                        EngineConfig(variant="cnb"))
 
     frontend = RetrievalFrontend(
-        EngineBackend(engine),
+        RuntimeBackend(engine),
         FrontendConfig(m=10, max_batch=32, queue_capacity=128),
     )
 

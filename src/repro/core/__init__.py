@@ -9,9 +9,14 @@ Layers:
                 overflow accounting) shared by store/distributed/moe
   can         — CAN overlay geometry: bucket->node map, neighbors, hops
   store       — soft-state bucket store (insert/refresh/GC, Sec. 4.1)
-  engine      — single-host reference engine (Algorithms 1-2)
-  distributed — shard_map runtime (all_to_all routing, neighbor permutes)
-  churn       — dynamic-OSN soft-state trajectories, single-host + sharded
+  runtime     — the ONE topology-parameterized execution layer: the five
+                step kernels + IndexRuntime (DESIGN.md Sec. 8)
+  engine      — single-host reference engine, a façade over the 1-node
+                runtime (Algorithms 1-2)
+  distributed — mesh adapter: shard_map/sharding-spec bindings of the
+                runtime kernels (all_to_all routing, neighbor permutes)
+  churn       — dynamic-OSN soft-state trajectories, one driver on any
+                topology
   layered     — Layered-LSH and its LSH-equivalence (Sec. 5.2)
   analysis    — Propositions 1-4 closed forms (Sec. 5)
   costmodel   — Table 1 cost accounting
@@ -32,6 +37,7 @@ from repro.core.hashing import (  # noqa: F401
 )
 from repro.core.can import CanTopology, paper_topology  # noqa: F401
 from repro.core.store import BucketStore, make_store, insert_batch, expire  # noqa: F401
+from repro.core.runtime import IndexRuntime, RuntimeConfig  # noqa: F401
 from repro.core.engine import EngineConfig, LshEngine, SearchResult, dedupe_topk  # noqa: F401
 from repro.core.corpus import DenseCorpus, SparseCorpus  # noqa: F401
 from repro.core import analysis, costmodel, metrics, multiprobe  # noqa: F401

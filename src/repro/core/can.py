@@ -51,20 +51,31 @@ class CanTopology:
         return 1 << self.local_bits
 
     # -- bucket/node coordinates ------------------------------------------
+    #
+    # Two explicit backends instead of duck-typed dispatch: `node_of` /
+    # `local_of` are the traced (jnp) path used inside jit/shard_map by
+    # the planner and runtime kernels; the `*_np` variants are the host
+    # path used by simulators and benchmarks.  Both are tested against
+    # each other (tests/test_can.py).
 
-    def node_of(self, codes):
+    def node_of(self, codes) -> jnp.ndarray:
         """Owning node id of each bucket code (high `node_bits` bits)."""
-        return (codes.astype(jnp.uint32) >> jnp.uint32(self.local_bits)) if hasattr(
-            codes, "dtype"
-        ) and not isinstance(codes, np.ndarray) else (
-            np.asarray(codes, dtype=np.uint32) >> np.uint32(self.local_bits)
+        return jnp.asarray(codes).astype(jnp.uint32) >> jnp.uint32(
+            self.local_bits
         )
 
-    def local_of(self, codes):
+    def node_of_np(self, codes) -> np.ndarray:
+        """Host (numpy) twin of `node_of`."""
+        return np.asarray(codes, dtype=np.uint32) >> np.uint32(self.local_bits)
+
+    def local_of(self, codes) -> jnp.ndarray:
         """Bucket index within the owning node's shard (low bits)."""
         mask = (1 << self.local_bits) - 1
-        if hasattr(codes, "dtype") and not isinstance(codes, np.ndarray):
-            return codes.astype(jnp.uint32) & jnp.uint32(mask)
+        return jnp.asarray(codes).astype(jnp.uint32) & jnp.uint32(mask)
+
+    def local_of_np(self, codes) -> np.ndarray:
+        """Host (numpy) twin of `local_of`."""
+        mask = (1 << self.local_bits) - 1
         return np.asarray(codes, dtype=np.uint32) & np.uint32(mask)
 
     def code_of(self, node, local):

@@ -11,37 +11,45 @@ paper asserts this keeps the index fresh at negligible cost (update rate
        (their true buckets move);
     2. a fraction `churn_rate` of users leave and are replaced by fresh
        users (new ids, new vectors);
-    3. every `refresh_every` epochs, all live users re-announce
-       (insert_batch) and the store expires entries older than `ttl`;
+    3. every `refresh_every` epochs, all live users re-announce and the
+       store expires entries older than `ttl`;
     4. CNB-LSH recall@m is measured against the *current* ground truth.
 
 Output: recall trajectory vs refresh period — the freshness/cost trade the
-paper's design argues about, quantified.  Uses the same BucketStore /
-engine code paths as production (streaming insert_batch + expire, not the
-host bulk builder).
+paper's design argues about, quantified.
 
-Two drivers over ONE trajectory generator (same RNG stream, so their
-recall curves are directly comparable):
+ONE driver (`run_churn_runtime`) over ONE trajectory generator and ONE
+execution layer (`repro.core.runtime.IndexRuntime`): the scenario loop is
+topology-blind by construction — announces go through the runtime's
+insert step, GC through its expire step, payload freshness through its
+payload-sync step, the CNB neighbor cache (when the topology has node
+bits) through its refresh step, and queries through its search step.
 
-  * `run_churn`             — single-host `LshEngine` (the reference);
-  * `run_churn_distributed` — the shard_map runtime on a >= 2-shard host
-    mesh, driving `make_insert_step` + `expire` + `make_refresh_cache`
-    (the paper's actual P2P scenario on the production code path).  Also
-    reports per-epoch CNB cache staleness and routed-probe drop counts.
+  * `run_churn(cfg)`             — the 1-node topology (the reference);
+  * `run_churn_distributed(cfg)` — the same loop on a >= 2-shard host
+    mesh (the paper's actual P2P scenario on the production code path).
+    The two trajectories share the RNG stream and match EXACTLY
+    (tests/test_churn.py asserts <= 0.02; in practice maxdiff 0.0).
+
+Scoring uses the ANNOUNCED snapshot of each vector, not the live one:
+the paper's LocalSimSearch runs at the bucket node against the copies
+users last announced (Alg. 1), so between refreshes both the buckets AND
+the scores are stale — recall is measured against the current ground
+truth, which is exactly the freshness cost being quantified.  The
+payload-sync step keeps re-announce semantics id-keyed (an entry left in
+a mover's OLD bucket scores with its LATEST announced vector).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, metrics
-from repro.core.corpus import DenseCorpus
-from repro.core.engine import EngineConfig, LshEngine
 from repro.core.hashing import LshParams
-from repro.core.store import expire, insert_batch, make_store
+from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.store import make_store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,9 +80,9 @@ def _lsh_setup(cfg: ChurnConfig):
 
 
 def _trajectory(cfg: ChurnConfig):
-    """Yield the per-epoch world state — one RNG stream shared by both
-    drivers, so single-host and distributed runs see identical vectors,
-    churn events, and query draws.
+    """Yield the per-epoch world state — one RNG stream shared by every
+    driver, so 1-node and distributed runs see identical vectors, churn
+    events, and query draws.
 
     Yields (epoch, vecs, do_refresh, qidx, ideal); epoch 0 is the initial
     announce (qidx/ideal None).
@@ -108,56 +116,6 @@ def _trajectory(cfg: ChurnConfig):
         yield epoch, vecs, epoch % cfg.refresh_every == 0, qidx, ideal
 
 
-def run_churn(cfg: ChurnConfig) -> dict:
-    """Single-host reference trajectory: per-epoch recall and bookkeeping.
-
-    Scoring uses the ANNOUNCED snapshot of each vector, not the live one:
-    the paper's LocalSimSearch runs at the bucket node against the copies
-    users last announced (Alg. 1), so between refreshes both the buckets
-    AND the scores are stale — recall is measured against the current
-    ground truth, which is exactly the freshness cost being quantified.
-    """
-    params, hp = _lsh_setup(cfg)
-    store = make_store(cfg.L, params.num_buckets, cfg.capacity)
-    announced = None
-
-    recalls, staleness = [], []
-    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
-        # 3. periodic refresh + GC (the paper's soft-state maintenance)
-        if do_refresh:
-            announced = vecs.copy()
-            codes = hashing.sketch_codes(jnp.asarray(announced), hp)
-            store = insert_batch(
-                store,
-                jnp.arange(cfg.num_users, dtype=jnp.int32),
-                codes,
-                jnp.int32(epoch),
-            )
-            if epoch > 0:
-                store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
-        if epoch == 0:
-            continue
-
-        corpus = DenseCorpus(jnp.asarray(announced))
-        engine = LshEngine(
-            params, hp, store, corpus, None, EngineConfig(variant="cnb")
-        )
-        res = engine.search(jnp.asarray(vecs[qidx]), m=cfg.m, exclude=qidx)
-        recalls.append(metrics.recall_at_m(res.ids, ideal))
-        staleness.append(epoch % cfg.refresh_every)
-
-    return dict(
-        recalls=np.asarray(recalls),
-        staleness=np.asarray(staleness),
-        final_recall=float(recalls[-1]),
-        mean_recall=float(np.mean(recalls)),
-        refresh_every=cfg.refresh_every,
-        # store mutation counter after the run — the serving layer's cache
-        # invalidation signal (every insert/expire bumped it)
-        store_generation=int(store.generation),
-    )
-
-
 def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
     if x.shape[0] == n:
         return x
@@ -165,62 +123,50 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
     return np.concatenate([x, pad], axis=0)
 
 
-def run_churn_distributed(
+def make_churn_runtime(
     cfg: ChurnConfig,
-    n_shards: int = 2,
+    n_shards: int = 1,
     mesh=None,
     cap_factor: float | None = None,
-) -> dict:
-    """The same churn trajectory driven through the shard_map runtime.
+) -> IndexRuntime:
+    """The runtime a churn trajectory executes on.
 
-    Buckets shard over `model`; announces go through `make_insert_step`
-    (+ `expire`), queries through the all_to_all-routed search step, and
-    the CNB neighbor cache is rebuilt by `make_refresh_cache` at each
-    announce — so between refreshes the cache is STALE, which is the
-    freshness/cost trade the paper's periodic bucket exchange makes.
-    Returns the single-host dict plus `cache_staleness` (epochs since the
-    cache was rebuilt) and `dropped_probes` (router overflow, per epoch).
-
-    Requires a host mesh whose `model` axis has n_shards devices — in a
-    plain CPU process set XLA_FLAGS=--xla_force_host_platform_device_count
-    before importing jax (see tests/test_churn.py / bench_churn.py).
+    `m` carries one result of wire headroom: the routed search path has no
+    exclusion support (the id is not secret, paper Sec. 6), so the driver
+    filters the query's own id host-side — the same convention on every
+    topology, which is what keeps the trajectories comparable.
+    cap_factor = n_shards guarantees zero drops (worst case routes every
+    probe of a device to one owner shard); callers may lower it to trade
+    buffer bytes for reported drops.
     """
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    from repro.core import distributed as dist
-    from repro.launch.mesh import make_host_mesh, require_host_devices
-
-    if mesh is None:
-        require_host_devices(n_shards)
-        mesh = make_host_mesh(data=1, model=n_shards)
-    params, hp = _lsh_setup(cfg)
-    # cap_factor = n_shards guarantees zero drops (worst case routes every
-    # probe of a device to one owner shard); callers may lower it to trade
-    # buffer bytes for reported drops.
-    dcfg = dist.DistConfig(
-        params=params, n_shards=n_shards, variant="cnb",
-        m=cfg.m + 1,  # +1: self-match is filtered on the host (no exclude
-        #               support on the wire — the id is not secret, Sec. 6)
+    params, _ = _lsh_setup(cfg)
+    rcfg = RuntimeConfig(
+        params=params, n_nodes=n_shards, variant="cnb",
+        m=cfg.m + 1,
         routing="alltoall",
         cap_factor=float(n_shards if cap_factor is None else cap_factor),
     )
-    n_dev = int(np.prod([mesh.shape[a] for a in ("data", "model")]))
+    return IndexRuntime(rcfg, mesh=mesh)
+
+
+def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
+    """Drive the churn trajectory on ANY topology (the one driver).
+
+    Announce epochs: runtime insert + expire + payload sync (+ CNB cache
+    refresh when the topology has node bits — between refreshes that
+    cache is STALE, the freshness/cost trade of the paper's periodic
+    bucket exchange).  Read epochs: runtime search + host-side
+    self-exclusion, recall against the current ground truth.
+    """
+    params, hp = _lsh_setup(cfg)
+    n_dev = rt.n_devices
     nu_pad = -(-cfg.num_users // n_dev) * n_dev
     nq_pad = -(-cfg.num_queries // n_dev) * n_dev
 
-    store = dist.shard_store(
-        mesh, make_store(cfg.L, params.num_buckets, cfg.capacity,
-                         payload_dim=cfg.dim)
+    store = rt.shard_store(
+        make_store(cfg.L, params.num_buckets, cfg.capacity,
+                   payload_dim=cfg.dim)
     )
-    insert = dist.make_insert_step(dcfg, mesh)
-    search = dist.make_search_step(dcfg, mesh)
-    payload_sync = dist.make_payload_sync(dcfg, mesh)
-    refresh_cache = (
-        dist.make_refresh_cache(dcfg, mesh) if dcfg.node_bits > 0 else None
-    )
-    vspec = NamedSharding(mesh, P(("data", "model"), None))
-    ispec = NamedSharding(mesh, P(("data", "model")))
     all_ids = _pad_to(np.arange(cfg.num_users, dtype=np.int32), nu_pad, -1)
 
     cache = None
@@ -228,29 +174,21 @@ def run_churn_distributed(
     recalls, staleness, dropped = [], [], []
     for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
         if do_refresh:
-            vd = jax.device_put(
-                jnp.asarray(_pad_to(vecs, nu_pad, 0.0)), vspec)
-            store = insert(
-                hp, store, vd, jax.device_put(jnp.asarray(all_ids), ispec),
-                jnp.int32(epoch),
-            )
+            vpad = _pad_to(vecs, nu_pad, 0.0)
+            store = rt.insert(hp, store, vpad, all_ids, epoch)
             if epoch > 0:
-                store = expire(store, jnp.int32(epoch), ttl=cfg.ttl_epochs)
+                store = rt.expire(store, epoch, ttl=cfg.ttl_epochs)
             # entries left in a mover's OLD buckets must score with its
-            # latest announced vector (the LshEngine corpus semantics)
-            store = payload_sync(store, vd)
-            if refresh_cache is not None:
-                cache = refresh_cache(store.ids, store.payload)
+            # latest announced vector (the id-keyed reference semantics)
+            store = rt.payload_sync(store, vpad)
+            cache = rt.refresh_cache(store)
             last_refresh = epoch
         if epoch == 0:
             continue
 
-        q = jax.device_put(
-            jnp.asarray(_pad_to(vecs[qidx], nq_pad, 0.0)), vspec)
-        args = (hp, store.ids, store.payload)
-        if cache is not None:
-            args += cache
-        ids, _, drop = search(*args, q)
+        ids, _, drop = rt.search(
+            hp, store, _pad_to(vecs[qidx], nq_pad, 0.0), cache=cache
+        )
         ids = np.asarray(ids)[: cfg.num_queries]
         # host-side self-exclusion: drop the query's own id, keep top-m
         keep = ids != qidx[:, None]
@@ -258,8 +196,8 @@ def run_churn_distributed(
         for i in range(cfg.num_queries):
             ids_m[i] = ids[i][keep[i]][: cfg.m]
         recalls.append(metrics.recall_at_m(ids_m, ideal))
-        # epochs since the last announce+cache rebuild — the single-host
-        # driver's `epoch % refresh_every` convention, kept comparable
+        # epochs since the last announce (== epoch % refresh_every when
+        # refreshes land on schedule) — one convention for all topologies
         staleness.append(epoch - last_refresh)
         dropped.append(int(drop))
 
@@ -268,12 +206,41 @@ def run_churn_distributed(
         recalls=np.asarray(recalls),
         # one measurement, two names: announce and cache rebuild share the
         # refresh schedule, so store staleness == cache staleness here
-        # (`staleness` mirrors the single-host dict's key).
         staleness=stale_arr,
         cache_staleness=stale_arr,
         dropped_probes=np.asarray(dropped),
         final_recall=float(recalls[-1]),
         mean_recall=float(np.mean(recalls)),
         refresh_every=cfg.refresh_every,
+        # store mutation counter after the run — the serving layer's cache
+        # invalidation signal (every insert/expire/sync bumped it)
         store_generation=int(store.generation),
+    )
+
+
+def run_churn(cfg: ChurnConfig) -> dict:
+    """The reference trajectory: the same driver on the 1-node topology
+    (identity router, no collectives)."""
+    return run_churn_runtime(cfg, make_churn_runtime(cfg))
+
+
+def run_churn_distributed(
+    cfg: ChurnConfig,
+    n_shards: int = 2,
+    mesh=None,
+    cap_factor: float | None = None,
+) -> dict:
+    """The same trajectory on the sharded mesh topology.
+
+    Requires a host mesh whose `model` axis has n_shards devices — in a
+    plain CPU process set XLA_FLAGS=--xla_force_host_platform_device_count
+    before importing jax (see tests/test_churn.py / bench_churn.py).
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh, require_host_devices
+
+        require_host_devices(n_shards)
+        mesh = make_host_mesh(data=1, model=n_shards)
+    return run_churn_runtime(
+        cfg, make_churn_runtime(cfg, n_shards, mesh, cap_factor)
     )

@@ -1,18 +1,20 @@
-"""Distributed NearBucket-LSH runtime (shard_map over the production mesh).
+"""Mesh adapter for the IndexRuntime (shard_map over the production mesh).
 
-Geometry (DESIGN.md Sec. 2): bucket shards live on the `model` mesh axis —
-device j owns the contiguous sketch-prefix zone {codes with high bits == j}
-(the CAN zone).  The query batch is sharded over *all* mesh axes (every
-device is both a peer that receives queries and a bucket node, exactly as in
-the paper's P2P OSN).  Bucket state is replicated across the data/pod axes.
+Since the runtime consolidation (DESIGN.md Sec. 8) the query/maintenance
+logic lives in `repro.core.runtime` as topology-generic step kernels; this
+module is ONLY the mesh side of that layer:
 
-Probe planning is NOT implemented here: `repro.core.plan` turns each query
-into a `ProbePlan` (owner shard, local bucket, probe bitmask), exactly the
-planner the single-host `LshEngine` runs — so `ranked_probes` and the
-`num_probes` budget behave identically on both runtimes (equivalence
-CI-checked in tests/test_distributed.py).  The probe bitmask rides the
-routed metadata: the owner shard applies its local bits, the neighbor
-cache / XOR-neighbor forwards apply its node bits.
+  * the sharding geometry (DESIGN.md Sec. 2): bucket shards on the `model`
+    axis — device j owns the contiguous sketch-prefix zone (the CAN zone);
+    the query batch shards over ALL mesh axes; bucket state replicates
+    across data/pod — `shard_store` and the PartitionSpecs below;
+  * `shard_map` wrappers binding each runtime kernel to the mesh
+    collectives (`make_search_step`, `make_contains_step`,
+    `make_insert_step`, `make_payload_sync`, `make_refresh_cache`) plus
+    the global psum of the per-device overflow-drop counts;
+  * the ICI byte model (`estimate_query_bytes`, `estimate_refresh_bytes`)
+    — the Table-1 analogue in the byte domain, verified against compiled
+    HLO in benchmarks/bench_distributed.py.
 
 Per-variant communication on the query path (mirrors Table 1):
   lsh  : route each (query, table) to its owner shard  [all_to_all]
@@ -40,440 +42,34 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
-from repro.core import plan as plan_mod
-from repro.core import routing as routing_mod
-from repro.core import scoring
-from repro.core.can import CanTopology
-from repro.core.hashing import LshParams
-from repro.core.scoring import dedupe_topk
+from repro.core import runtime as runtime_mod
+from repro.core.runtime import (  # noqa: F401  (canonical home moved)
+    MeshCollectives,
+    RuntimeConfig,
+    _route_cap,
+)
 from repro.core.store import BucketStore
 
-NEG_INF = float("-inf")
+
+def DistConfig(*, n_shards: int, **kw) -> RuntimeConfig:
+    """Legacy constructor name: a mesh RuntimeConfig with n_shards nodes."""
+    return RuntimeConfig(n_nodes=n_shards, **kw)
 
 
-@dataclasses.dataclass(frozen=True)
-class DistConfig:
-    params: LshParams
-    n_shards: int                 # size of the `model` axis
-    variant: str = "cnb"          # lsh | nb | cnb
-    m: int = 10
-    routing: str = "alltoall"     # alltoall | allgather
-    cap_factor: float = 2.0       # per-destination buffer slack (alltoall)
-    probe_local_near: bool = True  # search local-bit near buckets (nb/cnb)
-    num_probes: int | None = None  # None => all k 1-near buckets (the paper)
-    ranked_probes: bool = False    # margin-ranked probe subset (beyond paper)
-    use_kernels: bool = False      # fused Pallas score/top-m on each shard
+def _collectives(cfg: RuntimeConfig, batch_axes) -> MeshCollectives:
+    return MeshCollectives(n=cfg.n_nodes, axis="model",
+                           batch_axes=tuple(batch_axes))
 
-    @property
-    def topo(self) -> CanTopology:
-        return CanTopology(self.params.k, self.n_shards)
 
-    @property
-    def node_bits(self) -> int:
-        return self.topo.node_bits
-
-    @property
-    def local_bits(self) -> int:
-        return self.topo.local_bits
-
-    @property
-    def probe_spec(self) -> plan_mod.ProbeSpec:
-        """The shared probe discipline (same planner as `LshEngine`)."""
-        return plan_mod.ProbeSpec(
-            params=self.params,
-            variant=self.variant,
-            num_probes=self.num_probes,
-            ranked_probes=self.ranked_probes,
-        )
+def _psum_axes(batch_axes) -> tuple[str, ...]:
+    """Axes the per-device drop counts are distinct over (dedup'd)."""
+    return tuple(dict.fromkeys(tuple(batch_axes) + ("model",)))
 
 
 # -----------------------------------------------------------------------------
-# local search helpers (run inside shard_map on one shard)
-# -----------------------------------------------------------------------------
-
-
-def _local_include_near(cfg: DistConfig) -> bool:
-    return cfg.variant != "lsh" and cfg.probe_local_near
-
-
-def _node_bit_valid(cfg: DistConfig, mask: jax.Array) -> jax.Array:
-    """[r, node_bits] — is the flip of node bit j probed for each query?
-    (the planner's mask-layout helper, stacked over this config's bits)"""
-    if cfg.node_bits == 0:
-        return jnp.zeros(mask.shape + (0,), bool)
-    topo = cfg.topo
-    return jnp.stack(
-        [plan_mod.node_bit_probe_valid(topo, mask, b)
-         for b in range(cfg.node_bits)],
-        axis=-1,
-    )
-
-
-def _score_local(
-    cfg: DistConfig,
-    store_ids: jax.Array,      # [T, NB_local, C]
-    store_payload: jax.Array,  # [T, NB_local, C, D]
-    q: jax.Array,              # [r, d]
-    table: jax.Array,          # [r] int32
-    local_idx: jax.Array,      # [r] int32 bucket index within shard
-    mask: jax.Array,           # [r] int32/uint32 probe bitmask (plan)
-    m: int,
-):
-    """Top-m among (exact + masked local near) buckets of a routed query."""
-    probes, pvalid = plan_mod.shard_local_probes(
-        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
-    )                                                      # [r, P] both
-    cand_ids = store_ids[table[:, None], probes]           # [r, P, C]
-    cand_ids = jnp.where(pvalid[..., None], cand_ids, -1)
-    cand_vec = store_payload[table[:, None], probes]       # [r, P, C, D]
-    r = q.shape[0]
-    cand_ids = cand_ids.reshape(r, -1)
-    cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
-    return scoring.score_topk(
-        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
-    )
-
-
-def _score_cache(
-    cfg: DistConfig,
-    cache_ids: jax.Array,      # [T, nbits, NB_local, C]
-    cache_payload: jax.Array,  # [T, nbits, NB_local, C, D]
-    q: jax.Array,              # [r, d]
-    table: jax.Array,          # [r]
-    local_idx: jax.Array,      # [r]
-    mask: jax.Array,           # [r]
-    m: int,
-):
-    """CNB: score the masked node-bit near buckets from the neighbor cache.
-
-    Flipping node bit j keeps the local index unchanged, so the near bucket
-    of bit j is cache[table, j, local_idx] — a pure local gather, gated per
-    query by node bit j of the probe mask.
-    """
-    nbits = cache_ids.shape[1]
-    jj = jnp.arange(nbits)[None, :]
-    cand_ids = cache_ids[table[:, None], jj, local_idx[:, None]]  # [r, nbits, C]
-    cand_ids = jnp.where(_node_bit_valid(cfg, mask)[..., None], cand_ids, -1)
-    cand_vec = cache_payload[table[:, None], jj, local_idx[:, None]]
-    r = q.shape[0]
-    cand_ids = cand_ids.reshape(r, -1)
-    cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
-    return scoring.score_topk(
-        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
-    )
-
-
-def _neighbor_parts(
-    cfg: DistConfig, store_ids, store_payload, rq, rtable, rlocal, rmask, m
-):
-    """NB: forward routed queries to each XOR-neighbor; it scores ITS exact
-    bucket at the same local index (node-bit flip keeps local bits), then
-    returns the partial top-m.  2 ppermutes per node bit; the origin query's
-    probe mask gates each bit's contribution."""
-    nbit_valid = _node_bit_valid(cfg, rmask)           # [r, nbits]
-    ids_parts, sc_parts = [], []
-    for j in range(cfg.node_bits):
-        perm = cfg.topo.neighbor_perm(j)
-        nq = jax.lax.ppermute(rq, "model", perm)
-        nt = jax.lax.ppermute(rtable, "model", perm)
-        nl = jax.lax.ppermute(rlocal, "model", perm)
-        ids_j, sc_j = _score_local(
-            dataclasses.replace(cfg, variant="lsh"),   # exact bucket only
-            store_ids, store_payload, nq, nt, nl,
-            jnp.zeros_like(rmask), m,
-        )
-        ids_j = jax.lax.ppermute(ids_j, "model", perm)
-        sc_j = jax.lax.ppermute(sc_j, "model", perm)
-        keep = nbit_valid[:, j][:, None]
-        ids_parts.append(jnp.where(keep, ids_j, -1))
-        sc_parts.append(jnp.where(keep, sc_j, NEG_INF))
-    return ids_parts, sc_parts
-
-
-# -----------------------------------------------------------------------------
-# the sharded search step
-# -----------------------------------------------------------------------------
-
-
-def _merge_topk(ids_list, scores_list, m):
-    ids = jnp.concatenate(ids_list, axis=-1)
-    scores = jnp.concatenate(scores_list, axis=-1)
-    return dedupe_topk(ids, scores, m)
-
-
-def _flat_plan(cfg: DistConfig, q: jax.Array, hyperplanes: jax.Array):
-    """Run the shared planner and flatten to (query, table) granularity."""
-    L = cfg.params.L
-    b_loc = q.shape[0]
-    plan = plan_mod.make_plan(cfg.probe_spec, q, hyperplanes, cfg.topo)
-    flat = dict(
-        owner=plan.owner.reshape(-1),                   # [b_loc*L]
-        local=plan.local_idx.reshape(-1),
-        mask=plan.probe_mask.astype(jnp.int32).reshape(-1),
-        table=jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_loc,)),
-        qidx=jnp.repeat(jnp.arange(b_loc, dtype=jnp.int32), L),
-    )
-    return plan, flat
-
-
-def _route_cap(cfg: DistConfig, b_loc: int) -> int:
-    cap = int(np.ceil(b_loc * cfg.params.L / cfg.n_shards * cfg.cap_factor))
-    return max(cap, 1)
-
-
-def _search_shard(
-    cfg: DistConfig,
-    hyperplanes: jax.Array,
-    store_ids: jax.Array,
-    store_payload: jax.Array,
-    cache_ids: jax.Array | None,
-    cache_payload: jax.Array | None,
-    q: jax.Array,  # [b_loc, d] — this device's slice of the query batch
-):
-    """Runs on every device under shard_map.
-
-    Returns (ids [b_loc, m], scores [b_loc, m], dropped int32) — `dropped`
-    counts this device's (query, table) probes that overflowed the
-    capacitated all_to_all send buffers (always 0 for allgather routing).
-    """
-    L, m = cfg.params.L, cfg.m
-    n = cfg.n_shards
-    b_loc, d = q.shape
-    _, flat = _flat_plan(cfg, q, hyperplanes)
-
-    if cfg.routing == "allgather":
-        ids, sc = _search_allgather(
-            cfg, store_ids, store_payload, cache_ids, cache_payload, q, flat
-        )
-        return ids, sc, jnp.int32(0)
-
-    # ---- all_to_all routing (DHT-lookup analogue) ---------------------------
-    cap = _route_cap(cfg, b_loc)
-    route = routing_mod.plan_routes(flat["owner"], n, cap)
-    meta = jnp.stack(
-        [flat["qidx"], flat["table"], flat["local"], flat["mask"]], axis=-1
-    )
-    send_q = routing_mod.build_send_buffer(route, n, cap, q[flat["qidx"]], 0.0)
-    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
-
-    recv_q = jax.lax.all_to_all(send_q, "model", 0, 0, tiled=True)
-    recv_meta = jax.lax.all_to_all(send_meta, "model", 0, 0, tiled=True)
-    rq = recv_q.reshape(n * cap, d)
-    rtable = recv_meta[..., 1].reshape(-1)
-    rlocal = recv_meta[..., 2].reshape(-1)
-    rmask = recv_meta[..., 3].reshape(-1)
-    rvalid = rtable >= 0
-    rtable_c = jnp.maximum(rtable, 0)
-    rlocal_c = jnp.maximum(rlocal, 0)
-    rmask_c = jnp.maximum(rmask, 0)
-
-    ids_o, sc_o = _score_local(
-        cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, rmask_c, m
-    )
-    ids_parts, sc_parts = [ids_o], [sc_o]
-
-    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
-        ids_c, sc_c = _score_cache(
-            cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, rmask_c, m
-        )
-        ids_parts.append(ids_c)
-        sc_parts.append(sc_c)
-
-    if cfg.variant == "nb":
-        ids_n, sc_n = _neighbor_parts(
-            cfg, store_ids, store_payload, rq, rtable_c, rlocal_c, rmask_c, m
-        )
-        ids_parts += ids_n
-        sc_parts += sc_n
-
-    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)   # [n*cap, m]
-    ids_r = jnp.where(rvalid[:, None], ids_r, -1)
-    sc_r = jnp.where(rvalid[:, None], sc_r, NEG_INF)
-
-    # ---- return results to origin -------------------------------------------
-    back_i = jax.lax.all_to_all(ids_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
-    back_s = jax.lax.all_to_all(sc_r.reshape(n, cap, m), "model", 0, 0, tiled=True)
-    gather_i = routing_mod.return_to_origin(route, back_i, -1)      # [b_loc*L, m]
-    gather_s = routing_mod.return_to_origin(route, back_s, NEG_INF)
-    gather_i = gather_i.reshape(b_loc, L * m)
-    gather_s = gather_s.reshape(b_loc, L * m)
-    ids, sc = dedupe_topk(gather_i, gather_s, m)
-    return ids, sc, route.dropped
-
-
-def _gather_flat_meta(flat: dict, b_loc: int, L: int, names):
-    """all_gather the named per-(query, table) flat fields along `model`.
-
-    Shared prologue of the two allgather branches (search + contains), so
-    the [b_loc, L] re-flatten layout cannot drift between them.  Returns
-    ({name: [b_all*L]}, table index [b_all*L], b_all).
-    """
-    gathered = {
-        name: jax.lax.all_gather(
-            flat[name].reshape(b_loc, L), "model", axis=0, tiled=True
-        ).reshape(-1)
-        for name in names
-    }
-    b_all = next(iter(gathered.values())).shape[0] // L
-    rtable = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_all,))
-    return gathered, rtable, b_all
-
-
-def _search_allgather(
-    cfg, store_ids, store_payload, cache_ids, cache_payload, q, flat
-):
-    """Dense fallback: replicate queries along `model`, each shard scores the
-    (query, table) pairs it owns, results return via all_to_all."""
-    L, m, n = cfg.params.L, cfg.m, cfg.n_shards
-    b_loc = q.shape[0]
-    me = jax.lax.axis_index("model")
-
-    g, rtable, b_all = _gather_flat_meta(
-        flat, b_loc, L, ("owner", "local", "mask"))
-    q_all = jax.lax.all_gather(q, "model", axis=0, tiled=True)  # [b_all, d]
-    rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d]
-    rlocal = g["local"]
-    rmask = g["mask"]
-    mine = g["owner"] == me
-
-    ids_o, sc_o = _score_local(
-        cfg, store_ids, store_payload, rq, rtable, rlocal, rmask, m
-    )
-    ids_parts, sc_parts = [ids_o], [sc_o]
-    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
-        ids_c, sc_c = _score_cache(
-            cfg, cache_ids, cache_payload, rq, rtable, rlocal, rmask, m
-        )
-        ids_parts.append(ids_c)
-        sc_parts.append(sc_c)
-    if cfg.variant == "nb":
-        ids_n, sc_n = _neighbor_parts(
-            cfg, store_ids, store_payload, rq, rtable, rlocal, rmask, m
-        )
-        ids_parts += ids_n
-        sc_parts += sc_n
-
-    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)       # [b_all*L, m]
-    ids_r = jnp.where(mine[:, None], ids_r, -1)
-    sc_r = jnp.where(mine[:, None], sc_r, NEG_INF)
-
-    # each origin needs rows of its own queries from ALL shards: all_to_all
-    # over the origin-major reshape.
-    ids_r = ids_r.reshape(n, b_loc * L * m)
-    sc_r = sc_r.reshape(n, b_loc * L * m)
-    got_i = jax.lax.all_to_all(ids_r, "model", 0, 0, tiled=True)  # [n, b*L*m]
-    got_s = jax.lax.all_to_all(sc_r, "model", 0, 0, tiled=True)
-    got_i = got_i.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
-    got_s = got_s.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
-    return dedupe_topk(got_i, got_s, m)
-
-
-# -----------------------------------------------------------------------------
-# the sharded contains step (success-probability metric, paper Sec. 6.3)
-# -----------------------------------------------------------------------------
-
-
-def _contains_local(cfg, store_ids, table, local_idx, mask, target):
-    """bool [r]: does `target` sit in the (exact + masked local near)
-    buckets of each routed query?  Metadata-only — no payload gathers."""
-    probes, pvalid = plan_mod.shard_local_probes(
-        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
-    )
-    cand = store_ids[table[:, None], probes]                # [r, P, C]
-    hit = (cand == target[:, None, None]) & pvalid[..., None]
-    return jnp.any(hit, axis=(1, 2))
-
-
-def _contains_shard(
-    cfg: DistConfig,
-    hyperplanes: jax.Array,
-    store_ids: jax.Array,
-    cache_ids: jax.Array | None,
-    q: jax.Array,        # [b_loc, d]
-    targets: jax.Array,  # [b_loc] int32
-):
-    """Distributed `LshEngine.contains`: was target y's id in ANY searched
-    bucket of query x?  Routes only metadata (no query payload): membership
-    needs bucket ids, not vectors.  Returns (hits bool [b_loc], dropped)."""
-    L, n = cfg.params.L, cfg.n_shards
-    b_loc = q.shape[0]
-    _, flat = _flat_plan(cfg, q, hyperplanes)
-    flat_tgt = jnp.repeat(targets.astype(jnp.int32), L)
-
-    if cfg.routing == "allgather":
-        me = jax.lax.axis_index("model")
-        g, rtable, b_all = _gather_flat_meta(
-            dict(flat, target=flat_tgt), b_loc, L,
-            ("owner", "local", "mask", "target"))
-        hit = _contains_hits(
-            cfg, store_ids, cache_ids, rtable, g["local"], g["mask"],
-            g["target"],
-        )
-        hit = hit & (g["owner"] == me)
-        # OR across shards == psum of disjoint indicators, then own slice.
-        hit_all = jax.lax.psum(
-            hit.reshape(b_all, L).any(axis=-1).astype(jnp.int32), "model"
-        )
-        hits = jax.lax.dynamic_slice_in_dim(hit_all, me * b_loc, b_loc) > 0
-        return hits, jnp.int32(0)
-
-    cap = _route_cap(cfg, b_loc)
-    route = routing_mod.plan_routes(flat["owner"], n, cap)
-    meta = jnp.stack(
-        [flat["qidx"], flat["table"], flat["local"], flat["mask"], flat_tgt],
-        axis=-1,
-    )
-    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
-    recv_meta = jax.lax.all_to_all(send_meta, "model", 0, 0, tiled=True)
-    rtable = jnp.maximum(recv_meta[..., 1].reshape(-1), 0)
-    rlocal = jnp.maximum(recv_meta[..., 2].reshape(-1), 0)
-    rmask = jnp.maximum(recv_meta[..., 3].reshape(-1), 0)
-    rtgt = recv_meta[..., 4].reshape(-1)
-
-    hit = _contains_hits(cfg, store_ids, cache_ids, rtable, rlocal, rmask, rtgt)
-    # empty-slot rows carry rtgt = -1, which DOES match empty bucket ids
-    # (-1); this validity mask is what discards those spurious hits.
-    hit = hit & (recv_meta[..., 1].reshape(-1) >= 0)
-
-    back = jax.lax.all_to_all(
-        hit.reshape(n, cap).astype(jnp.int32), "model", 0, 0, tiled=True
-    )
-    got = routing_mod.return_to_origin(route, back, 0)       # [b_loc*L]
-    hits = got.reshape(b_loc, L).any(axis=-1)
-    return hits, route.dropped
-
-
-def _contains_hits(cfg, store_ids, cache_ids, rtable, rlocal, rmask, rtgt):
-    """Membership across owner buckets + node-bit coverage (cache or
-    neighbor forwards), mirroring the search step's candidate pool."""
-    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt)
-    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
-        nbits = cache_ids.shape[1]
-        jj = jnp.arange(nbits)[None, :]
-        cand = cache_ids[rtable[:, None], jj, rlocal[:, None]]  # [r, nbits, C]
-        valid = _node_bit_valid(cfg, rmask)[..., None]
-        hit |= jnp.any((cand == rtgt[:, None, None]) & valid, axis=(1, 2))
-    if cfg.variant == "nb":
-        nbit_valid = _node_bit_valid(cfg, rmask)
-        for j in range(cfg.node_bits):
-            perm = cfg.topo.neighbor_perm(j)
-            nt = jax.lax.ppermute(rtable, "model", perm)
-            nl = jax.lax.ppermute(rlocal, "model", perm)
-            ntgt = jax.lax.ppermute(rtgt, "model", perm)
-            hit_j = _contains_local(
-                dataclasses.replace(cfg, variant="lsh"),
-                store_ids, nt, nl, jnp.zeros_like(nl), ntgt,
-            )
-            hit_j = jax.lax.ppermute(hit_j, "model", perm)
-            hit |= hit_j & nbit_valid[:, j]
-    return hit
-
-
-# -----------------------------------------------------------------------------
-# public API
+# store placement
 # -----------------------------------------------------------------------------
 
 
@@ -496,7 +92,7 @@ def shard_store(mesh, store: BucketStore) -> BucketStore:
     )
 
 
-def make_refresh_cache(cfg: DistConfig, mesh):
+def make_refresh_cache(cfg: RuntimeConfig, mesh):
     """jit'd CNB cache refresh: 1 ppermute per node bit, OFF the query path.
 
     Returns (cache_ids [T, nbits, NB/n, C], cache_payload [T, nbits, NB/n, C, D])
@@ -504,7 +100,7 @@ def make_refresh_cache(cfg: DistConfig, mesh):
     """
     from jax.sharding import PartitionSpec as P
 
-    n = cfg.n_shards
+    n = cfg.n_nodes
     nbits = cfg.node_bits
 
     def _refresh(ids, payload):
@@ -527,12 +123,58 @@ def make_refresh_cache(cfg: DistConfig, mesh):
     return jax.jit(fn)
 
 
-def _psum_axes(batch_axes) -> tuple[str, ...]:
-    """Axes the per-device drop counts are distinct over (dedup'd)."""
-    return tuple(dict.fromkeys(tuple(batch_axes) + ("model",)))
+# -----------------------------------------------------------------------------
+# the step wrappers (runtime kernels bound to the mesh)
+# -----------------------------------------------------------------------------
 
 
-def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
+    """The un-jitted shard_map'd search callable (serve backends wrap it
+    with their own jit to count retraces); `make_search_step` is the jit'd
+    form.  Signature: (hyperplanes, store_ids, store_payload, [cache_ids,
+    cache_payload,] q) with `m = cfg.m` baked in.
+    """
+    cx = _collectives(cfg, batch_axes)
+    psum_axes = _psum_axes(batch_axes)
+    has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
+
+    def _mesh(mesh):
+        from jax.sharding import PartitionSpec as P
+
+        qspec = P(batch_axes, None)
+        store_i = P(None, "model", None)
+        store_p = P(None, "model", None, None)
+        cache_i = P(None, None, "model", None)
+        cache_p = P(None, None, "model", None, None)
+        out_specs = (P(batch_axes, None), P(batch_axes, None), P())
+
+        if has_cache:
+
+            def step(hyperplanes, ids, payload, c_ids, c_payload, q):
+                i, s, drop = runtime_mod.search_kernel(
+                    cfg, cx, cfg.m, hyperplanes, ids, payload,
+                    c_ids, c_payload, q,
+                )
+                return i, s, jax.lax.psum(drop, psum_axes)
+
+            in_specs = (P(), store_i, store_p, cache_i, cache_p, qspec)
+        else:
+
+            def step(hyperplanes, ids, payload, q):
+                i, s, drop = runtime_mod.search_kernel(
+                    cfg, cx, cfg.m, hyperplanes, ids, payload, None, None, q
+                )
+                return i, s, jax.lax.psum(drop, psum_axes)
+
+            in_specs = (P(), store_i, store_p, qspec)
+        return compat.shard_map(
+            step, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+
+    return _mesh
+
+
+def make_search_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed search: queries [B, d] sharded over batch_axes ->
     (ids [B, m], scores [B, m], dropped_probes int32 scalar).
 
@@ -540,61 +182,21 @@ def make_search_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     count of (query, table) probes that overflowed the capacitated
     all_to_all buffers this step (replicated; 0 under allgather routing).
     """
-    from jax.sharding import PartitionSpec as P
-
-    qspec = P(batch_axes, None)
-    store_i = P(None, "model", None)
-    store_p = P(None, "model", None, None)
-    cache_i = P(None, None, "model", None)
-    cache_p = P(None, None, "model", None, None)
-    out_specs = (P(batch_axes, None), P(batch_axes, None), P())
-    psum_axes = _psum_axes(batch_axes)
-
-    has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
-
-    if has_cache:
-
-        def step(hyperplanes, ids, payload, c_ids, c_payload, q):
-            i, s, drop = _search_shard(
-                cfg, hyperplanes, ids, payload, c_ids, c_payload, q
-            )
-            return i, s, jax.lax.psum(drop, psum_axes)
-
-        fn = compat.shard_map(
-            step,
-            mesh=mesh,
-            in_specs=(P(), store_i, store_p, cache_i, cache_p, qspec),
-            out_specs=out_specs,
-        )
-    else:
-
-        def step(hyperplanes, ids, payload, q):
-            i, s, drop = _search_shard(
-                cfg, hyperplanes, ids, payload, None, None, q
-            )
-            return i, s, jax.lax.psum(drop, psum_axes)
-
-        fn = compat.shard_map(
-            step,
-            mesh=mesh,
-            in_specs=(P(), store_i, store_p, qspec),
-            out_specs=out_specs,
-        )
-    return jax.jit(fn)
+    return jax.jit(search_step_fn(cfg, batch_axes)(mesh))
 
 
-def make_contains_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+def make_contains_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed `contains` (paper Sec. 6.3 success probability):
     (hyperplanes, store_ids, [cache_ids,] queries [B, d], targets [B]) ->
     (hits bool [B], dropped_probes int32).
 
-    Was target y's id inside ANY bucket the query searched — membership in
-    the probed buckets, not top-m.  Uses the same `ProbePlan` and router
-    as the search step, so the measured success probability is exactly the
-    deployed query discipline's.
+    Uses the same `ProbePlan` and router as the search step, so the
+    measured success probability is exactly the deployed query
+    discipline's.
     """
     from jax.sharding import PartitionSpec as P
 
+    cx = _collectives(cfg, batch_axes)
     qspec = P(batch_axes, None)
     tspec = P(batch_axes)
     store_i = P(None, "model", None)
@@ -607,71 +209,41 @@ def make_contains_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     if has_cache:
 
         def step(hyperplanes, ids, c_ids, q, targets):
-            h, drop = _contains_shard(cfg, hyperplanes, ids, c_ids, q, targets)
+            h, drop = runtime_mod.contains_kernel(
+                cfg, cx, hyperplanes, ids, c_ids, q, targets
+            )
             return h, jax.lax.psum(drop, psum_axes)
 
-        fn = compat.shard_map(
-            step,
-            mesh=mesh,
-            in_specs=(P(), store_i, cache_i, qspec, tspec),
-            out_specs=out_specs,
-        )
+        in_specs = (P(), store_i, cache_i, qspec, tspec)
     else:
 
         def step(hyperplanes, ids, q, targets):
-            h, drop = _contains_shard(cfg, hyperplanes, ids, None, q, targets)
+            h, drop = runtime_mod.contains_kernel(
+                cfg, cx, hyperplanes, ids, None, q, targets
+            )
             return h, jax.lax.psum(drop, psum_axes)
 
-        fn = compat.shard_map(
-            step,
-            mesh=mesh,
-            in_specs=(P(), store_i, qspec, tspec),
-            out_specs=out_specs,
-        )
+        in_specs = (P(), store_i, qspec, tspec)
+    fn = compat.shard_map(
+        step, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    )
     return jax.jit(fn)
 
 
-def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
+def make_insert_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed insert/refresh: vectors arrive sharded over the
     batch axes; each `model` shard takes the ones whose buckets it owns.
-
-    Paper Sec. 2.2: update rate is orders of magnitude below query rate, so
-    the simple all_gather path is the right trade (no routing buffers).
     Donates the store; returns the updated store.
     """
     from jax.sharding import PartitionSpec as P
 
+    cx = _collectives(cfg, batch_axes)
+
     def _insert(hyperplanes, ids_store, ts_store, ptr, payload_store, gen,
                 vec, vid, now):
-        from repro.core import store as store_mod
-
-        me = jax.lax.axis_index("model")
-        # gather over ALL batch axes: every store replica (data axis) must
-        # see every vector, not just its own data-row's slice.
-        vec_all = jax.lax.all_gather(vec, batch_axes, axis=0, tiled=True)
-        vid_all = jax.lax.all_gather(vid, batch_axes, axis=0, tiled=True)
-        plan = plan_mod.make_plan(
-            # insert wants only the owner/local split of the exact bucket
-            dataclasses.replace(cfg.probe_spec, variant="lsh"),
-            vec_all, hyperplanes, cfg.topo,
-        )
-        owner, local = plan.owner, plan.local_idx.astype(jnp.uint32)
-        # mark foreign (table, vector) entries invalid: blank foreign rows
-        # with id -1; insert_masked routes them out of bounds (mode='drop')
-        # so they can't clobber live slots.
-        st = store_mod.BucketStore(ids_store, ts_store, ptr, payload_store,
-                                   gen)
-        mine_any = owner == me[None, None]                       # [nv, L]
-        new = st
-        for l in range(cfg.params.L):
-            sel = mine_any[:, l]
-            ids_l = jnp.where(sel, vid_all, -1)
-            codes_l = jnp.where(sel, local[:, l], 0).astype(jnp.uint32)
-            new = store_mod.insert_masked(
-                new, l, ids_l, codes_l, now, vec_all
-            )
-        # every shard bumps its replica by the same L, so the replicated
-        # generation stays consistent across the mesh.
+        st = BucketStore(ids_store, ts_store, ptr, payload_store, gen)
+        new = runtime_mod.insert_kernel(cfg, cx, hyperplanes, st, vec, vid,
+                                        now)
         return new.ids, new.timestamps, new.write_ptr, new.payload, \
             new.generation
 
@@ -709,30 +281,16 @@ def make_insert_step(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     return insert
 
 
-def make_payload_sync(cfg: DistConfig, mesh, batch_axes=("data", "model")):
-    """jit'd payload re-sync: point every live bucket entry's payload at the
-    latest announced vector of its id.
-
-    The semantic reference (`LshEngine`) scores candidates through an
-    id-keyed corpus — always the LATEST announced vector — while the
-    embedded-payload store keeps whatever was announced into each bucket.
-    After a re-announce moves a user to new buckets, copies left in its
-    old buckets (alive until the TTL GC collects them) would score with
-    outdated vectors; this step restores the reference semantics.
-    Timestamps are untouched, so GC behaviour is unchanged.
-
-    Contract: `vec` row i must be the vector of user id i (dense 0-based
-    ids), sharded over `batch_axes` — the layout the churn driver uses.
-    Donates and returns the store.
-    """
+def make_payload_sync(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
+    """jit'd payload re-sync (`runtime.payload_sync_kernel` on the mesh).
+    Donates and returns the store."""
     from jax.sharding import PartitionSpec as P
 
+    cx = _collectives(cfg, batch_axes)
+
     def _sync(ids_store, payload_store, vec):
-        vec_all = jax.lax.all_gather(vec, batch_axes, axis=0, tiled=True)
-        nv = vec_all.shape[0]
-        live = (ids_store >= 0) & (ids_store < nv)
-        gathered = vec_all[jnp.clip(ids_store, 0, nv - 1)]
-        return jnp.where(live[..., None], gathered, payload_store)
+        return runtime_mod.payload_sync_kernel(cx, ids_store, payload_store,
+                                               vec)
 
     fn = compat.shard_map(
         _sync,
@@ -759,10 +317,16 @@ def make_payload_sync(cfg: DistConfig, mesh, batch_axes=("data", "model")):
     return jax.jit(_apply, donate_argnums=(0,))
 
 
-def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> dict:
-    """Closed-form ICI bytes per search step (the Table-1 analogue in the
-    byte domain); verified against HLO in benchmarks/bench_distributed.py."""
-    n = cfg.n_shards
+# -----------------------------------------------------------------------------
+# ICI byte model (the Table-1 analogue in the byte domain)
+# -----------------------------------------------------------------------------
+
+
+def estimate_query_bytes(cfg: RuntimeConfig, batch: int, d: int,
+                         n_total: int) -> dict:
+    """Closed-form ICI bytes per search step; verified against HLO in
+    benchmarks/bench_distributed.py."""
+    n = cfg.n_nodes
     b_loc = batch // n_total
     m = cfg.m
     L = cfg.params.L
@@ -786,9 +350,9 @@ def estimate_query_bytes(cfg: DistConfig, batch: int, d: int, n_total: int) -> d
 _META_INTS = 4  # (qidx, table, local, probe_mask) per routed probe
 
 
-def estimate_refresh_bytes(cfg: DistConfig, capacity: int, d: int) -> int:
+def estimate_refresh_bytes(cfg: RuntimeConfig, capacity: int, d: int) -> int:
     """ICI bytes of one CNB cache refresh per device: `node_bits` ppermutes
     of the full local store shard (ids + payload)."""
-    nb_local = cfg.params.num_buckets // cfg.n_shards
+    nb_local = cfg.params.num_buckets // cfg.n_nodes
     per_permute = cfg.params.L * nb_local * capacity * (4 + d * 4)
     return cfg.node_bits * per_permute

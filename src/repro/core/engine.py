@@ -1,8 +1,13 @@
 """Single-host reference search engine: LSH / Layered / NB-LSH / CNB-LSH.
 
-This is the semantic reference for the distributed runtime
-(`repro.core.distributed` must return identical result sets) and the engine
-behind the paper-reproduction benchmarks (Figs. 4-5).
+Since the runtime consolidation (DESIGN.md Sec. 8) this class is a thin
+façade over a 1-node `repro.core.runtime.IndexRuntime`: the probe/gather/
+score/top-m path is the SAME step kernel the sharded mesh runtime
+executes — on the degenerate topology every near bucket is a free
+local-bit probe, the router is the identity, and no collectives are
+traced.  The public surface (`search` / `contains` / `simulate_messages`,
+`SearchResult`) is unchanged and bit-identical to the pre-refactor
+engine (pinned by tests/test_runtime.py against checked-in goldens).
 
 Algorithm 1/2 of the paper, with network cost accounted per Table 1:
   * lsh / layered : search the L exact buckets.
@@ -11,8 +16,8 @@ Algorithm 1/2 of the paper, with network cost accounted per Table 1:
 Result sets of nb and cnb are identical; only the message cost differs.
 
 Query path (one jit'd dispatch over the whole padded batch):
-  sketch -> multiprobe plan -> stacked bucket gather over all L tables at
-  once -> shared score/top-m stage (`repro.core.scoring`).  With
+  sketch -> probe plan -> per-(query, table) bucket gather -> shared
+  score/top-m stage (`repro.core.scoring`) -> per-query merge.  With
   `use_kernels=True` the sketch runs through the fused Pallas simhash
   kernel and score/top-m through the fused `bucket_topk` kernel; result
   ids are bit-identical to the reference path (CI-checked).
@@ -26,16 +31,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, hashing, scoring
+from repro.core import costmodel, hashing
 from repro.core import plan as plan_mod
+from repro.core import runtime as runtime_mod
 from repro.core.can import CanTopology
 from repro.core.corpus import DenseCorpus, SparseCorpus
 from repro.core.hashing import LshParams
-from repro.core.scoring import dedupe_topk  # re-export (canonical home moved)
+from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.scoring import dedupe_topk  # noqa: F401  (re-export)
 from repro.core.store import BucketStore
-
-NEG_INF = jnp.float32(-jnp.inf)
-
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -53,13 +57,18 @@ class SearchResult:
     cost: costmodel.QueryCost          # closed-form per-query cost (Table 1)
     sim_messages: float | None = None  # simulated avg messages (hop-counted)
     dropped_probes: int = 0  # probes lost to routing overflow — always 0 on
-    #   the single-host engine (no capacitated routing); kept for API parity
-    #   with the distributed steps, which return the real count as their
-    #   third output (not through this class)
+    #   the single-host engine (the 1-node runtime's router is the identity);
+    #   kept for API parity with the mesh steps, which return the real count
+    #   as their third output (not through this class)
 
 
 class LshEngine:
-    """Reference engine over an id-only BucketStore + corpus."""
+    """Reference engine over an id-only BucketStore + corpus.
+
+    The corpus is the id-keyed payload source (always the LATEST announced
+    vector per id) — the single genuine data-model difference from the
+    mesh runtime, whose shards embed payloads in their bucket slots.
+    """
 
     def __init__(
         self,
@@ -81,8 +90,18 @@ class LshEngine:
         self.hyperplanes = hyperplanes
         self.store = store
         self.corpus = corpus
+        # overlay topology for the message SIMULATION (paper: one bucket
+        # per node); execution runs on the runtime's 1-node topology.
         self.topology = topology or CanTopology(params.k, 1 << params.k)
         self.config = config
+        self.runtime = IndexRuntime(RuntimeConfig(
+            params=params,
+            variant=config.variant,
+            n_nodes=1,
+            num_probes=config.num_probes,
+            ranked_probes=config.ranked_probes,
+            use_kernels=config.use_kernels,
+        ))
         self._search_batched = jax.jit(
             self._search_batched_impl, static_argnums=(2,)
         )
@@ -92,55 +111,21 @@ class LshEngine:
 
     @property
     def probe_spec(self) -> plan_mod.ProbeSpec:
-        return plan_mod.ProbeSpec(
-            params=self.params,
-            variant=self.config.variant,
-            num_probes=self.config.num_probes,
-            ranked_probes=self.config.ranked_probes,
-        )
+        return self.runtime.cfg.probe_spec
 
     @property
     def probes_per_table(self) -> int:
         return self.probe_spec.probes_per_table
 
-    def _probe_codes(self, q: jax.Array) -> jax.Array:
-        """[nq, L, P] bucket codes to search for each query."""
-        return plan_mod.make_plan(
-            self.probe_spec, q, self.hyperplanes, self.topology,
-            use_kernels=self.config.use_kernels,
-        ).probes
-
-    # -- candidate gathering + scoring ---------------------------------------
-
-    def _candidates(self, probes: jax.Array) -> jax.Array:
-        """[nq, L, P] probe codes -> candidate ids [nq, L*P*C].
-
-        One stacked gather across all L tables (no per-table host loop):
-        store.ids is [L, NB, C]; indexing with a broadcast table axis pulls
-        every probed bucket of every table in a single XLA gather.
-        """
-        idx = probes.astype(jnp.int32) % self.store.num_buckets  # [nq, L, P]
-        tables = jnp.arange(self.params.L, dtype=jnp.int32)[None, :, None]
-        cand = self.store.ids[tables, idx]  # [nq, L, P, C]
-        return cand.reshape(cand.shape[0], -1)
-
-    def _score(self, q: jax.Array, cand: jax.Array) -> jax.Array:
-        if isinstance(self.corpus, DenseCorpus):
-            return jax.vmap(self.corpus.scores_against)(q, cand)
-        return jax.vmap(self.corpus.scores_against_dense)(q, cand)
+    # -- chunk bodies (the 1-node runtime kernels, closed over state) ---------
 
     def _search_chunk_impl(self, q: jax.Array, exclude: jax.Array, m: int):
-        probes = self._probe_codes(q)
-        cand = self._candidates(probes)
-        invalid = (cand < 0) | (cand == exclude[:, None])
-        cand = jnp.where(invalid, -1, cand)
-        if isinstance(self.corpus, DenseCorpus):
-            vecs = self.corpus.gather(cand)
-            return scoring.score_topk(
-                q, cand, vecs, m, use_kernels=self.config.use_kernels
-            )
-        scores = jnp.where(invalid, NEG_INF, self._score(q, cand))
-        return dedupe_topk(cand, scores, m)
+        ids, scores, _ = runtime_mod.search_kernel(
+            self.runtime.cfg, runtime_mod.LOCAL, m, self.hyperplanes,
+            self.store.ids, None, None, None, q,
+            corpus=self.corpus, exclude=exclude,
+        )
+        return ids, scores
 
     def _search_batched_impl(self, q: jax.Array, exclude: jax.Array, m: int):
         """q [nchunks, chunk, d], exclude [nchunks, chunk] -> [nchunks, chunk, m]."""
@@ -149,9 +134,11 @@ class LshEngine:
         )
 
     def _contains_chunk_impl(self, q: jax.Array, targets: jax.Array):
-        probes = self._probe_codes(q)
-        cand = self._candidates(probes)
-        return jnp.any(cand == targets[:, None], axis=-1)
+        hits, _ = runtime_mod.contains_kernel(
+            self.runtime.cfg, runtime_mod.LOCAL, self.hyperplanes,
+            self.store.ids, None, q, targets,
+        )
+        return hits
 
     def _contains_batched_impl(self, q: jax.Array, targets: jax.Array):
         return jax.lax.map(
@@ -213,7 +200,7 @@ class LshEngine:
         sim = (
             self.simulate_messages(queries, rng) if simulate_messages else None
         )
-        # single-host search has no capacitated routing: genuinely 0 drops
+        # the 1-node router is the identity: genuinely 0 drops
         return SearchResult(out_i, out_s, cost, sim, dropped_probes=0)
 
     def contains(self, queries: jax.Array, target_ids: np.ndarray) -> np.ndarray:
@@ -241,7 +228,7 @@ class LshEngine:
         src = rng.integers(0, topo.n_nodes, size=(nq,))
         for i in range(nq):
             for l in range(self.params.L):
-                dst = int(np.asarray(topo.node_of(np.uint32(codes[i, l]))))
+                dst = int(topo.node_of_np(np.uint32(codes[i, l])))
                 counter.add_lookup(topo.lookup_hops(int(src[i]), dst))
                 counter.add_result()
                 if self.config.variant == "nb":

@@ -5,22 +5,23 @@ The paper's contribution is a single probing rule — the exact bucket
 g_l(q) plus k 1-near buckets per table, split by the CAN geometry into
 free local-bit probes and costed node-bit probes.  This module turns
 `(queries, LshParams, variant, num_probes, ranked_probes)` into an
-explicit `ProbePlan` pytree consumed by the single-host `LshEngine`, the
-`shard_map` runtime, and the benchmarks, so the discipline is implemented
-exactly once:
+explicit `ProbePlan` pytree consumed by the `IndexRuntime` step kernels
+(`repro.core.runtime` — on every topology, DESIGN.md Sec. 8) and the
+benchmarks, so the discipline is implemented exactly once:
 
   * `ProbePlan.probes` — compact per-table probe codes (exact bucket
-    first) for the single-host stacked gather;
+    first) for stacked gathers and benchmark sweeps;
   * `ProbePlan.probe_mask` — per-(query, table) bitmask of which of the k
-    near buckets (bit flips) are probed; the distributed runtime routes
-    this mask with the query and applies it at the owner shard (local
-    bits), the neighbor cache (node bits, CNB), and the XOR-neighbor
-    forwards (node bits, NB);
+    near buckets (bit flips) are probed; the runtime routes this mask
+    with the query and applies it at the owner shard (local bits), the
+    neighbor cache (node bits, CNB), and the XOR-neighbor forwards
+    (node bits, NB) — on the 1-node topology every bit is local, so the
+    mask application IS the reference probe set;
   * `ProbePlan.owner` / `ProbePlan.local_idx` — the CAN owner-shard /
     local-bucket split of each exact bucket.
 
-Both views are derived from the same margin ranking / probe budget, so an
-engine and a distributed runtime given the same `ProbeSpec` search the
+Both views are derived from the same margin ranking / probe budget, so
+runtimes on different topologies given the same `ProbeSpec` search the
 same buckets — the equivalence the tests pin down.
 """
 

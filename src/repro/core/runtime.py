@@ -1,0 +1,948 @@
+"""One IndexRuntime: the topology-parameterized execution layer (DESIGN.md
+Sec. 8).
+
+The paper's central claim (Sec. 4) is that the probe discipline and the
+CAN overlay are ONE design — the same bucket geometry decides what is
+probed and where it executes.  This module is that claim as code: the
+five index operations (search, contains, insert, expire, payload sync)
+are implemented ONCE, as step kernels parameterized by a `CanTopology`,
+and every execution context is a thin view:
+
+  * `CanTopology(k, n_nodes=1)` — the degenerate mesh.  Every near bucket
+    is a free local-bit probe, the router is the identity, and NO
+    collectives are traced: the kernels run under plain `jax.jit`.  The
+    single-host `LshEngine` (`repro.core.engine`) is a façade over this
+    topology and stays bit-identical to its pre-refactor goldens
+    (tests/test_runtime.py).
+  * `n_nodes > 1` — buckets shard over the mesh `model` axis; the same
+    kernels run under `shard_map` with real collectives.  The mesh /
+    sharding-spec plumbing lives in `repro.core.distributed` (the
+    adapter); the query logic lives here, so the two runtimes cannot
+    drift apart — the Bahmani et al. (arXiv:1210.7057) point that
+    single-node and distributed LSH should differ only in the
+    entry-reorganization layer.
+
+Collectives are abstracted by a tiny `Collectives` pair: `LOCAL` (all
+ops are identities on the 1-node topology) and `MeshCollectives` (the
+named-axis `lax` collectives).  Kernel bodies are written once against
+that protocol; `if cx.n == 1` branches exist only where the topology
+genuinely changes the dataflow (the identity router skips the
+capacitated all_to_all entirely — probes cannot be dropped on one node).
+
+`IndexRuntime` owns the step constructors and a host-level convenience
+API (`search` / `contains` / `insert` / `expire` / `payload_sync` /
+`refresh_cache` / `shard_store`), so drivers like `repro.core.churn`
+run one scenario loop on ANY topology by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.core import routing as routing_mod
+from repro.core import scoring
+from repro.core import store as store_mod
+from repro.core.can import CanTopology
+from repro.core.corpus import DenseCorpus
+from repro.core.hashing import LshParams
+from repro.core.scoring import dedupe_topk
+from repro.core.store import BucketStore
+
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Static description of one index runtime (any topology).
+
+    `n_nodes=1` is the single-host engine's degenerate mesh; `n_nodes>1`
+    is the sharded CAN zone geometry of DESIGN.md Sec. 2.  The legacy
+    `DistConfig(n_shards=...)` constructor in `repro.core.distributed`
+    builds this class.
+    """
+
+    params: LshParams
+    variant: str = "cnb"          # lsh | layered | nb | cnb
+    m: int = 10                    # results per query (mesh steps bake it)
+    n_nodes: int = 1               # topology nodes (power of two)
+    routing: str = "alltoall"      # alltoall | allgather (mesh only)
+    cap_factor: float = 2.0        # per-destination buffer slack (alltoall)
+    probe_local_near: bool = True  # search local-bit near buckets (nb/cnb)
+    num_probes: int | None = None  # None => all k 1-near buckets (the paper)
+    ranked_probes: bool = False    # margin-ranked probe subset (beyond paper)
+    use_kernels: bool = False      # fused Pallas sketch + score/top-m
+
+    @property
+    def topo(self) -> CanTopology:
+        return CanTopology(self.params.k, self.n_nodes)
+
+    @property
+    def n_shards(self) -> int:
+        """Legacy name for `n_nodes` (the mesh `model`-axis size)."""
+        return self.n_nodes
+
+    @property
+    def node_bits(self) -> int:
+        return self.topo.node_bits
+
+    @property
+    def local_bits(self) -> int:
+        return self.topo.local_bits
+
+    @property
+    def probe_spec(self) -> plan_mod.ProbeSpec:
+        """The shared probe discipline (same planner on every topology)."""
+        return plan_mod.ProbeSpec(
+            params=self.params,
+            variant=self.variant,
+            num_probes=self.num_probes,
+            ranked_probes=self.ranked_probes,
+        )
+
+
+# -----------------------------------------------------------------------------
+# collectives: the ONLY topology-dependent operations
+# -----------------------------------------------------------------------------
+
+
+class LocalCollectives:
+    """The 1-node mesh: every collective is the identity, so kernels trace
+    NO communication ops and run under plain `jax.jit` (no mesh needed).
+    `routed=False` selects the identity router in the step kernels — no
+    send buffers exist, so probes structurally cannot be dropped."""
+
+    n = 1
+    routed = False
+
+    def axis_index(self):
+        return jnp.int32(0)
+
+    def all_to_all(self, x):
+        return x
+
+    def all_gather(self, x):
+        return x
+
+    def all_gather_batch(self, x):
+        return x
+
+    def ppermute(self, x, perm):
+        return x
+
+
+LOCAL = LocalCollectives()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCollectives:
+    """Named-axis collectives for kernels running under shard_map.
+
+    `axis` is the bucket-shard axis (`model`); `batch_axes` are the axes
+    the query/vector batch shards over (insert/payload-sync gather them).
+    `routed=True`: even a 1-shard mesh runs the capacitated send-buffer
+    router (its overflow accounting is part of the mesh-step contract and
+    is exercised tier-1 on a single device).
+    """
+
+    n: int
+    axis: str = "model"
+    batch_axes: tuple = ("data", "model")
+    routed = True
+
+    def axis_index(self):
+        return jax.lax.axis_index(self.axis)
+
+    def all_to_all(self, x):
+        return jax.lax.all_to_all(x, self.axis, 0, 0, tiled=True)
+
+    def all_gather(self, x):
+        return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+    def all_gather_batch(self, x):
+        return jax.lax.all_gather(x, self.batch_axes, axis=0, tiled=True)
+
+    def ppermute(self, x, perm):
+        return jax.lax.ppermute(x, self.axis, perm)
+
+
+# -----------------------------------------------------------------------------
+# shard-local scoring helpers (identical on every topology)
+# -----------------------------------------------------------------------------
+
+
+def _local_include_near(cfg: RuntimeConfig) -> bool:
+    return cfg.variant not in ("lsh", "layered") and cfg.probe_local_near
+
+
+def _node_bit_valid(cfg: RuntimeConfig, mask: jax.Array) -> jax.Array:
+    """[r, node_bits] — is the flip of node bit j probed for each query?
+    (the planner's mask-layout helper, stacked over this config's bits)"""
+    if cfg.node_bits == 0:
+        return jnp.zeros(mask.shape + (0,), bool)
+    topo = cfg.topo
+    return jnp.stack(
+        [plan_mod.node_bit_probe_valid(topo, mask, b)
+         for b in range(cfg.node_bits)],
+        axis=-1,
+    )
+
+
+def _pool_topk(cfg, corpus, q, flat_ids, slot_vecs, m):
+    """Score a flattened candidate pool and keep the top m distinct ids.
+
+    Payload source is the one genuine data-model difference between the
+    reference engine and the sharded store: `corpus` (id-keyed latest
+    vectors — the single-host reference; also handles SparseCorpus) or
+    the bucket-slot payloads gathered by the caller (`slot_vecs`).
+    """
+    if corpus is not None:
+        if isinstance(corpus, DenseCorpus):
+            vecs = corpus.gather(flat_ids)
+            return scoring.score_topk(
+                q, flat_ids, vecs, m, use_kernels=cfg.use_kernels
+            )
+        scores = jax.vmap(corpus.scores_against_dense)(q, flat_ids)
+        scores = jnp.where(flat_ids >= 0, scores, jnp.float32(NEG_INF))
+        return dedupe_topk(flat_ids, scores, m)
+    return scoring.score_topk(
+        q, flat_ids, slot_vecs, m, use_kernels=cfg.use_kernels
+    )
+
+
+def _score_local(
+    cfg: RuntimeConfig,
+    store_ids: jax.Array,      # [T, NB_local, C]
+    store_payload: jax.Array | None,  # [T, NB_local, C, D] or None (corpus)
+    corpus,                    # id-keyed corpus, or None (slot payloads)
+    q: jax.Array,              # [r, d]
+    table: jax.Array,          # [r] int32
+    local_idx: jax.Array,      # [r] int32 bucket index within shard
+    mask: jax.Array,           # [r] int32/uint32 probe bitmask (plan)
+    exclude: jax.Array | None,  # [r] self ids to drop, or None
+    m: int,
+):
+    """Top-m among (exact + masked local near) buckets of a routed query."""
+    probes, pvalid = plan_mod.shard_local_probes(
+        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
+    )                                                      # [r, P] both
+    probes = probes % store_ids.shape[1]  # engine parity: fold OOB codes
+    cand_ids = store_ids[table[:, None], probes]           # [r, P, C]
+    cand_ids = jnp.where(pvalid[..., None], cand_ids, -1)
+    r = q.shape[0]
+    flat_ids = cand_ids.reshape(r, -1)
+    if exclude is not None:
+        flat_ids = jnp.where(flat_ids == exclude[:, None], -1, flat_ids)
+    slot_vecs = None
+    if corpus is None:
+        slot_vecs = store_payload[table[:, None], probes]  # [r, P, C, D]
+        slot_vecs = slot_vecs.reshape(r, flat_ids.shape[1], -1)
+    return _pool_topk(cfg, corpus, q, flat_ids, slot_vecs, m)
+
+
+def _score_cache(
+    cfg: RuntimeConfig,
+    cache_ids: jax.Array,      # [T, nbits, NB_local, C]
+    cache_payload: jax.Array,  # [T, nbits, NB_local, C, D]
+    q: jax.Array,              # [r, d]
+    table: jax.Array,          # [r]
+    local_idx: jax.Array,      # [r]
+    mask: jax.Array,           # [r]
+    m: int,
+):
+    """CNB: score the masked node-bit near buckets from the neighbor cache.
+
+    Flipping node bit j keeps the local index unchanged, so the near bucket
+    of bit j is cache[table, j, local_idx] — a pure local gather, gated per
+    query by node bit j of the probe mask.
+    """
+    nbits = cache_ids.shape[1]
+    jj = jnp.arange(nbits)[None, :]
+    cand_ids = cache_ids[table[:, None], jj, local_idx[:, None]]  # [r, nbits, C]
+    cand_ids = jnp.where(_node_bit_valid(cfg, mask)[..., None], cand_ids, -1)
+    cand_vec = cache_payload[table[:, None], jj, local_idx[:, None]]
+    r = q.shape[0]
+    cand_ids = cand_ids.reshape(r, -1)
+    cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
+    return scoring.score_topk(
+        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
+    )
+
+
+def _neighbor_parts(
+    cfg, cx, store_ids, store_payload, rq, rtable, rlocal, rmask, m
+):
+    """NB: forward routed queries to each XOR-neighbor; it scores ITS exact
+    bucket at the same local index (node-bit flip keeps local bits), then
+    returns the partial top-m.  2 ppermutes per node bit; the origin query's
+    probe mask gates each bit's contribution."""
+    nbit_valid = _node_bit_valid(cfg, rmask)           # [r, nbits]
+    ids_parts, sc_parts = [], []
+    for j in range(cfg.node_bits):
+        perm = cfg.topo.neighbor_perm(j)
+        nq = cx.ppermute(rq, perm)
+        nt = cx.ppermute(rtable, perm)
+        nl = cx.ppermute(rlocal, perm)
+        ids_j, sc_j = _score_local(
+            dataclasses.replace(cfg, variant="lsh"),   # exact bucket only
+            store_ids, store_payload, None, nq, nt, nl,
+            jnp.zeros_like(rmask), None, m,
+        )
+        ids_j = cx.ppermute(ids_j, perm)
+        sc_j = cx.ppermute(sc_j, perm)
+        keep = nbit_valid[:, j][:, None]
+        ids_parts.append(jnp.where(keep, ids_j, -1))
+        sc_parts.append(jnp.where(keep, sc_j, NEG_INF))
+    return ids_parts, sc_parts
+
+
+def _merge_topk(ids_list, scores_list, m):
+    ids = jnp.concatenate(ids_list, axis=-1)
+    scores = jnp.concatenate(scores_list, axis=-1)
+    return dedupe_topk(ids, scores, m)
+
+
+def _flat_plan(cfg: RuntimeConfig, cx, q: jax.Array, hyperplanes: jax.Array):
+    """Run the shared planner and flatten to (query, table) granularity.
+
+    The fused Pallas sketch only runs on the 1-node topology: under
+    shard_map the sketch stays on the reference path (the kernel shim is
+    not traced through collectives), matching the pre-refactor behavior
+    of both runtimes.  Codes are bit-identical either way (CI-checked).
+    """
+    L = cfg.params.L
+    b_loc = q.shape[0]
+    plan = plan_mod.make_plan(
+        cfg.probe_spec, q, hyperplanes, cfg.topo,
+        use_kernels=cfg.use_kernels and not cx.routed,
+    )
+    flat = dict(
+        owner=plan.owner.reshape(-1),                   # [b_loc*L]
+        local=plan.local_idx.reshape(-1),
+        mask=plan.probe_mask.astype(jnp.int32).reshape(-1),
+        table=jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_loc,)),
+        qidx=jnp.repeat(jnp.arange(b_loc, dtype=jnp.int32), L),
+    )
+    return plan, flat
+
+
+def _route_cap(cfg: RuntimeConfig, b_loc: int) -> int:
+    cap = int(np.ceil(b_loc * cfg.params.L / cfg.n_nodes * cfg.cap_factor))
+    return max(cap, 1)
+
+
+# -----------------------------------------------------------------------------
+# the search step kernel
+# -----------------------------------------------------------------------------
+
+
+def search_kernel(
+    cfg: RuntimeConfig,
+    cx,
+    m: int,
+    hyperplanes: jax.Array,
+    store_ids: jax.Array,
+    store_payload: jax.Array | None,
+    cache_ids: jax.Array | None,
+    cache_payload: jax.Array | None,
+    q: jax.Array,                     # [b_loc, d] this node's query slice
+    *,
+    corpus=None,                      # id-keyed corpus (1-node only)
+    exclude: jax.Array | None = None,  # [b_loc] self ids (1-node only)
+):
+    """Per-node body of the search step: runs under shard_map on a mesh, or
+    under plain jit on the 1-node topology (cx = LOCAL).
+
+    Returns (ids [b_loc, m], scores [b_loc, m], dropped int32) — `dropped`
+    counts this node's (query, table) probes that overflowed the
+    capacitated all_to_all send buffers (structurally 0 on one node:
+    the identity router has no buffers; also 0 under allgather routing).
+    """
+    if (corpus is not None or exclude is not None) and cx.routed:
+        raise ValueError("corpus scoring / wire exclusion are 1-node only")
+    L = cfg.params.L
+    n = cx.n
+    b_loc, d = q.shape
+    _, flat = _flat_plan(cfg, cx, q, hyperplanes)
+
+    if not cx.routed:
+        # Identity router: every probe is local by construction. No send
+        # buffers exist, so nothing can be dropped and nothing is traced
+        # beyond the gather/score path the reference engine always ran.
+        ids_r, sc_r = _score_local(
+            cfg, store_ids, store_payload, corpus,
+            q[flat["qidx"]], flat["table"], flat["local"], flat["mask"],
+            None if exclude is None else exclude[flat["qidx"]], m,
+        )                                                  # [b_loc*L, m]
+        ids, sc = dedupe_topk(
+            ids_r.reshape(b_loc, L * m), sc_r.reshape(b_loc, L * m), m
+        )
+        return ids, sc, jnp.int32(0)
+
+    if cfg.routing == "allgather":
+        ids, sc = _search_allgather(
+            cfg, cx, store_ids, store_payload, cache_ids, cache_payload,
+            q, flat, m,
+        )
+        return ids, sc, jnp.int32(0)
+
+    # ---- all_to_all routing (DHT-lookup analogue) ---------------------------
+    cap = _route_cap(cfg, b_loc)
+    route = routing_mod.plan_routes(flat["owner"], n, cap)
+    meta = jnp.stack(
+        [flat["qidx"], flat["table"], flat["local"], flat["mask"]], axis=-1
+    )
+    send_q = routing_mod.build_send_buffer(route, n, cap, q[flat["qidx"]], 0.0)
+    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
+
+    recv_q = cx.all_to_all(send_q)
+    recv_meta = cx.all_to_all(send_meta)
+    rq = recv_q.reshape(n * cap, d)
+    rtable = recv_meta[..., 1].reshape(-1)
+    rlocal = recv_meta[..., 2].reshape(-1)
+    rmask = recv_meta[..., 3].reshape(-1)
+    rvalid = rtable >= 0
+    rtable_c = jnp.maximum(rtable, 0)
+    rlocal_c = jnp.maximum(rlocal, 0)
+    rmask_c = jnp.maximum(rmask, 0)
+
+    ids_o, sc_o = _score_local(
+        cfg, store_ids, store_payload, None, rq, rtable_c, rlocal_c,
+        rmask_c, None, m,
+    )
+    ids_parts, sc_parts = [ids_o], [sc_o]
+
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        ids_c, sc_c = _score_cache(
+            cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, rmask_c, m
+        )
+        ids_parts.append(ids_c)
+        sc_parts.append(sc_c)
+
+    if cfg.variant == "nb":
+        ids_n, sc_n = _neighbor_parts(
+            cfg, cx, store_ids, store_payload, rq, rtable_c, rlocal_c,
+            rmask_c, m,
+        )
+        ids_parts += ids_n
+        sc_parts += sc_n
+
+    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)   # [n*cap, m]
+    ids_r = jnp.where(rvalid[:, None], ids_r, -1)
+    sc_r = jnp.where(rvalid[:, None], sc_r, NEG_INF)
+
+    # ---- return results to origin -------------------------------------------
+    back_i = cx.all_to_all(ids_r.reshape(n, cap, m))
+    back_s = cx.all_to_all(sc_r.reshape(n, cap, m))
+    gather_i = routing_mod.return_to_origin(route, back_i, -1)      # [b_loc*L, m]
+    gather_s = routing_mod.return_to_origin(route, back_s, NEG_INF)
+    gather_i = gather_i.reshape(b_loc, L * m)
+    gather_s = gather_s.reshape(b_loc, L * m)
+    ids, sc = dedupe_topk(gather_i, gather_s, m)
+    return ids, sc, route.dropped
+
+
+def _gather_flat_meta(cx, flat: dict, b_loc: int, L: int, names):
+    """all_gather the named per-(query, table) flat fields along the shard
+    axis.
+
+    Shared prologue of the two allgather branches (search + contains), so
+    the [b_loc, L] re-flatten layout cannot drift between them.  Returns
+    ({name: [b_all*L]}, table index [b_all*L], b_all).
+    """
+    gathered = {
+        name: cx.all_gather(flat[name].reshape(b_loc, L)).reshape(-1)
+        for name in names
+    }
+    b_all = next(iter(gathered.values())).shape[0] // L
+    rtable = jnp.tile(jnp.arange(L, dtype=jnp.int32), (b_all,))
+    return gathered, rtable, b_all
+
+
+def _search_allgather(
+    cfg, cx, store_ids, store_payload, cache_ids, cache_payload, q, flat, m
+):
+    """Dense fallback: replicate queries along the shard axis, each shard
+    scores the (query, table) pairs it owns, results return via all_to_all."""
+    L, n = cfg.params.L, cx.n
+    b_loc = q.shape[0]
+    me = cx.axis_index()
+
+    g, rtable, b_all = _gather_flat_meta(
+        cx, flat, b_loc, L, ("owner", "local", "mask"))
+    q_all = cx.all_gather(q)                                # [b_all, d]
+    rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d]
+    rlocal = g["local"]
+    rmask = g["mask"]
+    mine = g["owner"] == me
+
+    ids_o, sc_o = _score_local(
+        cfg, store_ids, store_payload, None, rq, rtable, rlocal, rmask,
+        None, m,
+    )
+    ids_parts, sc_parts = [ids_o], [sc_o]
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        ids_c, sc_c = _score_cache(
+            cfg, cache_ids, cache_payload, rq, rtable, rlocal, rmask, m
+        )
+        ids_parts.append(ids_c)
+        sc_parts.append(sc_c)
+    if cfg.variant == "nb":
+        ids_n, sc_n = _neighbor_parts(
+            cfg, cx, store_ids, store_payload, rq, rtable, rlocal, rmask, m
+        )
+        ids_parts += ids_n
+        sc_parts += sc_n
+
+    ids_r, sc_r = _merge_topk(ids_parts, sc_parts, m)       # [b_all*L, m]
+    ids_r = jnp.where(mine[:, None], ids_r, -1)
+    sc_r = jnp.where(mine[:, None], sc_r, NEG_INF)
+
+    # each origin needs rows of its own queries from ALL shards: all_to_all
+    # over the origin-major reshape.
+    ids_r = ids_r.reshape(n, b_loc * L * m)
+    sc_r = sc_r.reshape(n, b_loc * L * m)
+    got_i = cx.all_to_all(ids_r)                            # [n, b*L*m]
+    got_s = cx.all_to_all(sc_r)
+    got_i = got_i.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
+    got_s = got_s.reshape(n, b_loc, L * m).transpose(1, 0, 2).reshape(b_loc, -1)
+    return dedupe_topk(got_i, got_s, m)
+
+
+# -----------------------------------------------------------------------------
+# the contains step kernel (success-probability metric, paper Sec. 6.3)
+# -----------------------------------------------------------------------------
+
+
+def _contains_local(cfg, store_ids, table, local_idx, mask, target):
+    """bool [r]: does `target` sit in the (exact + masked local near)
+    buckets of each routed query?  Metadata-only — no payload gathers."""
+    probes, pvalid = plan_mod.shard_local_probes(
+        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
+    )
+    probes = probes % store_ids.shape[1]
+    cand = store_ids[table[:, None], probes]                # [r, P, C]
+    hit = (cand == target[:, None, None]) & pvalid[..., None]
+    return jnp.any(hit, axis=(1, 2))
+
+
+def _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal, rmask, rtgt):
+    """Membership across owner buckets + node-bit coverage (cache or
+    neighbor forwards), mirroring the search step's candidate pool."""
+    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt)
+    if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
+        nbits = cache_ids.shape[1]
+        jj = jnp.arange(nbits)[None, :]
+        cand = cache_ids[rtable[:, None], jj, rlocal[:, None]]  # [r, nbits, C]
+        valid = _node_bit_valid(cfg, rmask)[..., None]
+        hit |= jnp.any((cand == rtgt[:, None, None]) & valid, axis=(1, 2))
+    if cfg.variant == "nb":
+        nbit_valid = _node_bit_valid(cfg, rmask)
+        for j in range(cfg.node_bits):
+            perm = cfg.topo.neighbor_perm(j)
+            nt = cx.ppermute(rtable, perm)
+            nl = cx.ppermute(rlocal, perm)
+            ntgt = cx.ppermute(rtgt, perm)
+            hit_j = _contains_local(
+                dataclasses.replace(cfg, variant="lsh"),
+                store_ids, nt, nl, jnp.zeros_like(nl), ntgt,
+            )
+            hit_j = cx.ppermute(hit_j, perm)
+            hit |= hit_j & nbit_valid[:, j]
+    return hit
+
+
+def contains_kernel(
+    cfg: RuntimeConfig,
+    cx,
+    hyperplanes: jax.Array,
+    store_ids: jax.Array,
+    cache_ids: jax.Array | None,
+    q: jax.Array,        # [b_loc, d]
+    targets: jax.Array,  # [b_loc] int32
+):
+    """Per-node body of `contains`: was target y's id in ANY searched bucket
+    of query x?  Routes only metadata (no query payload): membership needs
+    bucket ids, not vectors.  Returns (hits bool [b_loc], dropped int32)."""
+    L, n = cfg.params.L, cx.n
+    b_loc = q.shape[0]
+    _, flat = _flat_plan(cfg, cx, q, hyperplanes)
+    flat_tgt = jnp.repeat(targets.astype(jnp.int32), L)
+
+    if not cx.routed:
+        hit = _contains_hits(
+            cfg, cx, store_ids, None, flat["table"], flat["local"],
+            flat["mask"], flat_tgt,
+        )
+        return hit.reshape(b_loc, L).any(axis=-1), jnp.int32(0)
+
+    if cfg.routing == "allgather":
+        me = cx.axis_index()
+        g, rtable, b_all = _gather_flat_meta(
+            cx, dict(flat, target=flat_tgt), b_loc, L,
+            ("owner", "local", "mask", "target"))
+        hit = _contains_hits(
+            cfg, cx, store_ids, cache_ids, rtable, g["local"], g["mask"],
+            g["target"],
+        )
+        hit = hit & (g["owner"] == me)
+        # OR across shards == psum of disjoint indicators, then own slice.
+        hit_all = jax.lax.psum(
+            hit.reshape(b_all, L).any(axis=-1).astype(jnp.int32), cx.axis
+        )
+        hits = jax.lax.dynamic_slice_in_dim(hit_all, me * b_loc, b_loc) > 0
+        return hits, jnp.int32(0)
+
+    cap = _route_cap(cfg, b_loc)
+    route = routing_mod.plan_routes(flat["owner"], n, cap)
+    meta = jnp.stack(
+        [flat["qidx"], flat["table"], flat["local"], flat["mask"], flat_tgt],
+        axis=-1,
+    )
+    send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
+    recv_meta = cx.all_to_all(send_meta)
+    rtable = jnp.maximum(recv_meta[..., 1].reshape(-1), 0)
+    rlocal = jnp.maximum(recv_meta[..., 2].reshape(-1), 0)
+    rmask = jnp.maximum(recv_meta[..., 3].reshape(-1), 0)
+    rtgt = recv_meta[..., 4].reshape(-1)
+
+    hit = _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal,
+                         rmask, rtgt)
+    # empty-slot rows carry rtgt = -1, which DOES match empty bucket ids
+    # (-1); this validity mask is what discards those spurious hits.
+    hit = hit & (recv_meta[..., 1].reshape(-1) >= 0)
+
+    back = cx.all_to_all(hit.reshape(n, cap).astype(jnp.int32))
+    got = routing_mod.return_to_origin(route, back, 0)       # [b_loc*L]
+    hits = got.reshape(b_loc, L).any(axis=-1)
+    return hits, route.dropped
+
+
+# -----------------------------------------------------------------------------
+# the insert / payload-sync step kernels (soft-state maintenance)
+# -----------------------------------------------------------------------------
+
+
+def insert_kernel(
+    cfg: RuntimeConfig,
+    cx,
+    hyperplanes: jax.Array,
+    st: BucketStore,
+    vec: jax.Array,  # [nv_loc, d] this node's slice of the announce batch
+    vid: jax.Array,  # [nv_loc] int32 (< 0 entries are padding, skipped)
+    now: jax.Array,  # int32 scalar
+) -> BucketStore:
+    """Per-node body of insert/refresh: each node keeps the vectors whose
+    exact buckets it owns (paper Sec. 2.2 — update rate << query rate, so
+    the simple gather path is the right trade)."""
+    me = cx.axis_index()
+    # gather over ALL batch axes: every store replica (data axis) must
+    # see every vector, not just its own data-row's slice.
+    vec_all = cx.all_gather_batch(vec)
+    vid_all = cx.all_gather_batch(vid)
+    plan = plan_mod.make_plan(
+        # insert wants only the owner/local split of the exact bucket
+        dataclasses.replace(cfg.probe_spec, variant="lsh"),
+        vec_all, hyperplanes, cfg.topo,
+    )
+    owner, local = plan.owner, plan.local_idx.astype(jnp.uint32)
+    # mark foreign (table, vector) entries invalid: blank foreign rows
+    # with id -1; insert_masked routes them out of bounds (mode='drop')
+    # so they can't clobber live slots.
+    mine_any = owner == me[None, None]                       # [nv, L]
+    new = st
+    payload = vec_all if st.payload is not None else None
+    for l in range(cfg.params.L):
+        sel = mine_any[:, l]
+        ids_l = jnp.where(sel, vid_all, -1)
+        codes_l = jnp.where(sel, local[:, l], 0).astype(jnp.uint32)
+        new = store_mod.insert_masked(new, l, ids_l, codes_l, now, payload)
+    # every node bumps its replica by the same L, so the replicated
+    # generation stays consistent across the mesh.
+    return new
+
+
+def payload_sync_kernel(
+    cx, store_ids: jax.Array, store_payload: jax.Array, vec: jax.Array
+) -> jax.Array:
+    """Point every live bucket entry's payload at the latest announced
+    vector of its id.
+
+    The corpus-scored reference always scores against the LATEST announced
+    vector, while the embedded-payload store keeps whatever was announced
+    into each bucket; after a re-announce moves a user to new buckets, the
+    copies left in its old buckets (alive until the TTL GC collects them)
+    would score with outdated vectors — this restores the reference
+    semantics.  Timestamps are untouched, so GC behaviour is unchanged.
+
+    Contract: `vec` row i must be the vector of user id i (dense 0-based
+    ids), sharded over the batch axes — the layout the churn driver uses.
+    """
+    vec_all = cx.all_gather_batch(vec)
+    nv = vec_all.shape[0]
+    live = (store_ids >= 0) & (store_ids < nv)
+    gathered = vec_all[jnp.clip(store_ids, 0, nv - 1)]
+    return jnp.where(live[..., None], gathered, store_payload)
+
+
+# -----------------------------------------------------------------------------
+# IndexRuntime: step constructors + host-level API over one topology
+# -----------------------------------------------------------------------------
+
+
+class IndexRuntime:
+    """The five index operations bound to one topology.
+
+    * ``IndexRuntime(cfg)`` with ``cfg.n_nodes == 1`` and no mesh: steps
+      are plain ``jax.jit`` functions — the single-host engine's
+      execution context (LshEngine is a façade over this).
+    * ``IndexRuntime(cfg, mesh)``: steps are ``shard_map`` collectives
+      built by the `repro.core.distributed` adapter; ``cfg.n_nodes`` must
+      equal the mesh's `model`-axis size.
+
+    The host-level methods (`search`, `contains`, `insert`, `expire`,
+    `payload_sync`, `refresh_cache`, `shard_store`) hide the remaining
+    signature differences (device placement, cache plumbing), so scenario
+    drivers are topology-blind.  Steps are built lazily and cached.
+    """
+
+    def __init__(self, cfg: RuntimeConfig, mesh=None,
+                 batch_axes=("data", "model")):
+        if mesh is None and cfg.n_nodes != 1:
+            raise ValueError(
+                f"n_nodes={cfg.n_nodes} needs a mesh (the distributed "
+                "adapter); only the 1-node topology runs mesh-free"
+            )
+        if mesh is not None and mesh.shape["model"] != cfg.n_nodes:
+            raise ValueError(
+                f"cfg.n_nodes={cfg.n_nodes} != mesh model axis "
+                f"{mesh.shape['model']}"
+            )
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self._steps: dict[str, object] = {}
+
+    # -- topology facts -------------------------------------------------------
+
+    @property
+    def topology(self) -> CanTopology:
+        return self.cfg.topo
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_devices(self) -> int:
+        """Devices the query/vector batch shards over (pad batches to a
+        multiple of this)."""
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+    def _dist(self):
+        from repro.core import distributed as dist
+
+        return dist
+
+    def _step(self, name: str, build):
+        if name not in self._steps:
+            self._steps[name] = build()
+        return self._steps[name]
+
+    # -- raw step functions (unjitted; serve backends wrap + count traces) ----
+
+    def search_step_fn(self, with_corpus: bool = False):
+        """The search step as a plain callable.
+
+        1-node: ``fn(hyperplanes, store_ids, payload_or_corpus, q, exclude,
+        m)`` (m static under jit).  Mesh: the shard_map'd callable of the
+        distributed adapter, ``fn(hyperplanes, ids, payload, [cache...],
+        q)`` with ``m = cfg.m`` baked in.
+        """
+        if self.mesh is None:
+            cfg = self.cfg
+
+            if with_corpus:
+                def fn(hyperplanes, store_ids, corpus, q, exclude, m):
+                    return search_kernel(
+                        cfg, LOCAL, m, hyperplanes, store_ids, None,
+                        None, None, q, corpus=corpus, exclude=exclude,
+                    )
+            else:
+                def fn(hyperplanes, store_ids, store_payload, q, exclude, m):
+                    return search_kernel(
+                        cfg, LOCAL, m, hyperplanes, store_ids, store_payload,
+                        None, None, q, exclude=exclude,
+                    )
+            return fn
+        if with_corpus:
+            raise ValueError("corpus scoring is 1-node only")
+        return self._dist().search_step_fn(self.cfg, self.batch_axes)(
+            self.mesh
+        )
+
+    # -- the five step constructors ------------------------------------------
+
+    def make_search_step(self):
+        if self.mesh is None:
+            return self._step(
+                "search",
+                lambda: jax.jit(self.search_step_fn(), static_argnums=(5,)),
+            )
+        return self._step(
+            "search",
+            lambda: self._dist().make_search_step(
+                self.cfg, self.mesh, self.batch_axes
+            ),
+        )
+
+    def make_contains_step(self):
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def fn(hyperplanes, store_ids, q, targets):
+                return contains_kernel(
+                    cfg, LOCAL, hyperplanes, store_ids, None, q, targets
+                )
+
+            return self._step("contains", lambda: jax.jit(fn))
+        return self._step(
+            "contains",
+            lambda: self._dist().make_contains_step(
+                self.cfg, self.mesh, self.batch_axes
+            ),
+        )
+
+    def make_insert_step(self):
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def fn(hyperplanes, st: BucketStore, vec, vid, now):
+                return insert_kernel(cfg, LOCAL, hyperplanes, st, vec, vid,
+                                     now)
+
+            return self._step("insert", lambda: jax.jit(fn))
+        return self._step(
+            "insert",
+            lambda: self._dist().make_insert_step(
+                self.cfg, self.mesh, self.batch_axes
+            ),
+        )
+
+    def make_expire_step(self):
+        # GC is elementwise over bucket state: the same jit'd op on every
+        # topology (shard-local on a mesh store by construction).
+        return store_mod.expire
+
+    def make_payload_sync(self):
+        if self.mesh is None:
+            def fn(st: BucketStore, vec):
+                return dataclasses.replace(
+                    st,
+                    payload=payload_sync_kernel(LOCAL, st.ids, st.payload,
+                                                vec),
+                    generation=st.generation + 1,
+                )
+
+            return self._step(
+                "payload_sync", lambda: jax.jit(fn, donate_argnums=(0,))
+            )
+        return self._step(
+            "payload_sync",
+            lambda: self._dist().make_payload_sync(
+                self.cfg, self.mesh, self.batch_axes
+            ),
+        )
+
+    def make_refresh_cache(self):
+        """CNB neighbor-cache refresh, or None on topologies without
+        node bits (1-node: every near bucket is already local)."""
+        if self.cfg.node_bits == 0:
+            return None
+        return self._step(
+            "refresh_cache",
+            lambda: self._dist().make_refresh_cache(self.cfg, self.mesh),
+        )
+
+    # -- host-level convenience API (topology-blind drivers) ------------------
+
+    def shard_store(self, store: BucketStore) -> BucketStore:
+        if self.mesh is None:
+            return store
+        return self._dist().shard_store(self.mesh, store)
+
+    def _put_batch(self, x, is_vec: bool):
+        if self.mesh is None:
+            return jnp.asarray(x)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        spec = P(self.batch_axes, None) if is_vec else P(self.batch_axes)
+        return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
+
+    def insert(self, hyperplanes, store: BucketStore, vec, vid, now):
+        step = self.make_insert_step()
+        return step(
+            hyperplanes, store, self._put_batch(vec, True),
+            self._put_batch(vid, False), jnp.int32(now),
+        )
+
+    def expire(self, store: BucketStore, now, ttl: int) -> BucketStore:
+        return self.make_expire_step()(store, jnp.int32(now), ttl=ttl)
+
+    def payload_sync(self, store: BucketStore, vec) -> BucketStore:
+        return self.make_payload_sync()(store, self._put_batch(vec, True))
+
+    def refresh_cache(self, store: BucketStore):
+        refresh = self.make_refresh_cache()
+        if refresh is None:
+            return None
+        return refresh(store.ids, store.payload)
+
+    def search(self, hyperplanes, store: BucketStore, q, *, cache=None,
+               corpus=None, exclude=None, m: int | None = None):
+        """(ids [nq, m], scores [nq, m], dropped int32) over this topology.
+
+        `m` defaults to cfg.m (mesh steps bake it — passing a different m
+        there is an error).  `corpus`/`exclude` are the single-host
+        reference data model and only exist on the 1-node topology.
+        """
+        qd = self._put_batch(q, True)
+        if self.mesh is None:
+            m = self.cfg.m if m is None else m
+            ex = None if exclude is None else jnp.asarray(exclude, jnp.int32)
+            if corpus is not None:
+                step = self._step(
+                    "search_corpus",
+                    lambda: jax.jit(self.search_step_fn(with_corpus=True),
+                                    static_argnums=(5,)),
+                )
+                return step(hyperplanes, store.ids, corpus, qd, ex, m)
+            step = self.make_search_step()
+            return step(hyperplanes, store.ids, store.payload, qd, ex, m)
+        if m is not None and m != self.cfg.m:
+            raise ValueError(f"mesh steps bake m={self.cfg.m}; got m={m}")
+        if corpus is not None or exclude is not None:
+            raise ValueError("corpus scoring / exclusion are 1-node only")
+        step = self.make_search_step()
+        args = (hyperplanes, store.ids, store.payload)
+        if cache is not None:
+            args += tuple(cache)
+        return step(*args, qd)
+
+    def contains(self, hyperplanes, store: BucketStore, q, targets, *,
+                 cache=None):
+        qd = self._put_batch(q, True)
+        td = self._put_batch(np.asarray(targets, np.int32), False)
+        step = self.make_contains_step()
+        if self.mesh is None:
+            return step(hyperplanes, store.ids, qd, td)
+        args = (hyperplanes, store.ids)
+        if cache is not None:
+            args += (cache[0],)
+        return step(*args, qd, td)

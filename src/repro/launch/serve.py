@@ -1,4 +1,8 @@
-"""End-to-end serving driver: batched prefill + decode over the mesh.
+"""End-to-end LM serving driver: batched prefill + decode over the mesh.
+
+The prefill/decode step builders live here with their only consumer
+(they were `repro.serve.serve_step` before the runtime consolidation
+made `repro.serve` the retrieval-only serving package).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
         --batch 4 --prompt-len 64 --gen 32
@@ -8,7 +12,9 @@ from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -16,7 +22,52 @@ from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models import sharding as sh
-from repro.serve import serve_step
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    @partial(jax.jit, static_argnames=())
+    def prefill(params, batch):
+        logits, states, _ = M.prefill(params, cfg, batch, max_len)
+        return logits, states
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, greedy: bool = True):
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode(params, states, token, pos, rng):
+        logits, states = M.decode_step(params, cfg, token, states, pos)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits).astype(jnp.int32)
+        return nxt, logits, states
+
+    return decode
+
+
+def generate(params, cfg: ModelConfig, batch, steps: int, max_len: int,
+             greedy: bool = True, seed: int = 0):
+    """Host loop: prefill then `steps` decode steps. Returns [B, steps]."""
+    prefill = make_prefill_step(cfg, max_len)
+    decode = make_decode_step(cfg, greedy)
+    logits, states = prefill(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if "tokens" in batch:
+        pos0 = batch["tokens"].shape[1]
+        if "prefix_embeds" in batch:
+            pos0 += batch["prefix_embeds"].shape[1]
+    else:
+        pos0 = batch["prefix_embeds"].shape[1]
+    out = [tok]
+    rng = jax.random.PRNGKey(seed)
+    for t in range(steps - 1):
+        rng, sub = jax.random.split(rng)
+        tok, _, states = decode(params, states, tok,
+                                jnp.int32(pos0 + t), sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
 
 
 def main(argv=None):
@@ -54,7 +105,7 @@ def main(argv=None):
         )
         max_len = args.prompt_len + args.gen + 8
         t0 = time.time()
-        out = serve_step.generate(
+        out = generate(
             params, cfg, batch, steps=args.gen, max_len=max_len,
             seed=args.seed,
         )

@@ -28,7 +28,7 @@ from repro.core import (
 )
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host, expire, insert_batch
-from repro.serve import EngineBackend, FrontendConfig, RetrievalFrontend
+from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
 
 def _unit(x):
@@ -47,7 +47,7 @@ def build_frontend(args, rng):
         EngineConfig(variant=args.variant),
     )
     frontend = RetrievalFrontend(
-        EngineBackend(engine),
+        RuntimeBackend(engine),
         FrontendConfig(
             m=args.m, max_batch=args.max_batch,
             queue_capacity=args.queue_capacity, cache=not args.no_cache,

@@ -1,29 +1,25 @@
-"""Serving layer.
+"""Online retrieval serving: the NearBucket-LSH query service (DESIGN.md
+Sec. 7), driven by `repro.launch.serve_retrieval`.
 
-Two services share this package:
+  - `frontend`  — request ring, dynamic pow-2 batching, admission
+                  control, and the ONE dispatch backend
+                  (`RuntimeBackend`) over an `IndexRuntime` of any
+                  topology (DESIGN.md Sec. 8);
+  - `qcache`    — sketch-keyed result cache with generation-based
+                  invalidation wired to store churn;
+  - `lifecycle` — read/write epochs: churn maintenance interleaved
+                  with serving;
+  - `telemetry` — p50/p99 latency, qps, hit rate, Table-1 cost and
+                  dropped-probe aggregation.
 
-  * LM serving — `repro.serve.serve_step` (batched prefill + decode),
-    driven by `repro.launch.serve`;
-  * online retrieval — the NearBucket-LSH query service (DESIGN.md
-    Sec. 7), driven by `repro.launch.serve_retrieval`:
-      - `frontend`  — request ring, dynamic pow-2 batching, admission
-                      control, pluggable engine/mesh dispatch backends;
-      - `qcache`    — sketch-keyed result cache with generation-based
-                      invalidation wired to store churn;
-      - `lifecycle` — read/write epochs: churn maintenance interleaved
-                      with serving;
-      - `telemetry` — p50/p99 latency, qps, hit rate, Table-1 cost and
-                      dropped-probe aggregation.
-
-`serve_step` is intentionally NOT imported here: it pulls the model
-stack, which the retrieval service does not need.
+(LM prefill/decode serving lives with its driver in
+`repro.launch.serve`; it shares nothing with the retrieval service.)
 """
 
 from repro.serve.frontend import (  # noqa: F401
-    DistBackend,
-    EngineBackend,
     FrontendConfig,
     RetrievalFrontend,
+    RuntimeBackend,
     dispatch_pad,
     pow2_pad,
 )

@@ -13,17 +13,17 @@ adding a serving-only query path:
     per arrival count), consults the sketch-keyed result cache
     (`repro.serve.qcache`), dispatches only the misses, and scatters
     results back per request;
-  * dispatch goes through a pluggable backend: `EngineBackend` wraps the
-    single-host `LshEngine`'s own chunk implementation (result ids are
-    bit-identical to a direct `engine.search` — CI-checked), and
-    `DistBackend` wraps a `make_search_step` mesh step.  Both take the
-    store as a jit ARGUMENT, so live store updates (churn) never retrace
-    the query path.
+  * dispatch goes through ONE backend — `RuntimeBackend` — wrapping an
+    `IndexRuntime` search step on ANY topology (DESIGN.md Sec. 8): over
+    the 1-node runtime of an `LshEngine` it returns ids bit-identical to
+    a direct `engine.search` (CI-checked); over a mesh runtime it runs
+    the shard_map step with host-side self-exclusion and one result of
+    wire headroom.  The store (and corpus/cache) are jit ARGUMENTS, so
+    live store updates (churn) never retrace the query path.
 """
 
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time
 
@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import costmodel
 from repro.core import plan as plan_mod
 from repro.core.engine import LshEngine
+from repro.core.runtime import IndexRuntime
 from repro.serve.qcache import QueryCache
 from repro.serve.telemetry import ServeStats
 
@@ -56,73 +57,152 @@ def dispatch_pad(n: int, multiple: int = 1) -> int:
 
 
 # -----------------------------------------------------------------------------
-# dispatch backends
+# the dispatch backend (one class, any topology)
 # -----------------------------------------------------------------------------
 
 
-class EngineBackend:
-    """Dispatch adapter over the single-host `LshEngine` query path.
+class RuntimeBackend:
+    """THE dispatch adapter: an `IndexRuntime` search step behind the
+    frontend, on any topology.
 
-    Reuses `engine._search_chunk_impl` verbatim — the scoring/top-m/dedup
-    semantics cannot drift from the reference — but re-jits it with the
-    store and corpus as ARGUMENTS instead of closed-over constants, so a
-    churn update (`update`) swaps state without recompiling.  `traces`
-    counts actual retraces (trace-time side effect), which is what the
-    pow-2 shape-budget test asserts on.
+    Built from an `LshEngine` (its 1-node runtime + store + corpus: result
+    ids are bit-identical to a direct `engine.search`, CI-checked) or from
+    a mesh `IndexRuntime` (+ hyperplanes/store/cache).  Either way the
+    runtime kernel is re-jitted here with the store, corpus, and cache as
+    ARGUMENTS instead of closed-over constants, so a churn update
+    (`update`) swaps state without recompiling; `traces` counts actual
+    retraces (trace-time side effect), which is what the pow-2
+    shape-budget test asserts on.
+
+    The one topology-dependent branch is exclusion: the 1-node kernel
+    excludes in-kernel (the reference semantics), while the mesh wire
+    path has no exclusion support (the id is not secret, paper Sec. 6) —
+    the step is built with one result of headroom (`cfg.m = serve_m + 1`)
+    and the self id is filtered host-side, the distributed churn driver's
+    convention.  `dropped_probes` from the capacitated router flows
+    through to the telemetry (structurally 0 on one node).
     """
 
-    max_m = None  # no backend-imposed ceiling
-
-    def __init__(self, engine: LshEngine):
-        self._engine = engine
-        self._store = engine.store
-        self._corpus = engine.corpus
-        self._generation = int(np.asarray(engine.store.generation))
+    def __init__(self, source, hyperplanes=None, store=None, corpus=None,
+                 cache=None):
+        if isinstance(source, LshEngine):
+            runtime = source.runtime
+            hyperplanes = source.hyperplanes if hyperplanes is None else hyperplanes
+            store = source.store if store is None else store
+            corpus = source.corpus if corpus is None else corpus
+        elif isinstance(source, IndexRuntime):
+            runtime = source
+            if hyperplanes is None or store is None:
+                raise ValueError(
+                    "RuntimeBackend(IndexRuntime) needs hyperplanes= and "
+                    "store="
+                )
+        else:
+            raise TypeError(f"expected LshEngine or IndexRuntime, got "
+                            f"{type(source).__name__}")
+        if runtime.is_distributed and corpus is not None:
+            raise ValueError("corpus scoring is 1-node only (mesh shards "
+                             "embed payloads in their bucket slots)")
+        if not runtime.is_distributed and cache is not None:
+            raise ValueError("neighbor caches exist only on mesh runtimes "
+                             "(the 1-node topology has no node bits)")
+        self._rt = runtime
+        self._hp = hyperplanes
+        self._store = store
+        self._corpus = corpus
+        self._cache = cache
+        self._generation = int(np.asarray(store.generation))
         self._cost_gen: int | None = None
         self._cost: costmodel.QueryCost | None = None
         self.traces = 0
         self.sketch_traces = 0
 
-        def _impl(store, corpus, q, ex, m):
-            self.traces += 1  # runs at trace time only
-            eng = copy.copy(engine)
-            eng.store = store
-            eng.corpus = corpus
-            return eng._search_chunk_impl(q, ex, m)
+        if runtime.is_distributed:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            self._qspec = NamedSharding(
+                runtime.mesh, P(runtime.batch_axes, None)
+            )
+            step = runtime.search_step_fn()
+
+            def _impl(hp, *args):
+                self.traces += 1  # runs at trace time only
+                return step(hp, *args)
+
+            self._dispatch_jit = jax.jit(_impl)
+        else:
+            step = runtime.search_step_fn(with_corpus=corpus is not None)
+
+            def _impl(hp, store_ids, payload, q, ex, m):
+                self.traces += 1  # runs at trace time only
+                return step(hp, store_ids, payload, q, ex, m)
+
+            self._dispatch_jit = jax.jit(_impl, static_argnums=(5,))
 
         def _sketch(q):
             self.sketch_traces += 1
             return plan_mod.sketch(
-                q, engine.hyperplanes, use_kernels=engine.config.use_kernels
+                q, self._hp,
+                use_kernels=runtime.cfg.use_kernels
+                and not runtime.is_distributed,
             )
 
-        self._dispatch_jit = jax.jit(_impl, static_argnums=(4,))
         self._sketch_jit = jax.jit(_sketch)
 
     @property
+    def runtime(self) -> IndexRuntime:
+        return self._rt
+
+    @property
     def dim(self) -> int:
-        return self._engine.hyperplanes.shape[-1]
+        return self._hp.shape[-1]
 
     @property
     def min_batch(self) -> int:
-        return 1
+        # the global batch shards over every device, so dispatch sizes
+        # must be multiples of the device count (dispatch_pad enforces it;
+        # 1 on the 1-node runtime)
+        return self._rt.n_devices
+
+    @property
+    def max_m(self) -> int | None:
+        if not self._rt.is_distributed:
+            return None  # m is a static call argument — no baked ceiling
+        return self._rt.cfg.m - 1  # headroom for host-side self-exclusion
 
     @property
     def generation(self) -> int:
         return self._generation
 
-    def update(self, store, corpus=None) -> None:
-        """Install a new store (and optionally corpus) — a write epoch.
-        The host-side generation snapshot is what cache lookups compare
-        against, so it syncs here, once per update, off the query path.
-        It bumps on EVERY update, even when the store object is unchanged:
-        a corpus-only swap also changes scores, so cached results must
-        die with it."""
-        self._store = store
+    def update(self, store=None, corpus=None, cache=None) -> None:
+        """Install new store state (and/or corpus / refreshed neighbor
+        cache) — a write epoch.  The host-side generation snapshot is what
+        cache lookups compare against, so it syncs here, once per update,
+        off the query path.  It bumps on EVERY update, even when the store
+        object is unchanged: a corpus swap or NB-cache refresh also
+        changes scores, so cached results must die with it."""
+        if corpus is not None and self._rt.is_distributed:
+            # same guard as __init__: the mesh dispatch path scores slot
+            # payloads and would silently ignore an installed corpus
+            raise ValueError("corpus scoring is 1-node only (mesh shards "
+                             "embed payloads in their bucket slots)")
+        if corpus is not None and self._corpus is None:
+            # the dispatch jit was baked for slot-payload scoring at
+            # construction; a late corpus would crash it at trace time
+            raise ValueError("this backend was built without a corpus "
+                             "(slot-payload scoring); corpus swaps need a "
+                             "corpus-built backend")
+        if cache is not None and not self._rt.is_distributed:
+            raise ValueError("neighbor caches exist only on mesh runtimes "
+                             "(the 1-node topology has no node bits)")
+        if store is not None:
+            self._store = store
         if corpus is not None:
             self._corpus = corpus
+        if cache is not None:
+            self._cache = cache
         self._generation = max(
-            int(np.asarray(store.generation)), self._generation + 1
+            int(np.asarray(self._store.generation)), self._generation + 1
         )
 
     def sketch_codes(self, q_pad: np.ndarray) -> np.ndarray:
@@ -133,93 +213,9 @@ class EngineBackend:
         generation — occupancy only changes when the store does)."""
         if self._cost_gen != self._generation:
             b = float(np.mean(np.asarray(self._store.occupancy())))
-            c = self._engine.config
+            c = self._rt.cfg
             self._cost = costmodel.table1(
-                c.variant, self._engine.params.k, self._engine.params.L, b
-            )
-            self._cost_gen = self._generation
-        return self._cost
-
-    def dispatch(self, q_pad: np.ndarray, ex_pad: np.ndarray, m: int):
-        ids, scores = self._dispatch_jit(
-            self._store, self._corpus, q_pad, ex_pad, m
-        )
-        return np.asarray(ids), np.asarray(scores), 0
-
-
-class DistBackend:
-    """Dispatch adapter over the `make_search_step` mesh step.
-
-    The wire path has no exclusion support (the id is not secret, paper
-    Sec. 6), so the step is built with one result of headroom
-    (`dcfg.m = serve_m + 1`) and the self id is filtered host-side —
-    exactly the distributed churn driver's convention.  `dropped_probes`
-    from the capacitated router flows through to the telemetry.
-    """
-
-    def __init__(self, dcfg, mesh, hyperplanes, store, cache=None,
-                 batch_axes=("data", "model")):
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
-        from repro.core import distributed as dist
-
-        self._dcfg = dcfg
-        self._mesh = mesh
-        self._hp = hyperplanes
-        self._store = store
-        self._cache = cache
-        self._step = dist.make_search_step(dcfg, mesh, batch_axes)
-        self._qspec = NamedSharding(mesh, P(batch_axes, None))
-        self._n_dev = int(np.prod([mesh.shape[a] for a in batch_axes]))
-        self._generation = int(np.asarray(store.generation))
-        self._cost_gen: int | None = None
-        self._cost: costmodel.QueryCost | None = None
-        self.traces = 0
-        self.sketch_traces = 0
-
-        def _sketch(q):
-            self.sketch_traces += 1
-            return plan_mod.sketch(q, hyperplanes)
-
-        self._sketch_jit = jax.jit(_sketch)
-
-    @property
-    def dim(self) -> int:
-        return self._hp.shape[-1]
-
-    @property
-    def min_batch(self) -> int:
-        # the global batch shards over every device, so dispatch sizes
-        # must be multiples of the device count (dispatch_pad enforces it)
-        return self._n_dev
-
-    @property
-    def max_m(self) -> int:
-        return self._dcfg.m - 1  # headroom for host-side self-exclusion
-
-    @property
-    def generation(self) -> int:
-        return self._generation
-
-    def update(self, store, cache=None) -> None:
-        """Install new store state and/or a refreshed neighbor cache.
-        Bumps the serving generation unconditionally (like EngineBackend):
-        an NB-cache refresh changes results without touching the store."""
-        self._store = store
-        if cache is not None:
-            self._cache = cache
-        self._generation = max(
-            int(np.asarray(store.generation)), self._generation + 1
-        )
-
-    def sketch_codes(self, q_pad: np.ndarray) -> np.ndarray:
-        return np.asarray(self._sketch_jit(q_pad))
-
-    def cost(self) -> costmodel.QueryCost:
-        if self._cost_gen != self._generation:
-            b = float(np.mean(np.asarray(self._store.occupancy())))
-            self._cost = costmodel.table1(
-                self._dcfg.variant, self._dcfg.params.k, self._dcfg.params.L, b
+                c.variant, c.params.k, c.params.L, b
             )
             self._cost_gen = self._generation
         return self._cost
@@ -227,16 +223,27 @@ class DistBackend:
     def dispatch(self, q_pad: np.ndarray, ex_pad: np.ndarray, m: int):
         import jax.numpy as jnp
 
+        if not self._rt.is_distributed:
+            payload = (
+                self._corpus if self._corpus is not None
+                else self._store.payload
+            )
+            ids, scores, dropped = self._dispatch_jit(
+                self._hp, self._store.ids, payload,
+                jnp.asarray(q_pad, jnp.float32), jnp.asarray(ex_pad), m,
+            )
+            return np.asarray(ids), np.asarray(scores), int(dropped)
+
         if m > self.max_m:
             raise ValueError(
                 f"m={m} exceeds the step's headroom (built with "
-                f"dcfg.m={self._dcfg.m}; serveable m <= {self.max_m})"
+                f"cfg.m={self._rt.cfg.m}; serveable m <= {self.max_m})"
             )
         q = jax.device_put(jnp.asarray(q_pad, jnp.float32), self._qspec)
         args = (self._hp, self._store.ids, self._store.payload)
         if self._cache is not None:
             args += tuple(self._cache)
-        ids, scores, dropped = self._step(*args, q)
+        ids, scores, dropped = self._dispatch_jit(*args, q)
         ids = np.asarray(ids)
         scores = np.asarray(scores)
         # host-side self-exclusion + slice to the serving m

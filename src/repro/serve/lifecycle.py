@@ -24,7 +24,7 @@ from repro.core.churn import ChurnConfig, _lsh_setup, _trajectory
 from repro.core.corpus import DenseCorpus
 from repro.core.engine import EngineConfig, LshEngine
 from repro.core.store import expire, insert_batch, make_store
-from repro.serve.frontend import EngineBackend, FrontendConfig, RetrievalFrontend
+from repro.serve.frontend import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +58,7 @@ def run_serve_churn(cfg: ServeChurnConfig) -> dict:
         params, hp, store, DenseCorpus(jnp.zeros((c.num_users, c.dim))),
         None, EngineConfig(variant=cfg.variant),
     )
-    backend = EngineBackend(engine)
+    backend = RuntimeBackend(engine)
     frontend = RetrievalFrontend(
         backend,
         FrontendConfig(

@@ -1,0 +1,67 @@
+"""Regenerate the engine golden outputs (`engine_v1.npz`).
+
+The goldens were captured from the PRE-runtime-refactor `LshEngine`
+(PR 3 tree) and pin its exact search/contains outputs: the refactored
+engine façade and the 1-node `IndexRuntime` must keep returning
+bit-identical ids (tests/test_runtime.py).  Regenerating is therefore
+ONLY legitimate when the reference semantics intentionally change —
+never to make a failing equivalence test pass.
+
+    PYTHONPATH=src python tests/goldens/make_goldens.py
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BucketStore, DenseCorpus, EngineConfig, LshEngine, LshParams,
+    make_hyperplanes,
+)
+from repro.core.hashing import sketch_codes_batched
+from repro.core.store import build_store_host
+
+N, D, K, L, M, NQ = 1200, 32, 5, 3, 10, 48
+
+PROBE_CELLS = [
+    ("full", dict()),
+    ("p2", dict(num_probes=2)),
+    ("ranked3", dict(num_probes=3, ranked_probes=True)),
+]
+
+
+def build():
+    rng = np.random.default_rng(17)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    params = LshParams(d=D, k=K, L=L, seed=23)
+    h = make_hyperplanes(params)
+    codes = sketch_codes_batched(jnp.asarray(vecs), h)
+    store = build_store_host(codes, params.num_buckets, capacity=64,
+                             payload=vecs)
+    ids_only = BucketStore(store.ids, store.timestamps, store.write_ptr, None)
+    corpus = DenseCorpus(jnp.asarray(vecs))
+    q = jnp.asarray(vecs[:NQ])
+    exclude = np.arange(NQ, dtype=np.int32)
+    targets = rng.integers(0, N, size=NQ).astype(np.int32)
+
+    out = {}
+    for variant in ("lsh", "nb", "cnb"):
+        for cell, pkw in PROBE_CELLS:
+            eng = LshEngine(params, h, ids_only, corpus, None,
+                            EngineConfig(variant=variant, **pkw))
+            r = eng.search(q, m=M, exclude=exclude)
+            out[f"search_ids_{variant}_{cell}"] = r.ids
+            out[f"search_scores_{variant}_{cell}"] = r.scores
+            out[f"contains_{variant}_{cell}"] = eng.contains(q, targets)
+    out["targets"] = targets
+    return out
+
+
+if __name__ == "__main__":
+    path = os.path.join(os.path.dirname(__file__), "engine_v1.npz")
+    np.savez_compressed(path, **build())
+    print(f"wrote {path}")

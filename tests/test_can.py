@@ -18,8 +18,8 @@ def test_zone_decomposition():
     t = CanTopology(k=8, n_nodes=16)
     assert t.node_bits == 4 and t.local_bits == 4
     codes = np.arange(256, dtype=np.uint32)
-    nodes = t.node_of(codes)
-    locals_ = t.local_of(codes)
+    nodes = t.node_of_np(codes)
+    locals_ = t.local_of_np(codes)
     # roundtrip
     assert all(
         t.code_of(n, l) == c for c, n, l in zip(codes, nodes, locals_)
@@ -27,6 +27,27 @@ def test_zone_decomposition():
     # contiguous prefix ranges
     assert nodes[0] == 0 and nodes[255] == 15
     assert np.all(np.diff(nodes.astype(int)) >= 0)
+
+
+def test_coordinate_backends_agree():
+    """The traced (jnp) and host (np) coordinate helpers are twins: same
+    values, explicit backend types (no duck-typed dispatch)."""
+    import jax
+
+    t = CanTopology(k=9, n_nodes=8)
+    codes_np = np.arange(512, dtype=np.uint32)
+    n_np, l_np = t.node_of_np(codes_np), t.local_of_np(codes_np)
+    assert isinstance(n_np, np.ndarray) and isinstance(l_np, np.ndarray)
+    n_j, l_j = t.node_of(codes_np), t.local_of(codes_np)
+    assert isinstance(n_j, jax.Array) and isinstance(l_j, jax.Array)
+    assert np.array_equal(np.asarray(n_j), n_np)
+    assert np.array_equal(np.asarray(l_j), l_np)
+    # the jnp path is jit-traceable (the planner runs it inside jit)
+    n_jit = jax.jit(t.node_of)(codes_np)
+    assert np.array_equal(np.asarray(n_jit), n_np)
+    # python-int scalars go through the np path (simulator convention)
+    assert int(t.node_of_np(np.uint32(0b111000000))) == 0b111
+    assert int(t.local_of_np(np.uint32(0b111000001))) == 0b000001
 
 
 def test_neighbors_differ_one_bit():

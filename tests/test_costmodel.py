@@ -1,0 +1,71 @@
+"""Table-1 cost accounting: budget boundaries + simulator aggregation."""
+
+import pytest
+
+from repro.core.costmodel import (
+    MessageCounter, QueryCost, lsh_L_for_budget, table1,
+)
+
+
+def test_budget_below_one_table_is_zero():
+    # lsh/layered/cnb cost kL/2 = 3 messages per table at k=6; nb costs 9
+    assert lsh_L_for_budget("lsh", 6, 2.9) == 0
+    assert lsh_L_for_budget("layered", 6, 0.0) == 0
+    assert lsh_L_for_budget("cnb", 6, 2.999) == 0
+    assert lsh_L_for_budget("nb", 6, 8.99) == 0
+
+
+def test_budget_exact_multiples():
+    assert lsh_L_for_budget("lsh", 6, 3.0) == 1
+    assert lsh_L_for_budget("lsh", 6, 6.0) == 2
+    assert lsh_L_for_budget("cnb", 4, 100.0) == 50
+    assert lsh_L_for_budget("nb", 6, 9.0) == 1
+    # just past a multiple stays at the floor
+    assert lsh_L_for_budget("lsh", 6, 8.9) == 2
+
+
+def test_budget_is_consistent_with_table1():
+    """The chosen L fits the budget, and L+1 would exceed it — for every
+    variant (the Fig. 3 equal-budget comparison depends on this)."""
+    for variant in ("lsh", "layered", "nb", "cnb"):
+        for k in (4, 6, 10):
+            for budget in (5.0, 12.0, 30.0, 31.5):
+                L = lsh_L_for_budget(variant, k, budget)
+                if L > 0:
+                    assert table1(variant, k, L).messages <= budget
+                assert table1(variant, k, L + 1).messages > budget
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(KeyError):
+        lsh_L_for_budget("bogus", 6, 10.0)
+    with pytest.raises(ValueError):
+        table1("bogus", 6, 2)
+
+
+def test_message_counter_aggregation():
+    c = MessageCounter()
+    c.add_lookup(3)
+    c.add_lookup(2)
+    c.add_neighbor(4)
+    c.add_result()
+    c.add_result(4)
+    assert c.dht_lookups == 2
+    assert c.lookup_hops == 5
+    assert c.neighbor_messages == 4
+    assert c.result_messages == 5
+    # Table-1 convention: routing hops + neighbor forwards count; result
+    # returns are symmetric across variants and excluded
+    assert c.total == 9
+
+
+def test_message_counter_matches_closed_form_shape():
+    """Counting k/2 expected hops per lookup over L tables reproduces the
+    kL/2 closed form (the simulator's convergence target)."""
+    k, L = 6, 4
+    c = MessageCounter()
+    for _ in range(L):
+        c.add_lookup(k // 2)
+        c.add_result()
+    assert c.total == table1("cnb", k, L).messages
+    assert isinstance(table1("cnb", k, L), QueryCost)

@@ -1,0 +1,267 @@
+"""IndexRuntime consolidation contracts (DESIGN.md Sec. 8).
+
+The engine/distributed split collapsed into one topology-parameterized
+execution layer; these tests pin the consolidation down:
+
+  * the refactored `LshEngine` façade returns BIT-IDENTICAL ids to the
+    pre-refactor engine (checked-in goldens, tests/goldens/engine_v1.npz);
+  * a 1-node `IndexRuntime` reproduces the engine on both payload models
+    (id-keyed corpus and embedded bucket-slot payloads);
+  * the mesh-mode runtime (shard_map, 1 shard — tier-1 single device)
+    matches the 1-node runtime exactly;
+  * the runtime's insert/expire/payload-sync steps reproduce the
+    single-host store semantics on the degenerate topology;
+  * the unified churn driver reports the same dict surface on every
+    topology (drops counted, staleness tracked).
+
+(The >= 2-shard equivalences run in the slow subprocess suites:
+tests/test_distributed.py and tests/test_churn.py.)
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BucketStore, DenseCorpus, EngineConfig, LshEngine, LshParams,
+    make_hyperplanes,
+)
+from repro.core.hashing import sketch_codes, sketch_codes_batched
+from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.store import build_store_host, insert_batch, make_store
+
+GOLDENS = os.path.join(os.path.dirname(__file__), "goldens", "engine_v1.npz")
+
+# must mirror tests/goldens/make_goldens.py exactly
+N, D, K, L, M, NQ = 1200, 32, 5, 3, 10, 48
+PROBE_CELLS = [
+    ("full", dict()),
+    ("p2", dict(num_probes=2)),
+    ("ranked3", dict(num_probes=3, ranked_probes=True)),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(17)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    params = LshParams(d=D, k=K, L=L, seed=23)
+    h = make_hyperplanes(params)
+    codes = sketch_codes_batched(jnp.asarray(vecs), h)
+    store = build_store_host(codes, params.num_buckets, capacity=64,
+                             payload=vecs)
+    ids_only = BucketStore(store.ids, store.timestamps, store.write_ptr, None)
+    corpus = DenseCorpus(jnp.asarray(vecs))
+    golden = dict(np.load(GOLDENS))
+    return params, h, store, ids_only, corpus, vecs, golden
+
+
+def _cells():
+    return [(v, name, pkw) for v in ("lsh", "nb", "cnb")
+            for name, pkw in PROBE_CELLS]
+
+
+@pytest.mark.parametrize("variant,cell,pkw", _cells(),
+                         ids=[f"{v}-{c}" for v, c, _ in _cells()])
+def test_engine_matches_prerefactor_goldens(setup, variant, cell, pkw):
+    """The façade keeps the pre-refactor engine's exact outputs."""
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    eng = LshEngine(params, h, ids_only, corpus, None,
+                    EngineConfig(variant=variant, **pkw))
+    q = jnp.asarray(vecs[:NQ])
+    r = eng.search(q, m=M, exclude=np.arange(NQ))
+    np.testing.assert_array_equal(
+        r.ids, golden[f"search_ids_{variant}_{cell}"])
+    np.testing.assert_allclose(
+        r.scores, golden[f"search_scores_{variant}_{cell}"], atol=1e-6)
+    hits = eng.contains(q, golden["targets"])
+    np.testing.assert_array_equal(hits, golden[f"contains_{variant}_{cell}"])
+
+
+def test_runtime_local_corpus_matches_goldens(setup):
+    """The 1-node runtime drives the same kernel the engine wraps —
+    calling it directly (host API) returns the same golden ids."""
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    q = vecs[:NQ]
+    ids, scores, dropped = rt.search(
+        h, ids_only, q, corpus=corpus, exclude=np.arange(NQ))
+    assert int(dropped) == 0
+    np.testing.assert_array_equal(
+        np.asarray(ids), golden["search_ids_cnb_full"])
+    hits, cdrop = rt.contains(h, ids_only, q, golden["targets"])
+    assert int(cdrop) == 0
+    np.testing.assert_array_equal(
+        np.asarray(hits), golden["contains_cnb_full"])
+
+
+def test_runtime_local_payload_matches_corpus(setup):
+    """Embedded slot payloads (the sharded data model) and the id-keyed
+    corpus (the reference data model) score identically when in sync."""
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    q = vecs[:NQ]
+    ids_p, sc_p, _ = rt.search(h, store, q)
+    ids_c, sc_c, _ = rt.search(h, ids_only, q, corpus=corpus)
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_c))
+    np.testing.assert_allclose(np.asarray(sc_p), np.asarray(sc_c), atol=1e-6)
+
+
+def test_mesh_runtime_matches_local(setup, single_mesh):
+    """shard_map mode on the (1, 1) mesh is the same computation as the
+    mesh-free 1-node mode — the adapter adds only placement."""
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    q = vecs[:32]
+    local = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    mesh_rt = IndexRuntime(
+        RuntimeConfig(params=params, variant="cnb", m=M,
+                      cap_factor=float(L)),
+        mesh=single_mesh,
+    )
+    store_sh = mesh_rt.shard_store(store)
+    ids_l, _, _ = local.search(h, store, q)
+    ids_m, _, drop = mesh_rt.search(h, store_sh, q)
+    assert int(drop) == 0
+    np.testing.assert_array_equal(np.asarray(ids_l), np.asarray(ids_m))
+    targets = np.arange(32, dtype=np.int32)
+    hits_l, _ = local.contains(h, store, q, targets)
+    hits_m, _ = mesh_rt.contains(h, store_sh, q, targets)
+    np.testing.assert_array_equal(np.asarray(hits_l), np.asarray(hits_m))
+
+
+def test_runtime_insert_matches_insert_batch(setup):
+    """The topology-generic insert step at n_nodes=1 reproduces the
+    single-host `insert_batch` store exactly (same codes, same slots)."""
+    params, h, _, _, _, vecs, _ = setup
+    nv = 200
+    codes = sketch_codes(jnp.asarray(vecs[:nv]), h)
+    ref = insert_batch(
+        make_store(L, params.num_buckets, 16, payload_dim=D),
+        jnp.arange(nv, dtype=jnp.int32), codes, jnp.int32(3),
+        jnp.asarray(vecs[:nv]),
+    )
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    st = rt.insert(h, make_store(L, params.num_buckets, 16, payload_dim=D),
+                   vecs[:nv], np.arange(nv, dtype=np.int32), 3)
+    np.testing.assert_array_equal(np.asarray(st.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(
+        np.asarray(st.timestamps), np.asarray(ref.timestamps))
+    np.testing.assert_allclose(
+        np.asarray(st.payload), np.asarray(ref.payload))
+    assert int(st.generation) == int(ref.generation) == L
+
+
+def test_runtime_expire_and_payload_sync(setup):
+    params, h, _, _, _, vecs, _ = setup
+    nv = 64
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    st = rt.insert(h, make_store(L, params.num_buckets, 16, payload_dim=D),
+                   vecs[:nv], np.arange(nv, dtype=np.int32), 1)
+    gen0 = int(st.generation)
+    # payload sync repoints live entries at the LATEST announced vectors
+    # (and donates the old store — its buffers are dead afterwards)
+    moved = np.roll(vecs[:nv], 1, axis=0)
+    st2 = rt.payload_sync(st, moved)
+    ids0 = np.asarray(st2.ids[0])
+    live = np.argwhere(ids0 >= 0)
+    b, c = live[0]
+    np.testing.assert_allclose(
+        np.asarray(st2.payload[0, b, c]), moved[ids0[b, c]], atol=0)
+    assert int(st2.generation) == gen0 + 1
+    # expire GCs everything older than the TTL
+    st3 = rt.expire(st2, now=10, ttl=2)
+    assert int(np.asarray(st3.ids).max()) == -1
+
+
+def test_runtime_requires_mesh_for_multinode():
+    params = LshParams(d=8, k=4, L=2, seed=0)
+    with pytest.raises(ValueError, match="needs a mesh"):
+        IndexRuntime(RuntimeConfig(params=params, n_nodes=2))
+
+
+def test_runtime_mesh_axis_must_match(single_mesh):
+    params = LshParams(d=8, k=4, L=2, seed=0)
+    with pytest.raises(ValueError, match="model axis"):
+        IndexRuntime(RuntimeConfig(params=params, n_nodes=2),
+                     mesh=single_mesh)
+
+
+def test_churn_driver_dict_surface():
+    """The unified driver reports the full surface (drops counted,
+    staleness tracked) on the 1-node topology too."""
+    from repro.core.churn import ChurnConfig, run_churn
+
+    out = run_churn(ChurnConfig(
+        num_users=300, dim=16, k=4, L=2, capacity=32, epochs=3,
+        num_queries=24, m=5, refresh_every=2, seed=1,
+    ))
+    assert out["recalls"].shape == (3,)
+    assert np.all(out["dropped_probes"] == 0)
+    assert out["cache_staleness"].min() == 0
+    assert out["staleness"].max() >= 1
+    assert out["store_generation"] > 0
+
+
+@pytest.mark.slow
+def test_runtime_two_shards_matches_engine():
+    """The runtime-level host API on a REAL >= 2-shard mesh returns the
+    engine's exact result sets (the step-level equivalences run in
+    tests/test_distributed.py)."""
+    from conftest import run_in_subprocess
+
+    out = run_in_subprocess(
+        """
+        import numpy as np, jax.numpy as jnp
+        from repro.core import (
+            BucketStore, DenseCorpus, EngineConfig, LshEngine, LshParams,
+            make_hyperplanes,
+        )
+        from repro.core.hashing import sketch_codes_batched
+        from repro.core.runtime import IndexRuntime, RuntimeConfig
+        from repro.core.store import build_store_host
+        from repro.launch.mesh import make_host_mesh
+
+        rng = np.random.default_rng(5)
+        N, D, k, L, m = 1500, 32, 5, 3, 8
+        params = LshParams(d=D, k=k, L=L, seed=7)
+        h = make_hyperplanes(params)
+        vecs = rng.standard_normal((N, D)).astype(np.float32)
+        vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+        codes = sketch_codes_batched(jnp.asarray(vecs), h)
+        store = build_store_host(codes, params.num_buckets, capacity=128,
+                                 payload=vecs)
+        ids_only = BucketStore(store.ids, store.timestamps,
+                               store.write_ptr, None)
+        eng = LshEngine(params, h, ids_only, DenseCorpus(jnp.asarray(vecs)),
+                        None, EngineConfig(variant="cnb"))
+        q = vecs[:32]
+        want = eng.search(jnp.asarray(q), m=m)
+
+        mesh = make_host_mesh(data=1, model=2)
+        rt = IndexRuntime(
+            RuntimeConfig(params=params, variant="cnb", m=m, n_nodes=2,
+                          cap_factor=float(L)),
+            mesh=mesh,
+        )
+        store_sh = rt.shard_store(store)
+        cache = rt.refresh_cache(store_sh)
+        ids, _, drop = rt.search(h, store_sh, q, cache=cache)
+        assert int(drop) == 0
+        ids = np.asarray(ids)
+        for i in range(32):
+            assert set(ids[i][ids[i] >= 0]) == set(
+                want.ids[i][want.ids[i] >= 0]), i
+        hits, _ = rt.contains(h, store_sh, q,
+                              np.arange(32, dtype=np.int32), cache=cache)
+        want_h = eng.contains(jnp.asarray(q), np.arange(32))
+        assert np.array_equal(np.asarray(hits), want_h)
+        print("RUNTIME-2SHARD-OK")
+        """,
+        devices=2,
+    )
+    assert "RUNTIME-2SHARD-OK" in out

@@ -29,7 +29,7 @@ from repro.core.churn import ChurnConfig, run_churn
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host, expire, insert_batch, make_store
 from repro.serve import (
-    EngineBackend, FrontendConfig, QueryCache, RetrievalFrontend, ServeStats,
+    FrontendConfig, QueryCache, RetrievalFrontend, RuntimeBackend, ServeStats,
     ServeChurnConfig, dispatch_pad, pow2_pad, run_serve_churn,
 )
 
@@ -61,7 +61,7 @@ def _make_engine(n=400, seed=0, capacity=32, variant="cnb", payload=False):
 def test_frontend_matches_engine_search(cache):
     emb, engine, _ = _make_engine()
     fe = RetrievalFrontend(
-        EngineBackend(engine),
+        RuntimeBackend(engine),
         FrontendConfig(m=M, max_batch=16, queue_capacity=64, cache=cache),
     )
     q = emb[:50]
@@ -75,7 +75,7 @@ def test_frontend_matches_engine_search(cache):
 def test_repeat_queries_hit_cache_and_stay_identical():
     emb, engine, _ = _make_engine()
     fe = RetrievalFrontend(
-        EngineBackend(engine),
+        RuntimeBackend(engine),
         FrontendConfig(m=M, max_batch=16, queue_capacity=64, cache=True),
     )
     q = emb[:24]
@@ -116,7 +116,7 @@ def test_dispatch_pad_divides_over_non_pow2_meshes():
 
 def test_pow2_padding_bounds_trace_count():
     emb, engine, _ = _make_engine()
-    backend = EngineBackend(engine)
+    backend = RuntimeBackend(engine)
     fe = RetrievalFrontend(
         backend,
         FrontendConfig(m=M, max_batch=64, queue_capacity=128, cache=True),
@@ -141,7 +141,7 @@ def test_pow2_padding_bounds_trace_count():
 def test_admission_control_rejects_are_counted():
     emb, engine, _ = _make_engine()
     fe = RetrievalFrontend(
-        EngineBackend(engine),
+        RuntimeBackend(engine),
         FrontendConfig(m=M, max_batch=4, queue_capacity=8, cache=False),
     )
     tickets = [fe.submit(emb[i]) for i in range(12)]
@@ -199,7 +199,7 @@ def test_store_generation_bumps():
 
 def test_cache_never_serves_stale_after_churn():
     emb, engine, codes = _make_engine(n=200)
-    backend = EngineBackend(engine)
+    backend = RuntimeBackend(engine)
     fe = RetrievalFrontend(
         backend,
         FrontendConfig(m=M, max_batch=16, queue_capacity=64, cache=True),
@@ -237,7 +237,7 @@ def test_corpus_only_update_invalidates_cache():
     """A corpus swap changes scores even with the store untouched: the
     backend generation must bump on EVERY update, not only store bumps."""
     emb, engine, _ = _make_engine(n=100)
-    backend = EngineBackend(engine)
+    backend = RuntimeBackend(engine)
     fe = RetrievalFrontend(
         backend,
         FrontendConfig(m=M, max_batch=16, queue_capacity=64, cache=True),
@@ -299,9 +299,9 @@ def test_telemetry_latency_window_is_bounded():
 # -----------------------------------------------------------------------------
 
 
-def test_dist_backend_matches_engine(single_mesh):
+def test_mesh_backend_matches_engine(single_mesh):
     from repro.core import distributed as dist
-    from repro.serve import DistBackend
+    from repro.core.runtime import IndexRuntime
 
     emb, engine, codes = _make_engine(payload=True)
     store = dist.shard_store(single_mesh, engine.store)
@@ -309,9 +309,9 @@ def test_dist_backend_matches_engine(single_mesh):
         params=engine.params, n_shards=1, variant="cnb", m=M + 1,
         routing="alltoall", cap_factor=2.0,
     )
-    backend = DistBackend(
-        dcfg, single_mesh, engine.hyperplanes, store,
-        batch_axes=("data", "model"),
+    backend = RuntimeBackend(
+        IndexRuntime(dcfg, mesh=single_mesh),
+        hyperplanes=engine.hyperplanes, store=store,
     )
     fe = RetrievalFrontend(
         backend, FrontendConfig(m=M, max_batch=16, queue_capacity=64,
@@ -329,9 +329,9 @@ def test_dist_backend_matches_engine(single_mesh):
     assert fe.stats.dropped_probes == 0
 
 
-def test_dist_backend_surfaces_dropped_probes(single_mesh):
+def test_mesh_backend_surfaces_dropped_probes(single_mesh):
     from repro.core import distributed as dist
-    from repro.serve import DistBackend
+    from repro.core.runtime import IndexRuntime
 
     emb, engine, codes = _make_engine(payload=True)
     store = dist.shard_store(single_mesh, engine.store)
@@ -341,7 +341,10 @@ def test_dist_backend_surfaces_dropped_probes(single_mesh):
         params=engine.params, n_shards=1, variant="cnb", m=M + 1,
         routing="alltoall", cap_factor=0.25,
     )
-    backend = DistBackend(dcfg, single_mesh, engine.hyperplanes, store)
+    backend = RuntimeBackend(
+        IndexRuntime(dcfg, mesh=single_mesh),
+        hyperplanes=engine.hyperplanes, store=store,
+    )
     fe = RetrievalFrontend(
         backend, FrontendConfig(m=M, max_batch=16, queue_capacity=64,
                                 cache=False),
@@ -349,6 +352,30 @@ def test_dist_backend_surfaces_dropped_probes(single_mesh):
     fe.search(emb[:16])
     assert fe.stats.dropped_probes > 0
     assert fe.stats.summary()["dropped_probes"] == fe.stats.dropped_probes
+
+
+def test_backend_update_enforces_topology_guards(single_mesh):
+    """update() keeps __init__'s topology rules: a corpus on a mesh
+    backend (or a neighbor cache on a 1-node backend) must raise, never
+    be silently ignored."""
+    from repro.core import distributed as dist
+    from repro.core.runtime import IndexRuntime
+
+    emb, engine, _ = _make_engine(payload=True)
+    store = dist.shard_store(single_mesh, engine.store)
+    dcfg = dist.DistConfig(
+        params=engine.params, n_shards=1, variant="cnb", m=M + 1,
+        routing="alltoall", cap_factor=2.0,
+    )
+    mesh_backend = RuntimeBackend(
+        IndexRuntime(dcfg, mesh=single_mesh),
+        hyperplanes=engine.hyperplanes, store=store,
+    )
+    with pytest.raises(ValueError, match="1-node only"):
+        mesh_backend.update(store, corpus=engine.corpus)
+    local_backend = RuntimeBackend(engine)
+    with pytest.raises(ValueError, match="mesh runtimes"):
+        local_backend.update(engine.store, cache=(None, None))
 
 
 # -----------------------------------------------------------------------------
@@ -383,7 +410,7 @@ def test_serve_churn_config_fields():
 
 
 @pytest.mark.slow
-def test_dist_backend_on_non_pow2_mesh():
+def test_mesh_backend_on_non_pow2_mesh():
     """Non-pow-2 DEVICE count (data=3 — the model axis must stay a power
     of two for the CAN geometry): dispatch sizes must round up to
     multiples of the device count, since a bare pow-2 pad would fail
@@ -399,9 +426,10 @@ def test_dist_backend_on_non_pow2_mesh():
         )
         from repro.core import distributed as dist
         from repro.core.hashing import sketch_codes_batched
+        from repro.core.runtime import IndexRuntime
         from repro.core.store import build_store_host
         from repro.launch.mesh import make_host_mesh
-        from repro.serve import DistBackend, FrontendConfig, RetrievalFrontend
+        from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
         M = 8
         rng = np.random.default_rng(0)
@@ -421,7 +449,8 @@ def test_dist_backend_on_non_pow2_mesh():
         dcfg = dist.DistConfig(
             params=params, n_shards=1, variant="cnb", m=M + 1,
             routing="alltoall", cap_factor=3.0)
-        backend = DistBackend(dcfg, mesh, h, store)
+        backend = RuntimeBackend(IndexRuntime(dcfg, mesh=mesh),
+                                 hyperplanes=h, store=store)
         fe = RetrievalFrontend(backend, FrontendConfig(
             m=M, max_batch=16, queue_capacity=64, cache=True))
         # 2 pending rows on 3 devices: pad must be 6, not pow2(2)=4
