@@ -51,25 +51,59 @@ print("RESULT " + json.dumps(out))
 """
 
 
-def _dist_rows(base: ChurnConfig):
+_NODE_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+from repro.core.churn import ChurnConfig, NodeChurnConfig, run_node_churn
+
+base = ChurnConfig(**json.loads(sys.argv[1]))
+out = []
+for name, sched in (
+    ("static", (1,)),
+    ("join2", (1, 2)),
+    ("sawtooth", (1, 2, 4, 2, 1, 2, 1)),
+):
+    t0 = time.time()
+    r = run_node_churn(NodeChurnConfig(churn=base, schedule=sched))
+    us = (time.time() - t0) / base.epochs * 1e6
+    out.append(dict(
+        name=name, us=us,
+        mean_recall=r["mean_recall"],
+        rounds=len(r["reshard_events"]),
+        handoff=int(r["total_handoff_bytes"]),
+        refresh=int(r["total_refresh_bytes"]),
+        dropped=int(r["dropped_probes"].sum())))
+print("RESULT " + json.dumps(out))
+"""
+
+N_NODES_MAX = 4
+
+
+def _subprocess_rows(script: str, base: ChurnConfig, devices: int,
+                     extra_args=()):
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={N_SHARDS}"
+        f"--xla_force_host_platform_device_count={devices}"
     )
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
-        [sys.executable, "-c", _DIST_SCRIPT,
-         json.dumps(dataclasses.asdict(base)), str(N_SHARDS)],
+        [sys.executable, "-c", script,
+         json.dumps(dataclasses.asdict(base)), *extra_args],
         capture_output=True, text=True, timeout=1200, env=env,
     )
     if proc.returncode != 0:
-        raise RuntimeError(f"distributed churn failed:\n{proc.stderr}")
+        raise RuntimeError(f"churn subprocess failed:\n{proc.stderr}")
     payload = next(ln for ln in proc.stdout.splitlines()
                    if ln.startswith("RESULT "))
+    return json.loads(payload[len("RESULT "):])
+
+
+def _dist_rows(base: ChurnConfig):
     out = []
-    for r in json.loads(payload[len("RESULT "):]):
+    for r in _subprocess_rows(_DIST_SCRIPT, base, N_SHARDS,
+                              (str(N_SHARDS),)):
         out.append((
             f"churn/dist{N_SHARDS}shard/refresh_every={r['period']}",
             r["us"],
@@ -77,6 +111,20 @@ def _dist_rows(base: ChurnConfig):
             f"final_recall={r['final_recall']:.3f};"
             f"bytes_per_epoch={r['bytes_per_epoch']:.3e};"
             f"dropped={r['dropped']};max_cache_stale={r['max_stale']}"))
+    return out
+
+
+def _node_rows(base: ChurnConfig):
+    """Elastic-membership cell: recall + handoff/refresh bytes as node
+    join/leave rounds interleave with content churn (vs the static
+    schedule on the same trajectory — the recall columns should match)."""
+    out = []
+    for r in _subprocess_rows(_NODE_SCRIPT, base, N_NODES_MAX):
+        out.append((
+            f"churn/nodes/{r['name']}", r["us"],
+            f"mean_recall={r['mean_recall']:.3f};rounds={r['rounds']};"
+            f"handoff_bytes={r['handoff']};refresh_bytes={r['refresh']};"
+            f"dropped={r['dropped']}"))
     return out
 
 
@@ -99,5 +147,11 @@ def rows():
         # the single-host rows and record the actual failure in the row.
         reason = " ".join(str(e).split())[:300]
         out.append((f"churn/dist{N_SHARDS}shard/FAILED", 0.0,
+                    f"{type(e).__name__}: {reason}"))
+    try:
+        out.extend(_node_rows(base))
+    except Exception as e:
+        reason = " ".join(str(e).split())[:300]
+        out.append(("churn/nodes/FAILED", 0.0,
                     f"{type(e).__name__}: {reason}"))
     return out

@@ -97,6 +97,17 @@ class CanTopology:
             raise ValueError(f"bit {bit} out of range for {self.node_bits} node bits")
         return [(i, i ^ (1 << bit)) for i in range(self.n_nodes)]
 
+    # -- elastic membership geometry (zone split / merge) --------------------
+
+    def zone_range(self, node: int) -> tuple[int, int]:
+        """[start, end) bucket codes of a node's contiguous prefix zone."""
+        if not (0 <= int(node) < self.n_nodes):
+            raise ValueError(f"node {node} out of range for {self.n_nodes}")
+        return (
+            int(node) * self.buckets_per_node,
+            (int(node) + 1) * self.buckets_per_node,
+        )
+
     # -- routing cost (message unit, paper Table 1) --------------------------
 
     def lookup_hops(self, src_node: int, dst_node: int) -> int:
@@ -113,3 +124,48 @@ class CanTopology:
 def paper_topology(k: int) -> CanTopology:
     """The paper's exact setting: one bucket per node, N = 2^k."""
     return CanTopology(k=k, n_nodes=1 << k)
+
+
+# -----------------------------------------------------------------------------
+# elastic membership: power-of-two join/leave rounds between two topologies
+# -----------------------------------------------------------------------------
+#
+# A membership round keeps zones contiguous: growing N -> rN splits every
+# zone into r subzones — the incumbent keeps the FIRST subzone (its node id
+# becomes r*i, same prefix start) and r-1 joiners take the rest; shrinking
+# rN -> N merges sibling groups — the group's first node survives as node
+# i and absorbs its r-1 siblings' zones.  `survivor_of` is that embedding
+# of old node ids into the new topology; `moved_buckets` counts the bucket
+# rows whose owner changes (the handoff the cost model charges).
+
+
+def survivor_of(old: CanTopology, new: CanTopology, node) -> np.ndarray:
+    """New node id an old node's surviving state lands on.
+
+    Join (new.n_nodes > old.n_nodes): old node i keeps its zone prefix,
+    so it becomes new node i*r.  Leave: old node i's state lands on the
+    absorber of its sibling group, new node i // r.  Vectorized over
+    `node` (host/numpy — membership planning is a control-plane op).
+    """
+    if old.k != new.k:
+        raise ValueError(f"topologies disagree on k: {old.k} != {new.k}")
+    node = np.asarray(node, dtype=np.uint32)
+    if new.n_nodes >= old.n_nodes:
+        return node * np.uint32(new.n_nodes // old.n_nodes)
+    return node // np.uint32(old.n_nodes // new.n_nodes)
+
+
+def moved_buckets(old: CanTopology, new: CanTopology) -> int:
+    """Bucket rows PER TABLE changing owner in one join/leave round.
+
+    A bucket stays put iff its new owner is the survivor image of its old
+    owner; with prefix zones exactly min(N, N')/max(N, N') of the bucket
+    space survives in place, so NB * (1 - min/max) rows are handed off.
+    The closed form is exact (tests/test_properties.py checks it against
+    the owner arrays).
+    """
+    if old.k != new.k:
+        raise ValueError(f"topologies disagree on k: {old.k} != {new.k}")
+    nb = 1 << old.k
+    lo, hi = sorted((old.n_nodes, new.n_nodes))
+    return nb - nb * lo // hi

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core import hashing, metrics
 from repro.core.hashing import LshParams
-from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.runtime import IndexRuntime, RuntimeConfig, reshard
 from repro.core.store import make_store
 
 
@@ -149,7 +149,34 @@ def make_churn_runtime(
     return IndexRuntime(rcfg, mesh=mesh)
 
 
-def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
+def _expand_schedule(schedule, epochs: int) -> list[int]:
+    """Per-epoch node counts (length epochs + 1, epoch 0 included): a
+    short schedule holds its last value; a long one is clipped.  Every
+    entry must be a power of two >= 1 (the `can.py` join/leave rounds)."""
+    sched = [int(n) for n in schedule]
+    if not sched:
+        raise ValueError("empty membership schedule")
+    for n in sched:
+        if n < 1 or (n & (n - 1)):
+            raise ValueError(f"schedule entries must be powers of two, "
+                             f"got {n}")
+    sched = (sched + [sched[-1]] * (epochs + 1))[: epochs + 1]
+    return sched
+
+
+def _zone_mesh(n: int):
+    from repro.launch.mesh import make_zone_mesh
+
+    return make_zone_mesh(n)
+
+
+def run_churn_runtime(
+    cfg: ChurnConfig,
+    rt: IndexRuntime,
+    *,
+    schedule=None,
+    mesh_for=None,
+) -> dict:
     """Drive the churn trajectory on ANY topology (the one driver).
 
     Announce epochs: runtime insert + expire + payload sync (+ CNB cache
@@ -157,24 +184,84 @@ def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
     cache is STALE, the freshness/cost trade of the paper's periodic
     bucket exchange).  Read epochs: runtime search + host-side
     self-exclusion, recall against the current ground truth.
+
+    With `schedule` (per-epoch node counts, see `_expand_schedule`) the
+    topology itself churns: whenever the scheduled count differs from the
+    current runtime's, a membership round fires FIRST (`runtime.reshard`
+    — zone split/merge + bucket-state handoff + NB-cache rewarm), then
+    the epoch's content churn and queries run on the new topology.
+    Handoff and refresh bytes are charged per epoch (never silently);
+    the world trajectory shares the static run's RNG stream, so recalls
+    are directly comparable (in practice identical — the global bucket
+    array is invariant under a round).  `mesh_for(n)` supplies the mesh
+    for n-node topologies (default: a host-device-prefix zone mesh);
+    runtimes are cached per node count so revisited topologies reuse
+    their compiled steps.
     """
+    from repro.core import distributed as dist_mod
+
     params, hp = _lsh_setup(cfg)
-    n_dev = rt.n_devices
-    nu_pad = -(-cfg.num_users // n_dev) * n_dev
-    nq_pad = -(-cfg.num_queries // n_dev) * n_dev
+    sched = (
+        None if schedule is None
+        else _expand_schedule(schedule, cfg.epochs)
+    )
+    if sched is not None and sched[0] != rt.cfg.n_nodes:
+        raise ValueError(
+            f"schedule[0]={sched[0]} != initial runtime n_nodes="
+            f"{rt.cfg.n_nodes}"
+        )
+    runtimes = {rt.cfg.n_nodes: rt}
 
     store = rt.shard_store(
         make_store(cfg.L, params.num_buckets, cfg.capacity,
                    payload_dim=cfg.dim)
     )
-    all_ids = _pad_to(np.arange(cfg.num_users, dtype=np.int32), nu_pad, -1)
+
+    def _charge_refresh() -> int:
+        if rt.cfg.node_bits == 0:
+            return 0
+        return dist_mod.estimate_refresh_bytes(rt.cfg, cfg.capacity, cfg.dim)
 
     cache = None
     last_refresh = 0
     recalls, staleness, dropped = [], [], []
+    handoff_b, refresh_b, nodes_traj, events = [], [], [], []
+    total_handoff = total_refresh = 0
     for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
+        ep_handoff = ep_refresh = 0
+        if sched is not None and sched[epoch] != rt.cfg.n_nodes:
+            # -- membership round: join/leave to the scheduled node count
+            n_new = sched[epoch]
+            tgt = runtimes.get(n_new)
+            if tgt is not None:  # revisited topology: reuse compiled steps
+                rt, store, ev = reshard(rt, store, runtime=tgt)
+            else:
+                mesh = (mesh_for or _zone_mesh)(n_new) if n_new > 1 else None
+                rt, store, ev = reshard(
+                    rt, store, n_new, mesh=mesh, cap_factor=float(n_new),
+                )
+            runtimes[n_new] = rt
+            events.append(ev)
+            ep_handoff += ev.handoff_bytes
+            total_handoff += ev.handoff_bytes
+            # the new owners' NB caches are cold — rewarm immediately
+            # (charged as refresh bytes; the store content is unchanged,
+            # so this equals the cache of the last announce).  When the
+            # round lands ON a refresh epoch the announce below rebuilds
+            # the cache anyway: skip the duplicate rewarm and its charge.
+            cache = None
+            if not do_refresh:
+                cache = rt.refresh_cache(store)
+                b = _charge_refresh()
+                ep_refresh += b
+                total_refresh += b
+        n_dev = rt.n_devices
+        nu_pad = -(-cfg.num_users // n_dev) * n_dev
+        nq_pad = -(-cfg.num_queries // n_dev) * n_dev
         if do_refresh:
             vpad = _pad_to(vecs, nu_pad, 0.0)
+            all_ids = _pad_to(
+                np.arange(cfg.num_users, dtype=np.int32), nu_pad, -1)
             store = rt.insert(hp, store, vpad, all_ids, epoch)
             if epoch > 0:
                 store = rt.expire(store, epoch, ttl=cfg.ttl_epochs)
@@ -182,6 +269,9 @@ def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
             # latest announced vector (the id-keyed reference semantics)
             store = rt.payload_sync(store, vpad)
             cache = rt.refresh_cache(store)
+            b = _charge_refresh()
+            ep_refresh += b
+            total_refresh += b
             last_refresh = epoch
         if epoch == 0:
             continue
@@ -200,6 +290,9 @@ def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
         # refreshes land on schedule) — one convention for all topologies
         staleness.append(epoch - last_refresh)
         dropped.append(int(drop))
+        handoff_b.append(ep_handoff)
+        refresh_b.append(ep_refresh)
+        nodes_traj.append(rt.cfg.n_nodes)
 
     stale_arr = np.asarray(staleness)
     return dict(
@@ -212,6 +305,15 @@ def run_churn_runtime(cfg: ChurnConfig, rt: IndexRuntime) -> dict:
         final_recall=float(recalls[-1]),
         mean_recall=float(np.mean(recalls)),
         refresh_every=cfg.refresh_every,
+        # membership accounting (all-zero / constant on a static topology):
+        # per-read-epoch byte charges plus run totals, which additionally
+        # include the epoch-0 initial announce's cache warm-up
+        n_nodes=np.asarray(nodes_traj),
+        handoff_bytes=np.asarray(handoff_b, dtype=np.int64),
+        refresh_bytes=np.asarray(refresh_b, dtype=np.int64),
+        total_handoff_bytes=int(total_handoff),
+        total_refresh_bytes=int(total_refresh),
+        reshard_events=events,
         # store mutation counter after the run — the serving layer's cache
         # invalidation signal (every insert/expire/sync bumped it)
         store_generation=int(store.generation),
@@ -244,3 +346,40 @@ def run_churn_distributed(
     return run_churn_runtime(
         cfg, make_churn_runtime(cfg, n_shards, mesh, cap_factor)
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeChurnConfig:
+    """The elastic-membership scenario: content churn + queries while the
+    node set itself joins and leaves on a schedule.
+
+    `schedule[e]` is the node count during epoch e (0 = the initial
+    announce epoch); a short schedule holds its last value.  Entries must
+    be powers of two — each change is one `can.py` zone split/merge
+    round.  The world trajectory (vectors, churn events, query draws) is
+    the SAME RNG stream as the static drivers, so `run_node_churn`
+    recalls are directly comparable to `run_churn` on the same
+    `ChurnConfig`."""
+
+    churn: ChurnConfig = ChurnConfig()
+    schedule: tuple[int, ...] = (1, 2, 4, 2, 1)
+
+
+def run_node_churn(cfg: NodeChurnConfig, mesh_for=None) -> dict:
+    """Interleave node join/leave epochs with content churn and queries.
+
+    The topology axis becomes a runtime variable: membership rounds fire
+    at the scheduled epochs (`runtime.reshard` — bucket-state handoff to
+    the new zone owners, NB-cache rewarm), with handoff bytes charged to
+    the cost model alongside the refresh bytes (`handoff_bytes` /
+    `refresh_bytes` per epoch in the returned dict, plus run totals).
+    Node counts > 1 need that many host devices (see
+    `launch.mesh.make_zone_mesh`); pass `mesh_for(n)` to supply meshes
+    yourself (e.g. device subsets of a production mesh).
+    """
+    sched = _expand_schedule(cfg.schedule, cfg.churn.epochs)
+    n0 = sched[0]
+    mesh = None if n0 == 1 else (mesh_for or _zone_mesh)(n0)
+    rt = make_churn_runtime(cfg.churn, n0, mesh=mesh)
+    return run_churn_runtime(cfg.churn, rt, schedule=sched,
+                             mesh_for=mesh_for)

@@ -75,6 +75,34 @@ class MessageCounter:
         self.result_messages += int(n)
 
 
+# -- elastic membership: bucket-state handoff (DESIGN.md Sec. 9) -------------
+
+
+def estimate_handoff_bytes(
+    L: int,
+    num_buckets: int,
+    capacity: int,
+    d: int,
+    old_n: int,
+    new_n: int,
+) -> int:
+    """Protocol-level bytes of one power-of-two join/leave round.
+
+    The Table-1 analogue for membership: every bucket row changing owner
+    ships its id (4 B) and timestamp (4 B) slots, its embedded payload
+    slots (4 B * d; 0 for id-only stores), and its ring pointer (4 B),
+    across all L tables.  With contiguous prefix zones exactly
+    NB * (1 - min(N, N')/max(N, N')) rows move per table — the closed
+    form `repro.core.can.moved_buckets` is derived from.  Charged by the
+    node-churn driver alongside the refresh bytes, never silently."""
+    lo, hi = sorted((int(old_n), int(new_n)))
+    if lo < 1:
+        raise ValueError(f"node counts must be >= 1, got {old_n}, {new_n}")
+    moved = num_buckets - num_buckets * lo // hi
+    per_bucket = capacity * (8 + 4 * d) + 4
+    return L * moved * per_bucket
+
+
 # -- ICI byte model for the TPU runtime (DESIGN.md Sec. 2) --------------------
 
 ICI_LINK_GBPS = 50e9  # ~50 GB/s per link, v5e 2-D torus

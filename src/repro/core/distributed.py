@@ -54,7 +54,16 @@ from repro.core.store import BucketStore
 
 
 def DistConfig(*, n_shards: int, **kw) -> RuntimeConfig:
-    """Legacy constructor name: a mesh RuntimeConfig with n_shards nodes."""
+    """Legacy constructor name: a mesh RuntimeConfig with n_shards nodes.
+
+    `n_shards` is captured at construction and the returned config is
+    FROZEN — it does not track membership changes.  When node membership
+    changes post-construction (`repro.core.runtime.reshard`), a NEW
+    config is derived via `dataclasses.replace(cfg, n_nodes=...)` and the
+    old one simply describes the pre-round topology; code holding a
+    DistConfig across a reshard must re-read `runtime.cfg`, never the
+    factory argument it originally passed (DESIGN.md Sec. 9).
+    """
     return RuntimeConfig(n_nodes=n_shards, **kw)
 
 
@@ -356,3 +365,21 @@ def estimate_refresh_bytes(cfg: RuntimeConfig, capacity: int, d: int) -> int:
     nb_local = cfg.params.num_buckets // cfg.n_nodes
     per_permute = cfg.params.L * nb_local * capacity * (4 + d * 4)
     return cfg.node_bits * per_permute
+
+
+def estimate_reshard_bytes(cfg: RuntimeConfig, new_n: int, capacity: int,
+                           d: int) -> int:
+    """ICI bytes of one membership round `cfg.n_nodes -> new_n`.
+
+    Delegates to the overlay handoff model (`costmodel`) — the same
+    closed form `runtime.reshard` stamps into its `ReshardEvent`, exposed
+    here in config-typed form for byte-model consumers (the
+    bench_distributed-style estimators) next to `estimate_query_bytes` /
+    `estimate_refresh_bytes`.  Consistency with the event charge is
+    pinned in tests/test_costmodel.py."""
+    from repro.core import costmodel
+
+    return costmodel.estimate_handoff_bytes(
+        cfg.params.L, cfg.params.num_buckets, capacity, d, cfg.n_nodes,
+        new_n,
+    )

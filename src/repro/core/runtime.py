@@ -48,6 +48,7 @@ from repro.core import routing as routing_mod
 from repro.core import scoring
 from repro.core import store as store_mod
 from repro.core.can import CanTopology
+from repro.core.can import moved_buckets as can_moved_buckets
 from repro.core.corpus import DenseCorpus
 from repro.core.hashing import LshParams
 from repro.core.scoring import dedupe_topk
@@ -946,3 +947,133 @@ class IndexRuntime:
         if cache is not None:
             args += (cache[0],)
         return step(*args, qd, td)
+
+
+# -----------------------------------------------------------------------------
+# elastic membership: reshard a runtime to a new node count (DESIGN.md Sec. 9)
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardEvent:
+    """Ledger entry of one membership round (power-of-two join/leave).
+
+    `moved_buckets` counts the bucket rows (across all L tables) whose
+    owner changed; `handoff_bytes` is the Table-1-analogue byte charge of
+    shipping those rows (ids + timestamps + embedded payloads + ring
+    pointers) to the new owners.  The node-churn driver reports these
+    alongside the refresh bytes — handoff is never silently uncharged.
+    """
+
+    old_n: int
+    new_n: int
+    moved_buckets: int
+    handoff_bytes: int
+
+
+def gather_store(store: BucketStore) -> BucketStore:
+    """Host-global view of a (possibly mesh-sharded) store.
+
+    The zones are contiguous sketch-prefix slices of ONE global bucket
+    array, so the globally-assembled state is topology-free: pulling it
+    to the host is the simulation-level handoff fabric every reshard
+    routes through (real deployments ship only the moved slices — the
+    byte charge in `ReshardEvent` is computed for exactly those).
+    """
+    g = jax.device_get
+    return BucketStore(
+        ids=jnp.asarray(g(store.ids)),
+        timestamps=jnp.asarray(g(store.timestamps)),
+        write_ptr=jnp.asarray(g(store.write_ptr)),
+        payload=None if store.payload is None else jnp.asarray(
+            g(store.payload)),
+        generation=jnp.asarray(g(store.generation)),
+    )
+
+
+def reshard(
+    rt: IndexRuntime,
+    store: BucketStore,
+    new_n_nodes: int | None = None,
+    *,
+    mesh=None,
+    runtime: IndexRuntime | None = None,
+    cap_factor: float | None = None,
+) -> tuple[IndexRuntime, BucketStore, ReshardEvent]:
+    """Elastic node membership: split/merge the contiguous sketch-prefix
+    CAN zones to `new_n_nodes` owners and hand the bucket state off.
+
+    Power-of-two join/leave per the `can.py` geometry: growing N -> rN
+    splits every zone — the incumbent keeps the first subzone, r-1
+    joiners take the rest; shrinking merges sibling groups onto the
+    group's first node.  The global bucket array is INVARIANT under the
+    round (zones are slices of it), and the probe planner derives the
+    same probe set on every topology, so search results are bit-identical
+    before vs. after a reshard round-trip (pinned in tests/test_runtime.py
+    against the checked-in goldens).
+
+    `runtime=` reuses a pre-built target runtime (keeps its compiled
+    steps across repeated membership rounds); otherwise a new one is
+    built from this runtime's config with `n_nodes=new_n_nodes` (and
+    `cap_factor`, default unchanged) on `mesh` (None => the 1-node
+    mesh-free context).  NB caches are NOT migrated: their shape is
+    topology-dependent, so callers must rebuild via
+    `new_rt.refresh_cache(new_store)` — the refresh-byte charge of
+    warming the joiners' caches.
+
+    Returns (new_runtime, migrated_store, ReshardEvent).  The migrated
+    store's generation is bumped: a membership round is a state event the
+    serving layer's sketch-keyed cache must not survive.
+    """
+    from repro.core import costmodel
+
+    if runtime is not None:
+        if mesh is not None or cap_factor is not None:
+            raise ValueError(
+                "mesh=/cap_factor= don't apply to a prebuilt runtime — "
+                "build the target runtime with them instead"
+            )
+        if new_n_nodes is not None and new_n_nodes != runtime.cfg.n_nodes:
+            raise ValueError(
+                f"runtime has n_nodes={runtime.cfg.n_nodes}, "
+                f"asked for {new_n_nodes}"
+            )
+        # a membership round replaces ONLY the topology knobs: any other
+        # config drift (variant, m, probe budget, routing...) would
+        # silently change the query discipline mid-trajectory
+        if dataclasses.replace(
+            runtime.cfg, n_nodes=rt.cfg.n_nodes,
+            cap_factor=rt.cfg.cap_factor,
+        ) != rt.cfg:
+            raise ValueError(
+                "target runtime differs beyond the topology knobs: "
+                f"{runtime.cfg} vs {rt.cfg}"
+            )
+        new_rt = runtime
+    else:
+        if new_n_nodes is None:
+            raise ValueError("need new_n_nodes or a prebuilt runtime")
+        cfg = dataclasses.replace(
+            rt.cfg,
+            n_nodes=int(new_n_nodes),
+            cap_factor=float(
+                rt.cfg.cap_factor if cap_factor is None else cap_factor
+            ),
+        )
+        new_rt = IndexRuntime(cfg, mesh=mesh, batch_axes=rt.batch_axes)
+
+    host = gather_store(store)
+    host = dataclasses.replace(host, generation=host.generation + 1)
+    new_store = new_rt.shard_store(host)
+    d = 0 if host.payload is None else int(host.payload.shape[-1])
+    event = ReshardEvent(
+        old_n=rt.cfg.n_nodes,
+        new_n=new_rt.cfg.n_nodes,
+        moved_buckets=rt.cfg.params.L * can_moved_buckets(
+            rt.cfg.topo, new_rt.cfg.topo),
+        handoff_bytes=costmodel.estimate_handoff_bytes(
+            rt.cfg.params.L, host.ids.shape[1], host.ids.shape[2], d,
+            rt.cfg.n_nodes, new_rt.cfg.n_nodes,
+        ),
+    )
+    return new_rt, new_store, event

@@ -42,5 +42,21 @@ def require_host_devices(n: int) -> None:
         )
 
 
+def make_zone_mesh(n_model: int, data: int = 1):
+    """Mesh over the FIRST data*n_model host devices.
+
+    Elastic membership (`repro.core.runtime.reshard`) runs meshes of
+    several model-axis sizes in ONE process — each must build over a
+    device prefix instead of the full device set, so a 4-device process
+    can host the n_nodes=2 and n_nodes=4 topologies of one join/leave
+    schedule side by side."""
+    import jax
+
+    require_host_devices(data * n_model)
+    devs = jax.devices()[: data * n_model]
+    return compat.make_mesh((data, n_model), ("data", "model"),
+                            devices=devs)
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,153 @@
+"""Elastic-membership scenario driver: live node join/leave under content
+churn (DESIGN.md Sec. 9).
+
+Drives `repro.core.churn.run_node_churn` — interleaved membership rounds
+(zone split/merge + bucket-state handoff), soft-state content churn, and
+queries — and prints the per-epoch ledger: node count, recall, handoff
+bytes, refresh bytes, router drops.  Optionally runs the static-topology
+reference (`run_churn`) on the SAME RNG trajectory and reports the recall
+gap (the acceptance bound is 0.02; in practice the gap is 0.0 — the
+global bucket array is invariant under a membership round).
+
+Node counts > 1 need that many host devices; when the current process has
+too few, the driver re-execs itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count`` set (the flag is
+fixed at jax backend init, so it cannot be repaired in-process).
+
+    PYTHONPATH=src python -m repro.launch.node_churn --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+
+def _parse_schedule(text: str) -> tuple[int, ...]:
+    try:
+        sched = tuple(int(x) for x in text.split(",") if x.strip())
+    except ValueError as e:
+        raise SystemExit(f"bad --schedule {text!r}: {e}")
+    if not sched:
+        raise SystemExit("--schedule must name at least one node count")
+    return sched
+
+
+def run(args) -> dict:
+    import numpy as np
+
+    from repro.core.churn import (
+        ChurnConfig, NodeChurnConfig, run_churn, run_node_churn,
+    )
+
+    cfg = ChurnConfig(
+        num_users=args.users, dim=args.d, k=args.k, L=args.L,
+        capacity=args.capacity, epochs=args.epochs,
+        update_rate=args.update_rate, churn_rate=args.churn_rate,
+        refresh_every=args.refresh_every, ttl_epochs=args.ttl_epochs,
+        num_queries=args.queries, m=args.m, seed=args.seed,
+    )
+    sched = _parse_schedule(args.schedule)
+    out = run_node_churn(NodeChurnConfig(churn=cfg, schedule=sched))
+
+    print(f"[node-churn] schedule={','.join(map(str, sched))} "
+          f"refresh_every={cfg.refresh_every}")
+    print("epoch,n_nodes,recall,handoff_bytes,refresh_bytes,dropped")
+    for i in range(len(out["recalls"])):
+        print(f"{i + 1},{out['n_nodes'][i]},{out['recalls'][i]:.4f},"
+              f"{out['handoff_bytes'][i]},{out['refresh_bytes'][i]},"
+              f"{out['dropped_probes'][i]}")
+    print(f"[node-churn] mean_recall={out['mean_recall']:.4f} "
+          f"rounds={len(out['reshard_events'])} "
+          f"total_handoff_bytes={out['total_handoff_bytes']} "
+          f"total_refresh_bytes={out['total_refresh_bytes']} "
+          f"dropped={int(out['dropped_probes'].sum())}")
+
+    if args.reference:
+        ref = run_churn(cfg)
+        gap = float(np.abs(out["recalls"] - ref["recalls"]).max())
+        print(f"[node-churn] static-reference recall gap (max |diff|) = "
+              f"{gap:.4f}")
+        out["reference_gap"] = gap
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-friendly preset + sanity assertions")
+    ap.add_argument("--schedule", default="1,2,4,2,1,2,1",
+                    help="comma-separated node count per epoch "
+                         "(powers of two; last value holds)")
+    ap.add_argument("--users", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=6)
+    ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--m", type=int, default=10)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--update-rate", type=float, default=0.05)
+    ap.add_argument("--churn-rate", type=float, default=0.02)
+    ap.add_argument("--refresh-every", type=int, default=2)
+    ap.add_argument("--ttl-epochs", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-reference", dest="reference",
+                    action="store_false",
+                    help="skip the static-topology comparison run")
+    ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.users, args.d, args.k, args.L = 1200, 32, 5, 2
+        args.epochs, args.queries, args.capacity = 6, 64, 64
+        args.schedule = "1,2,4,2,1,2,1"
+        args.reference = True  # the smoke gate asserts the recall gap
+
+    need = max(_parse_schedule(args.schedule))
+    if not args.inner and need > 1:
+        # membership needs `need` host devices; XLA fixes the count at
+        # backend init, so re-exec with the flag set (jax not yet imported
+        # in THIS process only if we exec before touching it — hence the
+        # unconditional subprocess hop instead of a device-count probe).
+        env = dict(os.environ)
+        # append AFTER any pre-existing flags: XLA honors the LAST
+        # occurrence of a duplicated flag, so prepending would let an
+        # exported --xla_force_host_platform_device_count silently win
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={need}"
+        ).strip()
+        cmd = [sys.executable, "-m", "repro.launch.node_churn", "--inner"]
+        cmd += (argv if argv is not None else sys.argv[1:])
+        proc = subprocess.run(cmd, env=env)
+        raise SystemExit(proc.returncode)
+
+    out = run(args)
+
+    if args.smoke:
+        import numpy as np
+
+        from repro.core import costmodel
+
+        # the elastic run must track the static reference on the same RNG
+        # trajectory (acceptance bound), charge handoff on exactly the
+        # membership epochs, and drop nothing in the router.
+        assert out["reference_gap"] <= 0.02, out["reference_gap"]
+        assert int(out["dropped_probes"].sum()) == 0
+        n = out["n_nodes"]
+        n0 = _parse_schedule(args.schedule)[0]
+        changed = np.concatenate([[n[0] != n0], n[1:] != n[:-1]])
+        assert np.all((out["handoff_bytes"] > 0) == changed), (
+            out["handoff_bytes"], n)
+        ev = out["reshard_events"][0]
+        assert ev.handoff_bytes == costmodel.estimate_handoff_bytes(
+            args.L, 1 << args.k, args.capacity, args.d, ev.old_n, ev.new_n)
+        print("[smoke] OK")
+    return out
+
+
+if __name__ == "__main__":
+    main()

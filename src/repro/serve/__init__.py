@@ -23,6 +23,10 @@ from repro.serve.frontend import (  # noqa: F401
     dispatch_pad,
     pow2_pad,
 )
-from repro.serve.lifecycle import ServeChurnConfig, run_serve_churn  # noqa: F401
+from repro.serve.lifecycle import (  # noqa: F401
+    ServeChurnConfig,
+    run_serve_churn,
+    run_serve_reshard,
+)
 from repro.serve.qcache import CacheEntry, QueryCache  # noqa: F401
 from repro.serve.telemetry import ServeStats  # noqa: F401

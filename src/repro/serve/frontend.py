@@ -116,7 +116,18 @@ class RuntimeBackend:
         self._cost: costmodel.QueryCost | None = None
         self.traces = 0
         self.sketch_traces = 0
+        self._bind()
 
+    def _bind(self) -> None:
+        """(Re)build the jit'd dispatch/sketch for the CURRENT runtime.
+
+        Called at construction and again on every topology swap
+        (`update(runtime=...)`): the dispatch shape, sharding spec, and
+        exclusion discipline are all functions of the runtime, so a
+        resharded runtime gets a fresh binding.  `traces` keeps
+        accumulating across rebinds (each swap pays its retraces — the
+        shape-budget tests count within one binding)."""
+        runtime = self._rt
         if runtime.is_distributed:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -131,7 +142,9 @@ class RuntimeBackend:
 
             self._dispatch_jit = jax.jit(_impl)
         else:
-            step = runtime.search_step_fn(with_corpus=corpus is not None)
+            self._qspec = None
+            step = runtime.search_step_fn(
+                with_corpus=self._corpus is not None)
 
             def _impl(hp, store_ids, payload, q, ex, m):
                 self.traces += 1  # runs at trace time only
@@ -174,33 +187,80 @@ class RuntimeBackend:
     def generation(self) -> int:
         return self._generation
 
-    def update(self, store=None, corpus=None, cache=None) -> None:
+    def update(self, store=None, corpus=None, cache=None, *,
+               runtime=None, hyperplanes=None) -> None:
         """Install new store state (and/or corpus / refreshed neighbor
         cache) — a write epoch.  The host-side generation snapshot is what
         cache lookups compare against, so it syncs here, once per update,
         off the query path.  It bumps on EVERY update, even when the store
         object is unchanged: a corpus swap or NB-cache refresh also
-        changes scores, so cached results must die with it."""
-        if corpus is not None and self._rt.is_distributed:
+        changes scores, so cached results must die with it.
+
+        `runtime=` accepts a RESHARDED runtime (a membership round,
+        DESIGN.md Sec. 9): the dispatch is rebound to the new topology
+        and `store=` (the migrated store, placed by the reshard) becomes
+        mandatory.  The generation bump is what keeps the sketch-keyed
+        cache honest across the swap — a result computed on the old
+        topology is bit-identical to the new one's, but its entry still
+        dies with the round (membership is a state event).  The NB cache
+        never survives a swap (its shape is topology-bound): pass the
+        rewarmed one or it resets to None.  A pre-existing corpus is
+        dropped when swapping to a mesh runtime, whose shards embed
+        payloads in their bucket slots.  Callers serving live traffic
+        should swap through `RetrievalFrontend.update_backend`, which
+        drains in-flight batches on the OLD topology first."""
+        # -- validate the whole request before mutating anything ----------
+        new_rt = self._rt if runtime is None else runtime
+        if runtime is not None and store is None:
+            raise ValueError(
+                "a topology swap must install the migrated store "
+                "(reshard returns it)"
+            )
+        if runtime is not None and runtime.is_distributed \
+                and store.payload is None:
+            # the mesh dispatch scores embedded slot payloads; an
+            # ids-only store would only fail later, at trace time,
+            # with the backend already mutated
+            raise ValueError(
+                "swapping to a mesh runtime needs a payload-carrying "
+                "store (mesh shards embed payloads in their bucket slots)"
+            )
+        if runtime is None and hyperplanes is not None:
+            raise ValueError("hyperplanes only change with a runtime swap")
+        if corpus is not None and new_rt.is_distributed:
             # same guard as __init__: the mesh dispatch path scores slot
             # payloads and would silently ignore an installed corpus
             raise ValueError("corpus scoring is 1-node only (mesh shards "
                              "embed payloads in their bucket slots)")
-        if corpus is not None and self._corpus is None:
+        if corpus is not None and self._corpus is None and runtime is None:
             # the dispatch jit was baked for slot-payload scoring at
             # construction; a late corpus would crash it at trace time
             raise ValueError("this backend was built without a corpus "
                              "(slot-payload scoring); corpus swaps need a "
                              "corpus-built backend")
-        if cache is not None and not self._rt.is_distributed:
+        if cache is not None and not new_rt.is_distributed:
             raise ValueError("neighbor caches exist only on mesh runtimes "
                              "(the 1-node topology has no node bits)")
+
+        # -- apply (each field assigned once; _bind reads the final state)
         if store is not None:
             self._store = store
         if corpus is not None:
             self._corpus = corpus
         if cache is not None:
             self._cache = cache
+        if runtime is not None:
+            self._rt = runtime
+            if hyperplanes is not None:
+                self._hp = hyperplanes
+            # topology-bound state never crosses a swap: a mesh target
+            # scores slot payloads (no corpus), and the NB cache dies
+            # unless the rewarmed one arrived with the swap
+            if runtime.is_distributed:
+                self._corpus = None
+            if cache is None:
+                self._cache = None
+            self._bind()
         self._generation = max(
             int(np.asarray(self._store.generation)), self._generation + 1
         )
@@ -405,6 +465,24 @@ class RetrievalFrontend:
     def flush(self) -> None:
         while self._size:
             self.step()
+
+    def update_backend(self, **kw) -> None:
+        """Live backend update through the frontend — REQUIRED for topology
+        swaps while serving: in-flight batches (everything already in the
+        ring) drain on the OLD topology first, then the new runtime/store
+        install via `backend.update(**kw)`.  The generation bump that
+        comes with every update is what makes each cached result from
+        before the swap stale — the sketch-keyed cache serves nothing
+        across a reshard (tests/test_serve.py)."""
+        rt = kw.get("runtime")
+        if rt is not None and rt.is_distributed and self.cfg.m > rt.cfg.m - 1:
+            raise ValueError(
+                f"serving m={self.cfg.m} exceeds the new runtime's headroom "
+                f"(cfg.m={rt.cfg.m}; mesh dispatch keeps one result for "
+                "host-side self-exclusion)"
+            )
+        self.flush()  # in-flight batches complete on the old topology
+        self.backend.update(**kw)
 
     # -- synchronous convenience (tests / examples) ---------------------------
 

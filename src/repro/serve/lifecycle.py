@@ -20,9 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, metrics
-from repro.core.churn import ChurnConfig, _lsh_setup, _trajectory
+from repro.core.churn import ChurnConfig, _lsh_setup, _pad_to, _trajectory
 from repro.core.corpus import DenseCorpus
 from repro.core.engine import EngineConfig, LshEngine
+from repro.core.runtime import IndexRuntime, RuntimeConfig, reshard
 from repro.core.store import expire, insert_batch, make_store
 from repro.serve.frontend import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
@@ -104,4 +105,94 @@ def run_serve_churn(cfg: ServeChurnConfig) -> dict:
         stats=frontend.stats,
         summary=frontend.stats.summary(),
         refresh_every=c.refresh_every,
+    )
+
+
+def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
+    """Churn trajectory through the frontend with a LIVE topology swap at
+    every read epoch (the serving half of elastic membership, DESIGN.md
+    Sec. 9).
+
+    One long-lived `RetrievalFrontend` over a payload-carrying store; the
+    backend alternates between the 1-node runtime and a 1-shard mesh
+    runtime — the two execution contexts a single device can host — via
+    `runtime.reshard` + `frontend.update_backend`.  Each read epoch
+    serves its query batch three times: before the swap, right after it
+    (every cached entry must be stale — the generation bump — and the
+    recomputed ids must be IDENTICAL, the reshard bit-identity contract
+    live on the serving path), and once more (hits again, same ids).
+    Soft-state maintenance runs between read epochs on whichever topology
+    is current; recall matches the `run_churn` reference trajectory
+    exactly (tests/test_serve.py).
+    """
+    c = cfg.churn
+    params, hp = _lsh_setup(c)
+    if mesh is None:
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+    # m+1 headroom: the mesh dispatch has no wire exclusion, the serving
+    # layer filters the self id host-side (the churn drivers' convention)
+    rcfg = RuntimeConfig(params=params, variant=cfg.variant, m=c.m + 1,
+                         n_nodes=1, cap_factor=1.0)
+    rt = IndexRuntime(rcfg)
+    rt_other = {False: IndexRuntime(rcfg, mesh=mesh), True: rt}
+    store = make_store(c.L, params.num_buckets, c.capacity,
+                       payload_dim=c.dim)
+
+    backend = RuntimeBackend(rt, hyperplanes=hp, store=store)
+    frontend = RetrievalFrontend(
+        backend,
+        FrontendConfig(
+            m=c.m, max_batch=cfg.max_batch,
+            queue_capacity=cfg.queue_capacity, cache=cfg.cache,
+        ),
+    )
+
+    recalls, generations = [], []
+    repeat_mismatches = swaps = 0
+    total_handoff = 0
+    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(c):
+        if do_refresh:  # -- write epoch (current topology) ---------------
+            nu = -(-c.num_users // rt.n_devices) * rt.n_devices
+            vpad = _pad_to(vecs, nu, 0.0)
+            ids_pad = _pad_to(np.arange(c.num_users, dtype=np.int32), nu, -1)
+            store = rt.insert(hp, store, vpad, ids_pad, epoch)
+            if epoch > 0:
+                store = rt.expire(store, epoch, ttl=c.ttl_epochs)
+            store = rt.payload_sync(store, vpad)
+            frontend.update_backend(store=store)
+        if epoch == 0:
+            continue
+
+        # -- read epoch: serve, swap topology live, serve again ------------
+        q = vecs[qidx]
+        ids_pre, _ = frontend.search(q, exclude=qidx)
+        recalls.append(metrics.recall_at_m(ids_pre, ideal))
+
+        rt_new = rt_other[rt.is_distributed]
+        rt, store, ev = reshard(rt, store, runtime=rt_new)
+        total_handoff += ev.handoff_bytes
+        swaps += 1
+        frontend.update_backend(runtime=rt, store=store)
+
+        for _ in range(2):  # post-swap recompute, then cache-served
+            ids_post, _ = frontend.search(q, exclude=qidx)
+            if not np.array_equal(ids_post, ids_pre):
+                repeat_mismatches += 1
+        generations.append(backend.generation)
+
+    cache = frontend.cache
+    return dict(
+        recalls=np.asarray(recalls),
+        final_recall=float(recalls[-1]),
+        mean_recall=float(np.mean(recalls)),
+        generations=np.asarray(generations),
+        repeat_mismatches=repeat_mismatches,
+        swaps=swaps,
+        total_handoff_bytes=int(total_handoff),
+        stale_evictions=0 if cache is None else cache.stale_evictions,
+        cache_hits=0 if cache is None else cache.hits,
+        stats=frontend.stats,
+        summary=frontend.stats.summary(),
     )

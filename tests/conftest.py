@@ -30,6 +30,16 @@ try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAS_HYPOTHESIS = True
+    # Pinned profile: the property suite runs in tier-1 CI, so it must be
+    # deterministic — derandomize derives examples from the test body
+    # alone (no RNG state, no example database growth between runs).
+    # Override locally with HYPOTHESIS_PROFILE=dev for randomized search.
+    settings.register_profile(
+        "tier1", derandomize=True, deadline=None, max_examples=50,
+        database=None,
+    )
+    settings.register_profile("dev", deadline=None, max_examples=200)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "tier1"))
 except ImportError:
     HAS_HYPOTHESIS = False
 

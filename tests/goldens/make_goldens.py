@@ -1,18 +1,28 @@
-"""Regenerate the engine golden outputs (`engine_v1.npz`).
+"""Regenerate the golden outputs (`engine_v1.npz`, `runtime_2node_v1.npz`).
 
-The goldens were captured from the PRE-runtime-refactor `LshEngine`
-(PR 3 tree) and pin its exact search/contains outputs: the refactored
+`engine_v1.npz` was captured from the PRE-runtime-refactor `LshEngine`
+(PR 3 tree) and pins its exact search/contains outputs: the refactored
 engine façade and the 1-node `IndexRuntime` must keep returning
-bit-identical ids (tests/test_runtime.py).  Regenerating is therefore
-ONLY legitimate when the reference semantics intentionally change —
-never to make a failing equivalence test pass.
+bit-identical ids (tests/test_runtime.py).  `runtime_2node_v1.npz` pins
+the 2-node mesh runtime's exact outputs on the SAME corpus/queries (no
+exclusion — the mesh wire path has none), and is what the elastic
+reshard round-trip (1 -> 2 -> 1 nodes) is checked against in the slow
+suite.  Regenerating either is ONLY legitimate when the reference
+semantics intentionally change — never to make a failing equivalence
+test pass.
 
     PYTHONPATH=src python tests/goldens/make_goldens.py
+
+(The 2-node build needs 2 host devices; the script spawns itself in a
+subprocess with XLA_FLAGS set, since the device count is fixed at jax
+backend init.)
 """
 
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 
 import jax.numpy as jnp
 import numpy as np
@@ -33,7 +43,8 @@ PROBE_CELLS = [
 ]
 
 
-def build():
+def _build_setup():
+    """The shared corpus/store/query world of BOTH goldens."""
     rng = np.random.default_rng(17)
     vecs = rng.standard_normal((N, D)).astype(np.float32)
     vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
@@ -42,11 +53,16 @@ def build():
     codes = sketch_codes_batched(jnp.asarray(vecs), h)
     store = build_store_host(codes, params.num_buckets, capacity=64,
                              payload=vecs)
+    targets = rng.integers(0, N, size=NQ).astype(np.int32)
+    return params, h, store, vecs, targets
+
+
+def build():
+    params, h, store, vecs, targets = _build_setup()
     ids_only = BucketStore(store.ids, store.timestamps, store.write_ptr, None)
     corpus = DenseCorpus(jnp.asarray(vecs))
     q = jnp.asarray(vecs[:NQ])
     exclude = np.arange(NQ, dtype=np.int32)
-    targets = rng.integers(0, N, size=NQ).astype(np.int32)
 
     out = {}
     for variant in ("lsh", "nb", "cnb"):
@@ -61,7 +77,47 @@ def build():
     return out
 
 
+def build_two_node():
+    """2-node mesh runtime outputs (needs 2 host devices)."""
+    from repro.core.runtime import IndexRuntime, RuntimeConfig
+    from repro.launch.mesh import make_zone_mesh
+
+    params, h, store, vecs, targets = _build_setup()
+    q = jnp.asarray(vecs[:NQ])
+    mesh = make_zone_mesh(2)
+
+    out = {"targets": targets}
+    for variant in ("lsh", "nb", "cnb"):
+        rt = IndexRuntime(
+            RuntimeConfig(params=params, variant=variant, m=M, n_nodes=2,
+                          cap_factor=float(L)),
+            mesh=mesh,
+        )
+        store_sh = rt.shard_store(store)
+        cache = rt.refresh_cache(store_sh) if variant == "cnb" else None
+        ids, scores, dropped = rt.search(h, store_sh, q, cache=cache)
+        assert int(dropped) == 0, (variant, int(dropped))
+        out[f"search_ids_{variant}"] = np.asarray(ids)
+        out[f"search_scores_{variant}"] = np.asarray(scores)
+        hits, cdrop = rt.contains(h, store_sh, q, targets, cache=cache)
+        assert int(cdrop) == 0, (variant, int(cdrop))
+        out[f"contains_{variant}"] = np.asarray(hits)
+    return out
+
+
 if __name__ == "__main__":
-    path = os.path.join(os.path.dirname(__file__), "engine_v1.npz")
-    np.savez_compressed(path, **build())
-    print(f"wrote {path}")
+    here = os.path.dirname(os.path.abspath(__file__))
+    if "--two-node" in sys.argv:
+        path = os.path.join(here, "runtime_2node_v1.npz")
+        np.savez_compressed(path, **build_two_node())
+        print(f"wrote {path}")
+    else:
+        path = os.path.join(here, "engine_v1.npz")
+        np.savez_compressed(path, **build())
+        print(f"wrote {path}")
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--two-node"],
+            env=env, check=True,
+        )

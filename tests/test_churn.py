@@ -1,11 +1,15 @@
-"""Soft-state freshness under churn (paper Sec. 4.1 maintenance claims)."""
+"""Soft-state freshness under churn (paper Sec. 4.1 maintenance claims),
+plus elastic node membership (node join/leave, DESIGN.md Sec. 9)."""
 
 import dataclasses
 
+import numpy as np
 import pytest
 
 from conftest import run_in_subprocess
-from repro.core.churn import ChurnConfig, run_churn
+from repro.core.churn import (
+    ChurnConfig, NodeChurnConfig, run_churn, run_node_churn,
+)
 
 
 def test_refresh_recovers_recall():
@@ -63,3 +67,90 @@ print("CHURN-DIST-OK", diff)
 def test_distributed_churn_matches_single_host():
     out = run_in_subprocess(CHURN_DIST, devices=2)
     assert "CHURN-DIST-OK" in out
+
+
+# -----------------------------------------------------------------------------
+# elastic node membership (node join/leave during the trajectory)
+# -----------------------------------------------------------------------------
+
+
+def test_node_churn_static_schedule_is_run_churn():
+    """A constant all-1 schedule must leave the trajectory untouched —
+    the membership machinery in the unified loop cannot perturb the
+    static reference it is compared against."""
+    cfg = ChurnConfig(num_users=300, dim=16, k=4, L=2, capacity=32,
+                      epochs=3, num_queries=24, m=5, refresh_every=2,
+                      seed=1)
+    static = run_churn(cfg)
+    elastic = run_node_churn(NodeChurnConfig(churn=cfg, schedule=(1,)))
+    np.testing.assert_array_equal(elastic["recalls"], static["recalls"])
+    # no rounds fired: nothing moved, nothing charged
+    assert elastic["reshard_events"] == []
+    assert int(elastic["handoff_bytes"].sum()) == 0
+    assert np.all(elastic["n_nodes"] == 1)
+    # the static driver reports the same (all-zero) membership surface
+    assert int(static["total_handoff_bytes"]) == 0
+    assert static["handoff_bytes"].shape == static["recalls"].shape
+
+
+def test_node_churn_schedule_validation():
+    from repro.core.churn import _expand_schedule
+
+    assert _expand_schedule((1, 2), 4) == [1, 2, 2, 2, 2]
+    assert _expand_schedule((1, 2, 4, 2, 1, 2, 1, 4), 3) == [1, 2, 4, 2]
+    with pytest.raises(ValueError, match="powers of two"):
+        _expand_schedule((1, 3), 4)
+    with pytest.raises(ValueError, match="empty"):
+        _expand_schedule((), 4)
+    cfg = ChurnConfig(num_users=64, epochs=2, num_queries=8)
+    with pytest.raises(ValueError, match="powers of two"):
+        run_node_churn(NodeChurnConfig(churn=cfg, schedule=(6,)))
+
+
+NODE_CHURN = r"""
+import numpy as np
+from repro.core.churn import (
+    ChurnConfig, NodeChurnConfig, run_churn, run_node_churn,
+)
+from repro.core import costmodel
+
+cfg = ChurnConfig(num_users=1200, dim=32, k=5, L=2, capacity=64, epochs=6,
+                  num_queries=64, update_rate=0.1, churn_rate=0.03,
+                  refresh_every=2, seed=3)
+static = run_churn(cfg)
+# joins up to 4 nodes, leaves back down, rejoin — every transition kind
+elastic = run_node_churn(
+    NodeChurnConfig(churn=cfg, schedule=(1, 2, 4, 2, 1, 2, 1)))
+
+diff = float(np.abs(elastic["recalls"] - static["recalls"]).max())
+# acceptance: within 0.02 of the static-topology reference on the same
+# RNG trajectory (in practice exact: the bucket array is round-invariant)
+assert diff <= 0.02, (diff, static["recalls"].tolist(),
+                      elastic["recalls"].tolist())
+assert int(elastic["dropped_probes"].sum()) == 0
+
+# handoff charged on EVERY membership epoch, never silently uncharged,
+# and each event matches the closed form
+n = elastic["n_nodes"]
+changed = np.concatenate([[n[0] != 1], n[1:] != n[:-1]])
+assert np.array_equal(elastic["handoff_bytes"] > 0, changed), (
+    elastic["handoff_bytes"].tolist(), n.tolist())
+assert len(elastic["reshard_events"]) == int(changed.sum())
+for ev in elastic["reshard_events"]:
+    want = costmodel.estimate_handoff_bytes(
+        cfg.L, 1 << cfg.k, cfg.capacity, cfg.dim, ev.old_n, ev.new_n)
+    assert ev.handoff_bytes == want > 0, ev
+# mesh epochs also charge cache-rewarm refresh bytes; 1-node epochs don't
+assert np.all((elastic["refresh_bytes"] > 0) == (n > 1)), (
+    elastic["refresh_bytes"].tolist(), n.tolist())
+print("NODE-CHURN-OK", diff)
+"""
+
+
+@pytest.mark.slow
+def test_node_churn_matches_static_reference():
+    """The weekly equivalence gate: interleaved join/leave epochs (1 ->
+    2 -> 4 -> 2 -> 1 nodes) + content churn + queries track the static
+    run_churn trajectory, with handoff bytes reported per round."""
+    out = run_in_subprocess(NODE_CHURN, devices=4)
+    assert "NODE-CHURN-OK" in out

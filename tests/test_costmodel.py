@@ -69,3 +69,39 @@ def test_message_counter_matches_closed_form_shape():
         c.add_result()
     assert c.total == table1("cnb", k, L).messages
     assert isinstance(table1("cnb", k, L), QueryCost)
+
+
+def test_handoff_bytes_closed_form():
+    """Elastic membership (DESIGN.md Sec. 9): the handoff charge follows
+    the moved-zone fraction and the per-bucket wire size exactly."""
+    from repro.core.costmodel import estimate_handoff_bytes
+
+    # n -> n is a no-op round: nothing moves, nothing is charged
+    assert estimate_handoff_bytes(3, 32, 16, 8, 2, 2) == 0
+    # 1 -> 2 moves half the bucket space; per moved bucket row:
+    # capacity * (id 4B + ts 4B + payload 4B*d) + ring pointer 4B
+    per_bucket = 16 * (8 + 4 * 8) + 4
+    assert estimate_handoff_bytes(3, 32, 16, 8, 1, 2) == 3 * 16 * per_bucket
+    # join and the leave that undoes it cost the same bytes
+    assert estimate_handoff_bytes(3, 32, 16, 8, 4, 1) == \
+        estimate_handoff_bytes(3, 32, 16, 8, 1, 4)
+    # id-only stores (d = 0) still ship ids + timestamps + pointers
+    assert estimate_handoff_bytes(1, 8, 4, 0, 1, 2) == 4 * (4 * 8 + 4)
+    # the charge matches the geometry module's moved-bucket count
+    from repro.core.can import CanTopology, moved_buckets
+
+    old, new = CanTopology(5, 2), CanTopology(5, 8)
+    moved = moved_buckets(old, new)
+    assert estimate_handoff_bytes(2, 32, 16, 8, 2, 8) == \
+        2 * moved * per_bucket
+    with pytest.raises(ValueError):
+        estimate_handoff_bytes(3, 32, 16, 8, 0, 2)
+    # the ICI-side alias agrees with the overlay model (and thus with
+    # the ReshardEvent charge, which uses the overlay form directly)
+    from repro.core import distributed as dist
+    from repro.core.hashing import LshParams
+
+    cfg = dist.DistConfig(params=LshParams(d=8, k=5, L=2, seed=0),
+                          n_shards=2)
+    assert dist.estimate_reshard_bytes(cfg, 8, capacity=16, d=8) == \
+        estimate_handoff_bytes(2, 32, 16, 8, 2, 8)

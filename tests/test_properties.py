@@ -1,0 +1,196 @@
+"""Property-based invariant suite (hypothesis, behind the conftest guard).
+
+Two families of invariants that example tests can only spot-check:
+
+  * CAN geometry — the traced (jnp) and host (np) coordinate backends of
+    `CanTopology` agree everywhere, `code_of(node_of, local_of)` is the
+    identity, zones tile the bucket space, and the elastic-membership
+    closed form (`moved_buckets`) matches an exact owner-array count for
+    every power-of-two join/leave round;
+  * routing conservation — every planned probe is either delivered to its
+    destination buffer exactly once or counted in `dropped`, never both
+    and never silently lost, over random destination plans and
+    capacities (the counted-never-silent contract every distributed step
+    builds on).
+
+Each invariant lives in a plain `_check_*` helper so the suite degrades
+gracefully: the hypothesis tests explore the space when the package is
+installed (pinned deterministic profile, see conftest), and the
+`*_examples` twins sweep a fixed seeded grid either way — the invariants
+are always exercised in tier-1, hypothesis only widens the net.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from conftest import given, st  # hypothesis or skip-fallback
+
+from repro.core.can import CanTopology, moved_buckets, survivor_of
+from repro.core.routing import (
+    build_send_buffer, plan_routes, return_to_origin,
+)
+
+# -----------------------------------------------------------------------------
+# CAN geometry invariants
+# -----------------------------------------------------------------------------
+
+
+def _check_can_coordinates(k: int, a: int, codes: np.ndarray) -> None:
+    """jnp/np backend agreement + node/local reconstruction round-trip."""
+    topo = CanTopology(k=k, n_nodes=1 << a)
+    codes = np.asarray(codes, dtype=np.uint32)
+
+    n_np = topo.node_of_np(codes)
+    l_np = topo.local_of_np(codes)
+    # the traced backend computes the same coordinates
+    assert np.array_equal(np.asarray(topo.node_of(codes)), n_np)
+    assert np.array_equal(np.asarray(topo.local_of(codes)), l_np)
+    # coordinates are in range and reconstruct the code exactly
+    assert n_np.max(initial=0) < topo.n_nodes
+    assert l_np.max(initial=0) < topo.buckets_per_node
+    rebuilt = np.asarray(
+        [topo.code_of(int(n), int(l)) for n, l in zip(n_np, l_np)],
+        dtype=np.uint32,
+    )
+    assert np.array_equal(rebuilt, codes)
+    # every code sits inside its owner's contiguous zone
+    for c, n in zip(codes, n_np):
+        start, end = topo.zone_range(int(n))
+        assert start <= int(c) < end
+
+
+def _check_zone_tiling(k: int, a: int) -> None:
+    """Zones partition the bucket space: disjoint, contiguous, complete."""
+    topo = CanTopology(k=k, n_nodes=1 << a)
+    covered = []
+    for node in range(topo.n_nodes):
+        start, end = topo.zone_range(node)
+        assert end - start == topo.buckets_per_node
+        covered.extend(range(start, end))
+    assert covered == list(range(1 << k))
+
+
+def _check_moved_buckets(k: int, a_old: int, a_new: int) -> None:
+    """The handoff closed form equals the exact owner-array count.
+
+    A bucket survives in place iff its old owner is a survivor of the
+    round (for a leave: the first node of its sibling group) AND its new
+    owner is that survivor's image — everything else is handed off.
+    """
+    old = CanTopology(k=k, n_nodes=1 << a_old)
+    new = CanTopology(k=k, n_nodes=1 << a_new)
+    codes = np.arange(1 << k, dtype=np.uint32)
+    own_old = old.node_of_np(codes)
+    own_new = new.node_of_np(codes)
+    if new.n_nodes >= old.n_nodes:
+        survives = np.ones_like(own_old, dtype=bool)  # joins: all survive
+    else:
+        r = old.n_nodes // new.n_nodes
+        survives = own_old % r == 0
+    stays = survives & (own_new == survivor_of(old, new, own_old))
+    moved_exact = int((~stays).sum())
+    assert moved_buckets(old, new) == moved_exact
+    # symmetry: a join and the leave that undoes it move the same rows
+    assert moved_buckets(old, new) == moved_buckets(new, old)
+
+
+@given(st.integers(1, 12), st.integers(0, 6), st.integers(0, 2**32 - 1))
+def test_can_coordinates_property(k, a, seed):
+    a = min(a, k)
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << k, size=32, dtype=np.uint32)
+    _check_can_coordinates(k, a, codes)
+
+
+@given(st.integers(1, 10), st.integers(0, 5))
+def test_zone_tiling_property(k, a):
+    _check_zone_tiling(k, min(a, k))
+
+
+@given(st.integers(1, 12), st.integers(0, 6), st.integers(0, 6))
+def test_moved_buckets_property(k, a_old, a_new):
+    _check_moved_buckets(k, min(a_old, k), min(a_new, k))
+
+
+def test_can_invariants_examples():
+    """Seeded sweep of the same invariants (runs with or without
+    hypothesis — the property tests only widen the net)."""
+    rng = np.random.default_rng(7)
+    for k in (1, 3, 6, 9, 12):
+        for a in range(0, min(k, 5) + 1):
+            codes = rng.integers(0, 1 << k, size=48, dtype=np.uint32)
+            _check_can_coordinates(k, a, codes)
+            _check_zone_tiling(k, a)
+            for a_new in range(0, min(k, 5) + 1):
+                _check_moved_buckets(k, a, a_new)
+
+
+# -----------------------------------------------------------------------------
+# routing conservation invariants
+# -----------------------------------------------------------------------------
+
+
+def _check_routing_conservation(
+    dest: np.ndarray, n_dests: int, cap: int
+) -> None:
+    """Exactly-once delivery or counted drop — never both, never silent."""
+    dest = np.asarray(dest, dtype=np.int32)
+    n = dest.shape[0]
+    route = plan_routes(dest, n_dests, cap)
+    ok = np.asarray(route.ok)
+    dropped = int(route.dropped)
+
+    # conservation: every planned item is delivered xor counted dropped
+    assert int(ok.sum()) + dropped == n
+    # the drop count is exactly the per-destination overflow
+    counts = np.bincount(dest, minlength=n_dests)
+    assert dropped == int(np.maximum(counts - cap, 0).sum())
+
+    # payload values are distinct, so the buffer tells us WHO landed:
+    # each surviving item appears exactly once, at its own destination,
+    # and no dropped item's value appears anywhere.
+    values = np.arange(10, 10 + n, dtype=np.int32)  # distinct, > fill
+    buf = np.asarray(
+        build_send_buffer(route, n_dests, cap, values, fill=-1)
+    )
+    assert buf.shape == (n_dests, cap)
+    landed = buf[buf >= 0]
+    order = np.asarray(route.order)
+    ok_orig = np.zeros(n, dtype=bool)
+    ok_orig[order] = ok  # ok is in destination-sorted order
+    assert sorted(landed.tolist()) == sorted(values[ok_orig].tolist())
+    for d in range(n_dests):
+        row = buf[d][buf[d] >= 0]
+        assert np.all(dest[row - 10] == d)  # landed at the planned dest
+
+    # the origin-side gather returns each survivor's own result and the
+    # fill sentinel (never another item's slot) for every dropped item
+    back = return_to_origin(route, buf, fill=-1)
+    back = np.asarray(back)
+    assert np.array_equal(back[ok_orig], values[ok_orig])
+    assert np.all(back[~ok_orig] == -1)
+
+
+@given(
+    st.integers(1, 8),                 # n_dests
+    st.integers(1, 16),                # cap
+    st.lists(st.integers(0, 7), min_size=1, max_size=64),
+)
+def test_routing_conservation_property(n_dests, cap, dests):
+    dest = np.asarray(dests, dtype=np.int32) % n_dests
+    _check_routing_conservation(dest, n_dests, cap)
+
+
+def test_routing_conservation_examples():
+    rng = np.random.default_rng(11)
+    for n_dests, cap, n in [
+        (1, 1, 1), (2, 1, 8), (4, 3, 40), (8, 16, 64), (3, 2, 17),
+        (5, 4, 64),
+    ]:
+        for _ in range(4):
+            dest = rng.integers(0, n_dests, size=n).astype(np.int32)
+            _check_routing_conservation(dest, n_dests, cap)
+    # adversarial: everything to one destination (max overflow)
+    _check_routing_conservation(np.zeros(32, np.int32), 4, 3)
+    # no overflow possible
+    _check_routing_conservation(np.arange(8, dtype=np.int32) % 8, 8, 8)

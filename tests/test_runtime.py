@@ -207,6 +207,155 @@ def test_churn_driver_dict_surface():
     assert out["store_generation"] > 0
 
 
+def test_reshard_roundtrip_local_mesh_local(setup, single_mesh):
+    """Elastic membership on one device: 1-node mesh-free -> 1-shard
+    shard_map context -> back.  The degenerate round (no zone moves, zero
+    handoff bytes) still exercises the full swap machinery — runtime
+    rebuild, store migration, generation bump — and the round trip is
+    bit-identical."""
+    from repro.core.runtime import gather_store, reshard
+
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M,
+                                    cap_factor=float(L)))
+    q = vecs[:NQ]
+    ids0, sc0, _ = rt.search(h, store, q)
+    gen0 = int(store.generation)
+
+    rt2, store2, ev = reshard(rt, store, 1, mesh=single_mesh)
+    assert rt2.is_distributed and ev.old_n == ev.new_n == 1
+    assert ev.moved_buckets == 0 and ev.handoff_bytes == 0
+    assert int(store2.generation) == gen0 + 1  # membership = state event
+    ids1, _, drop = rt2.search(h, store2, q)
+    assert int(drop) == 0
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+
+    rt3, store3, _ = reshard(rt2, store2, 1)
+    assert not rt3.is_distributed
+    ids2, sc2, _ = rt3.search(h, store3, q)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(sc0), np.asarray(sc2))
+    # the global bucket array is invariant under the round trip
+    g0, g3 = gather_store(store), gather_store(store3)
+    np.testing.assert_array_equal(np.asarray(g0.ids), np.asarray(g3.ids))
+    np.testing.assert_array_equal(np.asarray(g0.payload),
+                                  np.asarray(g3.payload))
+    assert int(store3.generation) == gen0 + 2
+
+
+def test_reshard_validates_arguments(setup, single_mesh):
+    from repro.core.runtime import reshard
+
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(params=params, variant="cnb", m=M))
+    with pytest.raises(ValueError, match="new_n_nodes or a prebuilt"):
+        reshard(rt, store)
+    with pytest.raises(ValueError, match="needs a mesh"):
+        reshard(rt, store, 2)  # multi-node without a mesh
+    other = IndexRuntime(
+        RuntimeConfig(params=params, variant="cnb", m=M), mesh=single_mesh)
+    with pytest.raises(ValueError, match="n_nodes"):
+        reshard(rt, store, 2, runtime=other)  # runtime/count mismatch
+
+
+def test_reshard_keeps_config_and_scales_caps(setup, single_mesh):
+    """A membership round replaces ONLY the topology knobs: the probe
+    discipline and m survive, cap_factor rescales when asked (the
+    DistConfig legacy factory's captured n_shards does NOT track this —
+    always re-read runtime.cfg, see DESIGN.md Sec. 9)."""
+    from repro.core.runtime import reshard
+
+    params, h, store, ids_only, corpus, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(
+        params=params, variant="cnb", m=M, num_probes=2, cap_factor=2.0))
+    rt2, _, _ = reshard(rt, store, 1, mesh=single_mesh, cap_factor=4.0)
+    assert rt2.cfg.num_probes == 2 and rt2.cfg.m == M
+    assert rt2.cfg.cap_factor == 4.0
+    rt3, _, _ = reshard(rt2, store, 1)
+    assert rt3.cfg.cap_factor == 4.0  # unchanged unless asked
+
+
+@pytest.mark.slow
+def test_runtime_two_node_matches_golden():
+    """The 2-node mesh runtime reproduces its checked-in golden
+    (tests/goldens/runtime_2node_v1.npz) bit-exactly."""
+    from conftest import run_in_subprocess
+
+    out = run_in_subprocess(
+        """
+        import os
+        import numpy as np
+        import tests.goldens.make_goldens as mg
+
+        golden = dict(np.load(os.path.join(
+            os.path.dirname(mg.__file__), "runtime_2node_v1.npz")))
+        got = mg.build_two_node()
+        for key, want in golden.items():
+            if key.startswith("search_scores"):
+                np.testing.assert_allclose(got[key], want, atol=1e-6)
+            else:
+                np.testing.assert_array_equal(got[key], want, err_msg=key)
+        print("TWO-NODE-GOLDEN-OK")
+        """,
+        devices=2,
+    )
+    assert "TWO-NODE-GOLDEN-OK" in out
+
+
+@pytest.mark.slow
+def test_reshard_1_2_1_roundtrip_pins_goldens():
+    """The acceptance gate: a real 1 -> 2 -> 1 membership round trip is
+    bit-identical to the pre-reshard golden (engine_v1.npz), the 2-node
+    midpoint matches ITS golden, and the handoff is charged."""
+    from conftest import run_in_subprocess
+
+    out = run_in_subprocess(
+        """
+        import os
+        import numpy as np
+        import tests.goldens.make_goldens as mg
+        from repro.core import costmodel
+        from repro.core.runtime import IndexRuntime, RuntimeConfig, reshard
+        from repro.launch.mesh import make_zone_mesh
+
+        here = os.path.dirname(mg.__file__)
+        eng_g = dict(np.load(os.path.join(here, "engine_v1.npz")))
+        two_g = dict(np.load(os.path.join(here, "runtime_2node_v1.npz")))
+        params, h, store, vecs, targets = mg._build_setup()
+        q = vecs[:mg.NQ]
+        ex = np.arange(mg.NQ, dtype=np.int32)
+
+        rt = IndexRuntime(RuntimeConfig(
+            params=params, variant="cnb", m=mg.M, cap_factor=float(mg.L)))
+        ids0, sc0, _ = rt.search(h, store, q, exclude=ex)
+        np.testing.assert_array_equal(
+            np.asarray(ids0), eng_g["search_ids_cnb_full"])
+
+        # -- join: 1 -> 2 nodes (zone split + handoff) -------------------
+        rt2, store2, ev = reshard(rt, store, 2, mesh=make_zone_mesh(2))
+        assert ev.handoff_bytes == costmodel.estimate_handoff_bytes(
+            mg.L, params.num_buckets, 64, mg.D, 1, 2) > 0
+        cache = rt2.refresh_cache(store2)
+        ids_mid, _, drop = rt2.search(h, store2, q, cache=cache)
+        assert int(drop) == 0
+        np.testing.assert_array_equal(
+            np.asarray(ids_mid), two_g["search_ids_cnb"])
+
+        # -- leave: 2 -> 1 nodes (zone merge) ----------------------------
+        rt1, store1, ev2 = reshard(rt2, store2, 1)
+        assert ev2.handoff_bytes == ev.handoff_bytes
+        ids1, sc1, _ = rt1.search(h, store1, q, exclude=ex)
+        np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids0))
+        np.testing.assert_array_equal(np.asarray(sc1), np.asarray(sc0))
+        np.testing.assert_array_equal(
+            np.asarray(ids1), eng_g["search_ids_cnb_full"])
+        print("RESHARD-121-OK")
+        """,
+        devices=2,
+    )
+    assert "RESHARD-121-OK" in out
+
+
 @pytest.mark.slow
 def test_runtime_two_shards_matches_engine():
     """The runtime-level host API on a REAL >= 2-shard mesh returns the

@@ -379,6 +379,138 @@ def test_backend_update_enforces_topology_guards(single_mesh):
 
 
 # -----------------------------------------------------------------------------
+# live topology swaps (elastic membership on the serving path, Sec. 9)
+# -----------------------------------------------------------------------------
+
+
+def _payload_backend(single_mesh):
+    """1-node slot-payload backend + the two runtimes a single device can
+    host (mesh-free and 1-shard shard_map), sharing one RuntimeConfig."""
+    from repro.core.runtime import IndexRuntime, RuntimeConfig
+
+    emb, engine, _ = _make_engine(payload=True)
+    store = engine.store  # payload-carrying store
+    rcfg = RuntimeConfig(params=engine.params, variant="cnb", m=M + 1,
+                         cap_factor=2.0)
+    rt_local = IndexRuntime(rcfg)
+    rt_mesh = IndexRuntime(rcfg, mesh=single_mesh)
+    backend = RuntimeBackend(rt_local, hyperplanes=engine.hyperplanes,
+                             store=store)
+    return emb, engine, store, backend, rt_local, rt_mesh
+
+
+def test_topology_swap_bumps_generation_never_serves_stale(single_mesh):
+    """Any topology swap through RuntimeBackend.update() bumps the
+    backend generation, so no sketch-keyed cache entry computed on the
+    old topology is ever served after a reshard — and the recomputed
+    results are bit-identical (the reshard contract, live)."""
+    from repro.core.runtime import reshard
+
+    emb, engine, store, backend, rt_local, rt_mesh = _payload_backend(
+        single_mesh)
+    fe = RetrievalFrontend(
+        backend, FrontendConfig(m=M, max_batch=16, queue_capacity=64,
+                                cache=True),
+    )
+    q = emb[:20]
+    ex = np.arange(20)
+    ids_pre, sc_pre = fe.search(q, exclude=ex)
+    ids_rep, _ = fe.search(q, exclude=ex)
+    np.testing.assert_array_equal(ids_rep, ids_pre)
+    assert fe.stats.cache_hits == 20  # warm within the generation
+    gen0 = backend.generation
+
+    # -- the membership round: 1-node -> 1-shard mesh ----------------------
+    rt2, store2, _ = reshard(rt_local, store, runtime=rt_mesh)
+    fe.update_backend(runtime=rt2, store=store2)
+    assert backend.generation > gen0  # every swap bumps
+    hits_before = fe.stats.cache_hits
+    ids_post, _ = fe.search(q, exclude=ex)
+    # nothing was served from the pre-swap cache...
+    assert fe.stats.cache_hits == hits_before
+    assert fe.cache.stale_evictions >= 20
+    # ...and the new topology recomputed the SAME results
+    np.testing.assert_array_equal(ids_post, ids_pre)
+    # post-swap repeats hit again (the cache works within the new gen)
+    ids_post2, _ = fe.search(q, exclude=ex)
+    np.testing.assert_array_equal(ids_post2, ids_pre)
+    assert fe.stats.cache_hits == hits_before + 20
+
+    # -- and back: mesh -> 1-node (the cache dies again) -------------------
+    gen1 = backend.generation
+    rt3, store3, _ = reshard(rt2, store2, runtime=rt_local)
+    fe.update_backend(runtime=rt3, store=store3)
+    assert backend.generation > gen1
+    ids_back, _ = fe.search(q, exclude=ex)
+    np.testing.assert_array_equal(ids_back, ids_pre)
+
+
+def test_topology_swap_argument_guards(single_mesh):
+    """A swap without the migrated store, hyperplanes outside a swap, or
+    a serving m over the new runtime's wire headroom must all raise."""
+    from repro.core.runtime import IndexRuntime, RuntimeConfig
+
+    emb, engine, store, backend, rt_local, rt_mesh = _payload_backend(
+        single_mesh)
+    with pytest.raises(ValueError, match="migrated store"):
+        backend.update(runtime=rt_mesh)
+    with pytest.raises(ValueError, match="runtime swap"):
+        backend.update(store, hyperplanes=engine.hyperplanes)
+    # an ids-only store cannot back a mesh dispatch (slot-payload scoring)
+    # — must fail validation, not blow up at trace time half-mutated
+    from repro.core import distributed as dist0
+    ids_store = _make_engine(payload=False)[1].store
+    with pytest.raises(ValueError, match="payload-carrying"):
+        backend.update(runtime=rt_mesh,
+                       store=dist0.shard_store(single_mesh, ids_store))
+
+    fe = RetrievalFrontend(
+        backend, FrontendConfig(m=M, max_batch=8, queue_capacity=32,
+                                cache=True),
+    )
+    # a mesh runtime with NO headroom for host-side self-exclusion
+    tight = IndexRuntime(
+        RuntimeConfig(params=engine.params, variant="cnb", m=M,
+                      cap_factor=2.0),
+        mesh=single_mesh,
+    )
+    from repro.core import distributed as dist
+    with pytest.raises(ValueError, match="headroom"):
+        fe.update_backend(runtime=tight,
+                          store=dist.shard_store(single_mesh, store))
+    # the failed swap installed nothing: the backend still serves
+    ids, _ = fe.search(emb[:4], exclude=np.arange(4))
+    assert ids.shape == (4, M)
+
+
+def test_serve_reshard_tracks_reference(single_mesh):
+    """The lifecycle driver: live swaps at every read epoch track the
+    run_churn reference exactly, repeats across swaps stay identical,
+    and the swap count / stale evictions prove the cache died each
+    time."""
+    from repro.serve.lifecycle import run_serve_reshard
+
+    churn = ChurnConfig(
+        num_users=400, dim=D, k=K, L=L, capacity=32, epochs=4,
+        num_queries=32, m=M, refresh_every=2, ttl_epochs=3, seed=5,
+    )
+    ref = run_churn(churn)
+    out = run_serve_reshard(
+        ServeChurnConfig(churn=churn, max_batch=16, queue_capacity=64),
+        mesh=single_mesh,
+    )
+    np.testing.assert_allclose(out["recalls"], ref["recalls"])
+    assert out["repeat_mismatches"] == 0
+    assert out["swaps"] == 4  # one per read epoch
+    # every swap invalidated that epoch's freshly-cached batch
+    assert out["stale_evictions"] >= 4 * 32
+    # the third serve of each epoch hit the post-swap cache
+    assert out["cache_hits"] >= 4 * 32
+    # degenerate 1 <-> 1-shard rounds move no zone state
+    assert out["total_handoff_bytes"] == 0
+
+
+# -----------------------------------------------------------------------------
 # read/write epochs: serving under live churn
 # -----------------------------------------------------------------------------
 
