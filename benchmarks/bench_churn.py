@@ -76,6 +76,34 @@ for name, sched in (
 print("RESULT " + json.dumps(out))
 """
 
+_FAILURE_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+from repro.core.churn import (
+    ChurnConfig, FailureChurnConfig, run_failure_churn,
+)
+
+base = ChurnConfig(**json.loads(sys.argv[1]))
+out = []
+for read_mode in ("first", "quorum"):
+    t0 = time.time()
+    r = run_failure_churn(FailureChurnConfig(
+        churn=base, n_nodes=4, replication=2, read_mode=read_mode,
+        kills=((base.epochs // 2, 1),),
+    ))
+    us = (time.time() - t0) / base.epochs * 1e6
+    out.append(dict(
+        name=read_mode, us=us,
+        mean_recall=float(np.mean(r["recalls"])),
+        degraded_gap=r["degraded_gap"],
+        recovered_gap=r["recovered_gap"],
+        recovery_epochs=r["recovery_epochs"],
+        replication=int(r["total_replication_bytes"]),
+        recovery=int(r["total_recovery_bytes"]),
+        dropped=int(r["dropped_probes"].sum())))
+print("RESULT " + json.dumps(out))
+"""
+
 N_NODES_MAX = 4
 
 
@@ -128,6 +156,24 @@ def _node_rows(base: ChurnConfig):
     return out
 
 
+def _failure_rows(base: ChurnConfig):
+    """Fail-stop cell (DESIGN.md Sec. 10): kill 1 of 4 replicated nodes
+    mid-run with NO handoff, serve through first-responder vs quorum
+    reads — recall gap while degraded, epochs to parity, and the
+    replication/recovery byte bill next to the Table-1 query costs."""
+    out = []
+    for r in _subprocess_rows(_FAILURE_SCRIPT, base, N_NODES_MAX):
+        out.append((
+            f"churn/failure/R2/{r['name']}", r["us"],
+            f"mean_recall={r['mean_recall']:.3f};"
+            f"degraded_gap={r['degraded_gap']:.3f};"
+            f"recovered_gap={r['recovered_gap']:.3f};"
+            f"recovery_epochs={r['recovery_epochs']};"
+            f"replication_bytes={r['replication']};"
+            f"recovery_bytes={r['recovery']};dropped={r['dropped']}"))
+    return out
+
+
 def rows():
     out = []
     base = ChurnConfig(num_users=2000, epochs=8, num_queries=96,
@@ -153,5 +199,11 @@ def rows():
     except Exception as e:
         reason = " ".join(str(e).split())[:300]
         out.append(("churn/nodes/FAILED", 0.0,
+                    f"{type(e).__name__}: {reason}"))
+    try:
+        out.extend(_failure_rows(base))
+    except Exception as e:
+        reason = " ".join(str(e).split())[:300]
+        out.append(("churn/failure/FAILED", 0.0,
                     f"{type(e).__name__}: {reason}"))
     return out

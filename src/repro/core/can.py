@@ -108,6 +108,30 @@ class CanTopology:
             (int(node) + 1) * self.buckets_per_node,
         )
 
+    # -- replica placement (availability, DESIGN.md Sec. 10) -----------------
+
+    def replicas_of(self, codes, R: int) -> np.ndarray:
+        """Owner nodes of the R replicas of each bucket code: the primary
+        owner (`node_of`) followed by its R-1 zone-adjacent successors,
+        wrapping around the node ring.  [..., R] uint32 (host/numpy —
+        placement is a control-plane decision, like `survivor_of`).
+
+        Successor placement composes with the zone geometry: replica r of
+        node j's ENTIRE contiguous zone (`zone_range(j)`) lands on node
+        (j + r) % n_nodes, so replicas ship as whole zone slices (one
+        ppermute per replica rank in the runtime) and local bucket
+        indices (`local_of`) are identical on the primary and on every
+        replica holder.  Any R distinct bucket replicas therefore survive
+        the fail-stop loss of R-1 nodes."""
+        R = int(R)
+        if not (1 <= R <= self.n_nodes):
+            raise ValueError(
+                f"replication R={R} out of range [1, {self.n_nodes}]"
+            )
+        primary = self.node_of_np(codes)
+        offsets = np.arange(R, dtype=np.uint32)
+        return (primary[..., None] + offsets) % np.uint32(self.n_nodes)
+
     # -- routing cost (message unit, paper Table 1) --------------------------
 
     def lookup_hops(self, src_node: int, dst_node: int) -> int:

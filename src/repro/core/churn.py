@@ -46,9 +46,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import hashing, metrics
+from repro.core import costmodel, hashing, metrics
 from repro.core.hashing import LshParams
-from repro.core.runtime import IndexRuntime, RuntimeConfig, reshard
+from repro.core.runtime import IndexRuntime, RuntimeConfig, kill_node, reshard
 from repro.core.store import make_store
 
 
@@ -128,6 +128,8 @@ def make_churn_runtime(
     n_shards: int = 1,
     mesh=None,
     cap_factor: float | None = None,
+    replication: int = 1,
+    read_mode: str = "first",
 ) -> IndexRuntime:
     """The runtime a churn trajectory executes on.
 
@@ -145,6 +147,8 @@ def make_churn_runtime(
         m=cfg.m + 1,
         routing="alltoall",
         cap_factor=float(n_shards if cap_factor is None else cap_factor),
+        replication=replication,
+        read_mode=read_mode,
     )
     return IndexRuntime(rcfg, mesh=mesh)
 
@@ -170,12 +174,27 @@ def _zone_mesh(n: int):
     return make_zone_mesh(n)
 
 
+def _expand_kills(kills, epochs: int, n_nodes: int) -> dict[int, list[int]]:
+    """Normalize a failure schedule ((epoch, node), ...) to epoch -> nodes.
+    Kills fire at epoch START, before the epoch's announces and queries."""
+    by_epoch: dict[int, list[int]] = {}
+    for epoch, node in kills:
+        epoch, node = int(epoch), int(node)
+        if not (0 <= epoch <= epochs):
+            raise ValueError(f"kill epoch {epoch} outside [0, {epochs}]")
+        if not (0 <= node < n_nodes):
+            raise ValueError(f"kill node {node} outside [0, {n_nodes})")
+        by_epoch.setdefault(epoch, []).append(node)
+    return by_epoch
+
+
 def run_churn_runtime(
     cfg: ChurnConfig,
     rt: IndexRuntime,
     *,
     schedule=None,
     mesh_for=None,
+    kills=None,
 ) -> dict:
     """Drive the churn trajectory on ANY topology (the one driver).
 
@@ -197,6 +216,16 @@ def run_churn_runtime(
     for n-node topologies (default: a host-device-prefix zone mesh);
     runtimes are cached per node count so revisited topologies reuse
     their compiled steps.
+
+    With `kills` (a failure schedule, ((epoch, node), ...)) nodes suffer
+    FAIL-STOP losses with NO handoff (`runtime.kill_node` at epoch start,
+    contrast the graceful `schedule` path — the two are mutually
+    exclusive): the zone is gone, the node's liveness bit drops to 0, and
+    queries read through the R-way replicas until the next announce epoch
+    revives the node and repopulates its zone (recovery bytes charged per
+    revival, `costmodel.estimate_recovery_bytes`).  Requires
+    `rt.cfg.replication > 1`; each announce's R-1-way fan-out is charged
+    via `costmodel.estimate_replication_bytes`, never silently.
     """
     from repro.core import distributed as dist_mod
 
@@ -210,6 +239,26 @@ def run_churn_runtime(
             f"schedule[0]={sched[0]} != initial runtime n_nodes="
             f"{rt.cfg.n_nodes}"
         )
+    kills_by_epoch = _expand_kills(kills or (), cfg.epochs, rt.cfg.n_nodes)
+    if kills_by_epoch:
+        if sched is not None:
+            raise ValueError(
+                "kills and schedule are mutually exclusive (a membership "
+                "round re-keys zones; a fail-stop loss must not)"
+            )
+        if rt.cfg.replication < 2:
+            raise ValueError(
+                "a failure schedule needs replication >= 2 (a killed zone "
+                "with no replicas is simply gone until the next announce)"
+            )
+    replication = rt.cfg.replication
+    if sched is not None and replication > 1:
+        raise ValueError(
+            "membership schedules do not compose with replication > 1 "
+            "(a zone split/merge re-keys the replica ring)"
+        )
+    live = np.ones(rt.cfg.n_nodes, np.int32)
+    reps = None
     runtimes = {rt.cfg.n_nodes: rt}
 
     store = rt.shard_store(
@@ -226,9 +275,17 @@ def run_churn_runtime(
     last_refresh = 0
     recalls, staleness, dropped = [], [], []
     handoff_b, refresh_b, nodes_traj, events = [], [], [], []
-    total_handoff = total_refresh = 0
+    repl_b, recov_b, live_traj, recoveries = [], [], [], []
+    total_handoff = total_refresh = total_repl = total_recov = 0
     for epoch, vecs, do_refresh, qidx, ideal in _trajectory(cfg):
-        ep_handoff = ep_refresh = 0
+        ep_handoff = ep_refresh = ep_repl = ep_recov = 0
+        for node in kills_by_epoch.get(epoch, ()):
+            # fail-stop: the zone AND the node's held replica slices are
+            # gone; replicas OF its zone on ring successors survive
+            if not live[node]:
+                raise ValueError(f"node {node} killed while already dead")
+            store, reps = kill_node(rt, store, reps, node)
+            live[node] = 0
         if sched is not None and sched[epoch] != rt.cfg.n_nodes:
             # -- membership round: join/leave to the scheduled node count
             n_new = sched[epoch]
@@ -259,6 +316,18 @@ def run_churn_runtime(
         nu_pad = -(-cfg.num_users // n_dev) * n_dev
         nq_pad = -(-cfg.num_queries // n_dev) * n_dev
         if do_refresh:
+            # a re-announce revives dead nodes first: the owner (or its
+            # replacement) rejoins and this very announce repopulates its
+            # zone — charged as one full-zone recovery per revival
+            for node in np.flatnonzero(live == 0):
+                b = costmodel.estimate_recovery_bytes(
+                    cfg.L, rt.topology.buckets_per_node, cfg.capacity,
+                    cfg.dim,
+                )
+                recoveries.append((epoch, int(node), b))
+                ep_recov += b
+                total_recov += b
+                live[node] = 1
             vpad = _pad_to(vecs, nu_pad, 0.0)
             all_ids = _pad_to(
                 np.arange(cfg.num_users, dtype=np.int32), nu_pad, -1)
@@ -272,12 +341,23 @@ def run_churn_runtime(
             b = _charge_refresh()
             ep_refresh += b
             total_refresh += b
+            if replication > 1:
+                # the announce fans out to the R-1 replica owners — the
+                # replication of the insert/payload-sync writes
+                reps = rt.replicate_store(store)
+                b = costmodel.estimate_replication_bytes(
+                    cfg.L, cfg.num_users, cfg.dim, replication)
+                ep_repl += b
+                total_repl += b
             last_refresh = epoch
         if epoch == 0:
             continue
 
+        kw = {}
+        if replication > 1:
+            kw = dict(replicas=reps, live=live.copy())
         ids, _, drop = rt.search(
-            hp, store, _pad_to(vecs[qidx], nq_pad, 0.0), cache=cache
+            hp, store, _pad_to(vecs[qidx], nq_pad, 0.0), cache=cache, **kw
         )
         ids = np.asarray(ids)[: cfg.num_queries]
         # host-side self-exclusion: drop the query's own id, keep top-m
@@ -292,7 +372,10 @@ def run_churn_runtime(
         dropped.append(int(drop))
         handoff_b.append(ep_handoff)
         refresh_b.append(ep_refresh)
+        repl_b.append(ep_repl)
+        recov_b.append(ep_recov)
         nodes_traj.append(rt.cfg.n_nodes)
+        live_traj.append(int(live.sum()))
 
     stale_arr = np.asarray(staleness)
     return dict(
@@ -314,6 +397,16 @@ def run_churn_runtime(
         total_handoff_bytes=int(total_handoff),
         total_refresh_bytes=int(total_refresh),
         reshard_events=events,
+        # failure accounting (all-zero / constant with no kills): announce
+        # fan-out to replicas, zone repopulation on revival, and the live
+        # node count each read epoch.  Totals include the epoch-0 announce.
+        replication=replication,
+        live_nodes=np.asarray(live_traj),
+        replication_bytes=np.asarray(repl_b, dtype=np.int64),
+        recovery_bytes=np.asarray(recov_b, dtype=np.int64),
+        total_replication_bytes=int(total_repl),
+        total_recovery_bytes=int(total_recov),
+        recoveries=recoveries,
         # store mutation counter after the run — the serving layer's cache
         # invalidation signal (every insert/expire/sync bumped it)
         store_generation=int(store.generation),
@@ -383,3 +476,71 @@ def run_node_churn(cfg: NodeChurnConfig, mesh_for=None) -> dict:
     rt = make_churn_runtime(cfg.churn, n0, mesh=mesh)
     return run_churn_runtime(cfg.churn, rt, schedule=sched,
                              mesh_for=mesh_for)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureChurnConfig:
+    """The availability scenario: content churn + queries while nodes
+    suffer FAIL-STOP losses (no handoff) and reads survive on R-way
+    replicas (DESIGN.md Sec. 10).
+
+    `kills` is ((epoch, node), ...): each node vanishes at that epoch's
+    start and revives at the next announce epoch, which repopulates its
+    zone.  The world trajectory is the same RNG stream as every other
+    driver on the same `ChurnConfig`, so the no-failure reference run is
+    directly comparable epoch by epoch."""
+
+    churn: ChurnConfig = ChurnConfig()
+    n_nodes: int = 4
+    replication: int = 2
+    read_mode: str = "first"        # first | quorum
+    kills: tuple[tuple[int, int], ...] = ((3, 1),)
+
+
+def run_failure_churn(cfg: FailureChurnConfig, mesh_for=None) -> dict:
+    """Measure recall degradation and recovery across fail-stop kills.
+
+    Runs the SAME runtime (same mesh, same compiled steps, same R and
+    read mode) twice over the shared trajectory: once with the failure
+    schedule, once without (the reference — at full liveness the replica
+    redirect is the identity, so the reference equals the R=1 run).
+    Returns the failure run's dict plus:
+
+      reference_recalls   per-epoch recalls of the no-failure run
+      recall_gap          reference - failure, per read epoch
+      degraded            bool mask: epochs serving with a dead node
+      degraded_gap        max gap over degraded epochs (0.0 if none)
+      recovered_gap       max gap over post-recovery epochs (parity check)
+      recovery_epochs     worst-case epochs from a kill to its revival
+    """
+    mesh = (mesh_for or _zone_mesh)(cfg.n_nodes)
+    rt = make_churn_runtime(
+        cfg.churn, cfg.n_nodes, mesh=mesh,
+        replication=cfg.replication, read_mode=cfg.read_mode,
+    )
+    failure = run_churn_runtime(cfg.churn, rt, kills=cfg.kills)
+    reference = run_churn_runtime(cfg.churn, rt)
+
+    gap = reference["recalls"] - failure["recalls"]
+    degraded = failure["live_nodes"] < cfg.n_nodes
+    recovered = ~degraded
+    # only epochs AFTER the first kill can attest recovery-to-parity
+    if degraded.any():
+        recovered &= np.arange(degraded.size) > int(np.argmax(degraded))
+    recovery_epochs = 0
+    for kill_epoch, _node in cfg.kills:
+        revived = [e for e, _n, _b in failure["recoveries"]
+                   if e > kill_epoch]
+        if revived:
+            recovery_epochs = max(recovery_epochs,
+                                  min(revived) - int(kill_epoch))
+    failure.update(
+        reference_recalls=reference["recalls"],
+        recall_gap=gap,
+        degraded=degraded,
+        degraded_gap=float(gap[degraded].max()) if degraded.any() else 0.0,
+        recovered_gap=float(gap[recovered].max()) if recovered.any() else 0.0,
+        recovery_epochs=int(recovery_epochs),
+        kills=tuple(cfg.kills),
+    )
+    return failure

@@ -103,6 +103,40 @@ def estimate_handoff_bytes(
     return L * moved * per_bucket
 
 
+# -- R-way replication: announce fan-out + zone recovery (DESIGN.md Sec. 10) --
+
+
+def estimate_replication_bytes(L: int, n_vectors: int, d: int, R: int) -> int:
+    """Protocol-level bytes of fanning ONE full announce out to the R-1
+    replica owners (the availability analogue of Table 1's maintenance
+    column).
+
+    Soft state makes replication cheap to keep fresh (paper Sec. 4.1):
+    replicas are not separately maintained — each re-announce simply
+    lands on R owners instead of one, so the extra cost per announce is
+    (R-1) copies of every announced entry: id (4 B) + timestamp (4 B) +
+    embedded payload (4 B * d), per table.  0 when R == 1.  Charged by
+    the failure-churn driver at every announce epoch, never silently."""
+    R = int(R)
+    if R < 1:
+        raise ValueError(f"replication R must be >= 1, got {R}")
+    return (R - 1) * int(L) * int(n_vectors) * (8 + 4 * int(d))
+
+
+def estimate_recovery_bytes(
+    L: int, buckets_per_node: int, capacity: int, d: int
+) -> int:
+    """Protocol-level bytes of repopulating ONE revived node's zone.
+
+    A fail-stop kill loses the node's bucket state with NO handoff; the
+    node rejoins at the next re-announce and receives its full zone back
+    (ids + timestamps + embedded payloads + ring pointers across all L
+    tables) — the same per-bucket form as `estimate_handoff_bytes`, over
+    one zone.  Charged by the failure-churn driver on every revival."""
+    per_bucket = int(capacity) * (8 + 4 * int(d)) + 4
+    return int(L) * int(buckets_per_node) * per_bucket
+
+
 # -- ICI byte model for the TPU runtime (DESIGN.md Sec. 2) --------------------
 
 ICI_LINK_GBPS = 50e9  # ~50 GB/s per link, v5e 2-D torus

@@ -132,6 +132,33 @@ def make_refresh_cache(cfg: RuntimeConfig, mesh):
     return jax.jit(fn)
 
 
+def make_replicate_store(cfg: RuntimeConfig, mesh):
+    """jit'd replica-slice construction (R-way availability, DESIGN.md
+    Sec. 10): one ppermute per replica rank, OFF the query path — the
+    announce-time fan-out `costmodel.estimate_replication_bytes` charges.
+
+    Returns (rep_ids [T, R-1, NB, C], rep_payload [T, R-1, NB, C, D])
+    sharded like the CNB neighbor cache (replica slices on `model`).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    cx = MeshCollectives(n=cfg.n_nodes, axis="model", batch_axes=())
+
+    def _replicate(ids, payload):
+        return runtime_mod.replicate_kernel(cfg, cx, ids, payload)
+
+    fn = compat.shard_map(
+        _replicate,
+        mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model", None, None)),
+        out_specs=(
+            P(None, None, "model", None),
+            P(None, None, "model", None, None),
+        ),
+    )
+    return jax.jit(fn)
+
+
 # -----------------------------------------------------------------------------
 # the step wrappers (runtime kernels bound to the mesh)
 # -----------------------------------------------------------------------------
@@ -146,6 +173,7 @@ def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
     cx = _collectives(cfg, batch_axes)
     psum_axes = _psum_axes(batch_axes)
     has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
+    has_reps = cfg.replication > 1
 
     def _mesh(mesh):
         from jax.sharding import PartitionSpec as P
@@ -157,27 +185,33 @@ def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
         cache_p = P(None, None, "model", None, None)
         out_specs = (P(batch_axes, None), P(batch_axes, None), P())
 
+        # positional layout: hyperplanes, store, [cache], [reps + live], q
+        in_specs = [P(), store_i, store_p]
         if has_cache:
+            in_specs += [cache_i, cache_p]
+        if has_reps:
+            # replica slices shard like the CNB cache; live replicates
+            in_specs += [cache_i, cache_p, P()]
+        in_specs.append(qspec)
 
-            def step(hyperplanes, ids, payload, c_ids, c_payload, q):
-                i, s, drop = runtime_mod.search_kernel(
-                    cfg, cx, cfg.m, hyperplanes, ids, payload,
-                    c_ids, c_payload, q,
-                )
-                return i, s, jax.lax.psum(drop, psum_axes)
+        def step(hyperplanes, ids, payload, *rest):
+            rest = list(rest)
+            c_ids = c_payload = None
+            if has_cache:
+                c_ids, c_payload = rest.pop(0), rest.pop(0)
+            kw = {}
+            if has_reps:
+                kw = dict(rep_ids=rest.pop(0), rep_payload=rest.pop(0),
+                          live=rest.pop(0))
+            (q,) = rest
+            i, s, drop = runtime_mod.search_kernel(
+                cfg, cx, cfg.m, hyperplanes, ids, payload,
+                c_ids, c_payload, q, **kw,
+            )
+            return i, s, jax.lax.psum(drop, psum_axes)
 
-            in_specs = (P(), store_i, store_p, cache_i, cache_p, qspec)
-        else:
-
-            def step(hyperplanes, ids, payload, q):
-                i, s, drop = runtime_mod.search_kernel(
-                    cfg, cx, cfg.m, hyperplanes, ids, payload, None, None, q
-                )
-                return i, s, jax.lax.psum(drop, psum_axes)
-
-            in_specs = (P(), store_i, store_p, qspec)
         return compat.shard_map(
-            step, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+            step, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs
         )
 
     return _mesh
@@ -214,27 +248,31 @@ def make_contains_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     psum_axes = _psum_axes(batch_axes)
 
     has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
+    has_reps = cfg.replication > 1
 
+    # positional layout: hyperplanes, store_ids, [cache], [reps + live],
+    # q, targets — mirrors the search step
+    in_specs = [P(), store_i]
     if has_cache:
+        in_specs.append(cache_i)
+    if has_reps:
+        in_specs += [cache_i, P()]
+    in_specs += [qspec, tspec]
 
-        def step(hyperplanes, ids, c_ids, q, targets):
-            h, drop = runtime_mod.contains_kernel(
-                cfg, cx, hyperplanes, ids, c_ids, q, targets
-            )
-            return h, jax.lax.psum(drop, psum_axes)
+    def step(hyperplanes, ids, *rest):
+        rest = list(rest)
+        c_ids = rest.pop(0) if has_cache else None
+        kw = {}
+        if has_reps:
+            kw = dict(rep_ids=rest.pop(0), live=rest.pop(0))
+        q, targets = rest
+        h, drop = runtime_mod.contains_kernel(
+            cfg, cx, hyperplanes, ids, c_ids, q, targets, **kw
+        )
+        return h, jax.lax.psum(drop, psum_axes)
 
-        in_specs = (P(), store_i, cache_i, qspec, tspec)
-    else:
-
-        def step(hyperplanes, ids, q, targets):
-            h, drop = runtime_mod.contains_kernel(
-                cfg, cx, hyperplanes, ids, None, q, targets
-            )
-            return h, jax.lax.psum(drop, psum_axes)
-
-        in_specs = (P(), store_i, qspec, tspec)
     fn = compat.shard_map(
-        step, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        step, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs
     )
     return jax.jit(fn)
 

@@ -77,6 +77,32 @@ class RuntimeConfig:
     num_probes: int | None = None  # None => all k 1-near buckets (the paper)
     ranked_probes: bool = False    # margin-ranked probe subset (beyond paper)
     use_kernels: bool = False      # fused Pallas sketch + score/top-m
+    replication: int = 1           # R-way zone replication (DESIGN.md Sec. 10)
+    read_mode: str = "first"       # first (first live replica) | quorum
+
+    def __post_init__(self):
+        if self.read_mode not in ("first", "quorum"):
+            raise ValueError(f"unknown read_mode {self.read_mode!r}")
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be >= 1, got {self.replication}"
+            )
+        if self.replication > 1:
+            if self.replication > self.n_nodes:
+                raise ValueError(
+                    f"replication R={self.replication} exceeds "
+                    f"n_nodes={self.n_nodes} (need R distinct owners)"
+                )
+            if self.routing != "alltoall":
+                raise ValueError(
+                    "replication > 1 requires alltoall routing (the "
+                    "replica redirect rides the capacitated router)"
+                )
+            if self.variant == "nb":
+                raise ValueError(
+                    "replication > 1 does not support the nb variant "
+                    "(neighbor forwards assume the primary owner; use cnb)"
+                )
 
     @property
     def topo(self) -> CanTopology:
@@ -135,6 +161,11 @@ class LocalCollectives:
     def ppermute(self, x, perm):
         return x
 
+    def alive(self, live):
+        """This node's own bit of the per-node liveness mask.  The 1-node
+        topology is always alive (a dead single node has nobody to ask)."""
+        return jnp.bool_(True)
+
 
 LOCAL = LocalCollectives()
 
@@ -169,6 +200,14 @@ class MeshCollectives:
 
     def ppermute(self, x, perm):
         return jax.lax.ppermute(x, self.axis, perm)
+
+    def alive(self, live):
+        """This node's own bit of the traced liveness mask [n] (int32,
+        1 = live).  Kernels mask every result row a node emits with its
+        own bit, so a dead node's rows are EXCLUDED from merges no matter
+        what its (lost) bucket state would have scored — the reads
+        protocol's fail-stop guarantee (DESIGN.md Sec. 10)."""
+        return (live > 0)[jax.lax.axis_index(self.axis)]
 
 
 # -----------------------------------------------------------------------------
@@ -226,13 +265,27 @@ def _score_local(
     mask: jax.Array,           # [r] int32/uint32 probe bitmask (plan)
     exclude: jax.Array | None,  # [r] self ids to drop, or None
     m: int,
+    rep_ids: jax.Array | None = None,      # [T, R-1, NB_local, C]
+    rep_payload: jax.Array | None = None,  # [T, R-1, NB_local, C, D]
+    rep_sel: jax.Array | None = None,      # [r] replica rank to read (0=primary)
 ):
-    """Top-m among (exact + masked local near) buckets of a routed query."""
+    """Top-m among (exact + masked local near) buckets of a routed query.
+
+    With `rep_sel` (replication > 1) each routed row reads replica rank
+    `rep_sel[i]` of its bucket: rank 0 is this node's primary shard, rank
+    r >= 1 is the replica slice holding the zone of the node r positions
+    back on the ring (`CanTopology.replicas_of`) — same local indices, so
+    the probe set is unchanged."""
     probes, pvalid = plan_mod.shard_local_probes(
         cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
     )                                                      # [r, P] both
     probes = probes % store_ids.shape[1]  # engine parity: fold OOB codes
-    cand_ids = store_ids[table[:, None], probes]           # [r, P, C]
+    if rep_sel is None:
+        cand_ids = store_ids[table[:, None], probes]       # [r, P, C]
+    else:
+        all_ids = jnp.concatenate(
+            [store_ids[:, None], rep_ids], axis=1)         # [T, R, NBl, C]
+        cand_ids = all_ids[table[:, None], rep_sel[:, None], probes]
     cand_ids = jnp.where(pvalid[..., None], cand_ids, -1)
     r = q.shape[0]
     flat_ids = cand_ids.reshape(r, -1)
@@ -240,7 +293,12 @@ def _score_local(
         flat_ids = jnp.where(flat_ids == exclude[:, None], -1, flat_ids)
     slot_vecs = None
     if corpus is None:
-        slot_vecs = store_payload[table[:, None], probes]  # [r, P, C, D]
+        if rep_sel is None:
+            slot_vecs = store_payload[table[:, None], probes]  # [r, P, C, D]
+        else:
+            all_pay = jnp.concatenate(
+                [store_payload[:, None], rep_payload], axis=1)
+            slot_vecs = all_pay[table[:, None], rep_sel[:, None], probes]
         slot_vecs = slot_vecs.reshape(r, flat_ids.shape[1], -1)
     return _pool_topk(cfg, corpus, q, flat_ids, slot_vecs, m)
 
@@ -336,6 +394,40 @@ def _route_cap(cfg: RuntimeConfig, b_loc: int) -> int:
     return max(cap, 1)
 
 
+def _replica_targets(cfg: RuntimeConfig, owner: jax.Array, live: jax.Array):
+    """Replica-aware destinations for a flat probe array (DESIGN.md Sec. 10).
+
+    `first` (first-responder): each probe goes to the FIRST live owner on
+    its bucket's replica ring (primary, else successor 1, ...).  Probes
+    with no live replica keep the (dead) primary — the destination's own
+    liveness mask excludes its rows, so they return fill, never garbage.
+
+    `quorum`: each probe fans out to ALL R replica owners (live or not —
+    dead destinations self-mask), and the origin merges every returned
+    copy.  Returns (dest [f], rep_sel [f], fanout): flat arrays tiled
+    rr-major (`fanout = R`) under quorum, untiled (`fanout = 1`) under
+    first-responder.
+    """
+    n, R = cfg.n_nodes, cfg.replication
+    live_b = live.astype(jnp.int32) > 0                      # [n]
+    if cfg.read_mode == "quorum":
+        dest = jnp.concatenate(
+            [(owner + rr) % n for rr in range(R)])
+        rep_sel = jnp.repeat(
+            jnp.arange(R, dtype=jnp.int32), owner.shape[0])
+        return dest, rep_sel, R
+    dest = owner
+    rep_sel = jnp.zeros_like(owner)
+    found = live_b[owner]
+    for rr in range(1, R):
+        cand = (owner + rr) % n
+        take = ~found & live_b[cand]
+        dest = jnp.where(take, cand, dest)
+        rep_sel = jnp.where(take, jnp.int32(rr), rep_sel)
+        found = found | live_b[cand]
+    return dest, rep_sel, 1
+
+
 # -----------------------------------------------------------------------------
 # the search step kernel
 # -----------------------------------------------------------------------------
@@ -354,6 +446,9 @@ def search_kernel(
     *,
     corpus=None,                      # id-keyed corpus (1-node only)
     exclude: jax.Array | None = None,  # [b_loc] self ids (1-node only)
+    rep_ids: jax.Array | None = None,      # [T, R-1, NBl, C] (replication>1)
+    rep_payload: jax.Array | None = None,  # [T, R-1, NBl, C, D]
+    live: jax.Array | None = None,         # [n] int32 liveness mask
 ):
     """Per-node body of the search step: runs under shard_map on a mesh, or
     under plain jit on the 1-node topology (cx = LOCAL).
@@ -362,9 +457,21 @@ def search_kernel(
     counts this node's (query, table) probes that overflowed the
     capacitated all_to_all send buffers (structurally 0 on one node:
     the identity router has no buffers; also 0 under allgather routing).
+
+    With `cfg.replication > 1` the routed path reads through replicas:
+    probes are redirected to live replica owners (`_replica_targets`),
+    scored there against the selected replica slice, and every node masks
+    its emitted rows with its own `live` bit — a dead node contributes
+    fill, never stale or garbage rows.
     """
     if (corpus is not None or exclude is not None) and cx.routed:
         raise ValueError("corpus scoring / wire exclusion are 1-node only")
+    reps_on = cfg.replication > 1
+    if reps_on and (rep_ids is None or rep_payload is None or live is None):
+        raise ValueError(
+            "replication > 1 needs rep_ids/rep_payload/live "
+            "(IndexRuntime.replicate_store builds the replica slices)"
+        )
     L = cfg.params.L
     n = cx.n
     b_loc, d = q.shape
@@ -392,11 +499,18 @@ def search_kernel(
         return ids, sc, jnp.int32(0)
 
     # ---- all_to_all routing (DHT-lookup analogue) ---------------------------
-    cap = _route_cap(cfg, b_loc)
-    route = routing_mod.plan_routes(flat["owner"], n, cap)
-    meta = jnp.stack(
-        [flat["qidx"], flat["table"], flat["local"], flat["mask"]], axis=-1
-    )
+    dest = flat["owner"]
+    fanout = 1
+    if reps_on:
+        dest, rep_col, fanout = _replica_targets(cfg, dest, live)
+        if fanout > 1:  # quorum: rr-major tiling matches rep_col layout
+            flat = {k: jnp.tile(v, fanout) for k, v in flat.items()}
+    cap = _route_cap(cfg, b_loc) * fanout
+    route = routing_mod.plan_routes(dest, n, cap)
+    cols = [flat["qidx"], flat["table"], flat["local"], flat["mask"]]
+    if reps_on:
+        cols.append(rep_col)
+    meta = jnp.stack(cols, axis=-1)
     send_q = routing_mod.build_send_buffer(route, n, cap, q[flat["qidx"]], 0.0)
     send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
 
@@ -411,9 +525,17 @@ def search_kernel(
     rlocal_c = jnp.maximum(rlocal, 0)
     rmask_c = jnp.maximum(rmask, 0)
 
+    rrep = None
+    if reps_on:
+        rrep = jnp.clip(recv_meta[..., 4].reshape(-1), 0, cfg.replication - 1)
+        # a dead node's own rows are fill — liveness is enforced where the
+        # data lives, so a stale survivor can't resurrect a killed zone
+        rvalid &= cx.alive(live)
+
     ids_o, sc_o = _score_local(
         cfg, store_ids, store_payload, None, rq, rtable_c, rlocal_c,
         rmask_c, None, m,
+        rep_ids=rep_ids, rep_payload=rep_payload, rep_sel=rrep,
     )
     ids_parts, sc_parts = [ids_o], [sc_o]
 
@@ -421,6 +543,12 @@ def search_kernel(
         ids_c, sc_c = _score_cache(
             cfg, cache_ids, cache_payload, rq, rtable_c, rlocal_c, rmask_c, m
         )
+        if rrep is not None:
+            # the neighbor cache mirrors the PRIMARY zone only: replica
+            # reads (rep > 0) skip it rather than mix another zone's cache
+            prim = (rrep == 0)[:, None]
+            ids_c = jnp.where(prim, ids_c, -1)
+            sc_c = jnp.where(prim, sc_c, NEG_INF)
         ids_parts.append(ids_c)
         sc_parts.append(sc_c)
 
@@ -439,10 +567,16 @@ def search_kernel(
     # ---- return results to origin -------------------------------------------
     back_i = cx.all_to_all(ids_r.reshape(n, cap, m))
     back_s = cx.all_to_all(sc_r.reshape(n, cap, m))
-    gather_i = routing_mod.return_to_origin(route, back_i, -1)      # [b_loc*L, m]
+    gather_i = routing_mod.return_to_origin(route, back_i, -1)  # [b*L*fan, m]
     gather_s = routing_mod.return_to_origin(route, back_s, NEG_INF)
-    gather_i = gather_i.reshape(b_loc, L * m)
-    gather_s = gather_s.reshape(b_loc, L * m)
+    if fanout > 1:
+        gather_i = gather_i.reshape(fanout, b_loc, L * m)
+        gather_s = gather_s.reshape(fanout, b_loc, L * m)
+        gather_i = gather_i.transpose(1, 0, 2).reshape(b_loc, -1)
+        gather_s = gather_s.transpose(1, 0, 2).reshape(b_loc, -1)
+    else:
+        gather_i = gather_i.reshape(b_loc, L * m)
+        gather_s = gather_s.reshape(b_loc, L * m)
     ids, sc = dedupe_topk(gather_i, gather_s, m)
     return ids, sc, route.dropped
 
@@ -519,27 +653,39 @@ def _search_allgather(
 # -----------------------------------------------------------------------------
 
 
-def _contains_local(cfg, store_ids, table, local_idx, mask, target):
+def _contains_local(cfg, store_ids, table, local_idx, mask, target,
+                    rep_ids=None, rep_sel=None):
     """bool [r]: does `target` sit in the (exact + masked local near)
-    buckets of each routed query?  Metadata-only — no payload gathers."""
+    buckets of each routed query?  Metadata-only — no payload gathers.
+    With `rep_sel` each row reads replica rank rep_sel[i] (as in
+    `_score_local`)."""
     probes, pvalid = plan_mod.shard_local_probes(
         cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
     )
     probes = probes % store_ids.shape[1]
-    cand = store_ids[table[:, None], probes]                # [r, P, C]
+    if rep_sel is None:
+        cand = store_ids[table[:, None], probes]            # [r, P, C]
+    else:
+        all_ids = jnp.concatenate([store_ids[:, None], rep_ids], axis=1)
+        cand = all_ids[table[:, None], rep_sel[:, None], probes]
     hit = (cand == target[:, None, None]) & pvalid[..., None]
     return jnp.any(hit, axis=(1, 2))
 
 
-def _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal, rmask, rtgt):
+def _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal, rmask, rtgt,
+                   rep_ids=None, rep_sel=None):
     """Membership across owner buckets + node-bit coverage (cache or
     neighbor forwards), mirroring the search step's candidate pool."""
-    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt)
+    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt,
+                          rep_ids=rep_ids, rep_sel=rep_sel)
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
         nbits = cache_ids.shape[1]
         jj = jnp.arange(nbits)[None, :]
         cand = cache_ids[rtable[:, None], jj, rlocal[:, None]]  # [r, nbits, C]
         valid = _node_bit_valid(cfg, rmask)[..., None]
+        if rep_sel is not None:
+            # cache mirrors the primary zone only (see search_kernel)
+            valid &= (rep_sel == 0)[:, None, None]
         hit |= jnp.any((cand == rtgt[:, None, None]) & valid, axis=(1, 2))
     if cfg.variant == "nb":
         nbit_valid = _node_bit_valid(cfg, rmask)
@@ -565,10 +711,16 @@ def contains_kernel(
     cache_ids: jax.Array | None,
     q: jax.Array,        # [b_loc, d]
     targets: jax.Array,  # [b_loc] int32
+    *,
+    rep_ids: jax.Array | None = None,  # [T, R-1, NBl, C] (replication>1)
+    live: jax.Array | None = None,     # [n] int32 liveness mask
 ):
     """Per-node body of `contains`: was target y's id in ANY searched bucket
     of query x?  Routes only metadata (no query payload): membership needs
     bucket ids, not vectors.  Returns (hits bool [b_loc], dropped int32)."""
+    reps_on = cfg.replication > 1
+    if reps_on and (rep_ids is None or live is None):
+        raise ValueError("replication > 1 needs rep_ids/live")
     L, n = cfg.params.L, cx.n
     b_loc = q.shape[0]
     _, flat = _flat_plan(cfg, cx, q, hyperplanes)
@@ -598,28 +750,40 @@ def contains_kernel(
         hits = jax.lax.dynamic_slice_in_dim(hit_all, me * b_loc, b_loc) > 0
         return hits, jnp.int32(0)
 
-    cap = _route_cap(cfg, b_loc)
-    route = routing_mod.plan_routes(flat["owner"], n, cap)
-    meta = jnp.stack(
-        [flat["qidx"], flat["table"], flat["local"], flat["mask"], flat_tgt],
-        axis=-1,
-    )
+    dest = flat["owner"]
+    fanout = 1
+    if reps_on:
+        dest, rep_col, fanout = _replica_targets(cfg, dest, live)
+        if fanout > 1:
+            flat = {k: jnp.tile(v, fanout) for k, v in flat.items()}
+            flat_tgt = jnp.tile(flat_tgt, fanout)
+    cap = _route_cap(cfg, b_loc) * fanout
+    route = routing_mod.plan_routes(dest, n, cap)
+    cols = [flat["qidx"], flat["table"], flat["local"], flat["mask"], flat_tgt]
+    if reps_on:
+        cols.append(rep_col)
+    meta = jnp.stack(cols, axis=-1)
     send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
     recv_meta = cx.all_to_all(send_meta)
     rtable = jnp.maximum(recv_meta[..., 1].reshape(-1), 0)
     rlocal = jnp.maximum(recv_meta[..., 2].reshape(-1), 0)
     rmask = jnp.maximum(recv_meta[..., 3].reshape(-1), 0)
     rtgt = recv_meta[..., 4].reshape(-1)
+    rrep = None
+    if reps_on:
+        rrep = jnp.clip(recv_meta[..., 5].reshape(-1), 0, cfg.replication - 1)
 
     hit = _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal,
-                         rmask, rtgt)
+                         rmask, rtgt, rep_ids=rep_ids, rep_sel=rrep)
     # empty-slot rows carry rtgt = -1, which DOES match empty bucket ids
     # (-1); this validity mask is what discards those spurious hits.
     hit = hit & (recv_meta[..., 1].reshape(-1) >= 0)
+    if reps_on:
+        hit = hit & cx.alive(live)
 
     back = cx.all_to_all(hit.reshape(n, cap).astype(jnp.int32))
-    got = routing_mod.return_to_origin(route, back, 0)       # [b_loc*L]
-    hits = got.reshape(b_loc, L).any(axis=-1)
+    got = routing_mod.return_to_origin(route, back, 0)       # [b*L*fan]
+    hits = got.reshape(fanout, b_loc, L).any(axis=(0, 2))
     return hits, route.dropped
 
 
@@ -688,6 +852,33 @@ def payload_sync_kernel(
     live = (store_ids >= 0) & (store_ids < nv)
     gathered = vec_all[jnp.clip(store_ids, 0, nv - 1)]
     return jnp.where(live[..., None], gathered, store_payload)
+
+
+def replicate_kernel(cfg: RuntimeConfig, cx, store_ids, store_payload):
+    """Per-node body of replica construction: ship this node's zone to its
+    R-1 ring successors, one ppermute per replica rank.
+
+    Replica rank r of node j's zone lands on node (j + r) % n
+    (`CanTopology.replicas_of`), so node i's received slice r-1 holds the
+    zone of node (i - r) % n — same local bucket indices as on the
+    primary.  Returns (rep_ids [T, R-1, NBl, C], rep_payload [..., D]).
+
+    Announce-coupled freshness (paper Sec. 4.1): the driver re-runs this
+    after every announce round (insert + expire + payload_sync), which IS
+    the replication of those writes — soft state needs no separate
+    replica-maintenance protocol, and `costmodel.estimate_replication_bytes`
+    charges each fan-out.
+    """
+    n = cx.n
+    ids_slices, pay_slices = [], []
+    for r in range(1, cfg.replication):
+        perm = [(i, (i + r) % n) for i in range(n)]
+        ids_slices.append(cx.ppermute(store_ids, perm))
+        pay_slices.append(cx.ppermute(store_payload, perm))
+    return (
+        jnp.stack(ids_slices, axis=1),
+        jnp.stack(pay_slices, axis=1),
+    )
 
 
 # -----------------------------------------------------------------------------
@@ -871,6 +1062,16 @@ class IndexRuntime:
             lambda: self._dist().make_refresh_cache(self.cfg, self.mesh),
         )
 
+    def make_replicate_step(self):
+        """Replica-slice construction (R-way availability, DESIGN.md
+        Sec. 10), or None at replication == 1."""
+        if self.cfg.replication == 1:
+            return None
+        return self._step(
+            "replicate",
+            lambda: self._dist().make_replicate_store(self.cfg, self.mesh),
+        )
+
     # -- host-level convenience API (topology-blind drivers) ------------------
 
     def shard_store(self, store: BucketStore) -> BucketStore:
@@ -905,14 +1106,39 @@ class IndexRuntime:
             return None
         return refresh(store.ids, store.payload)
 
+    def replicate_store(self, store: BucketStore):
+        """Build the (rep_ids, rep_payload) slices from the current store,
+        or None at replication == 1.  Call after every announce round —
+        replica freshness rides the soft-state re-announce cycle."""
+        step = self.make_replicate_step()
+        if step is None:
+            return None
+        return step(store.ids, store.payload)
+
+    def _live_arr(self, live):
+        if live is None:
+            return jnp.ones((self.cfg.n_nodes,), jnp.int32)
+        return jnp.asarray(live, jnp.int32)
+
     def search(self, hyperplanes, store: BucketStore, q, *, cache=None,
-               corpus=None, exclude=None, m: int | None = None):
+               corpus=None, exclude=None, m: int | None = None,
+               replicas=None, live=None):
         """(ids [nq, m], scores [nq, m], dropped int32) over this topology.
 
         `m` defaults to cfg.m (mesh steps bake it — passing a different m
         there is an error).  `corpus`/`exclude` are the single-host
         reference data model and only exist on the 1-node topology.
+        With `cfg.replication > 1`, `replicas` (from `replicate_store`) is
+        required and `live` ([n_nodes] 0/1, default all-live) selects the
+        replica owners reads may land on.
         """
+        if self.cfg.replication > 1 and replicas is None:
+            raise ValueError(
+                "replication > 1: pass replicas= (see replicate_store)"
+            )
+        if self.cfg.replication == 1 and (replicas is not None
+                                          or live is not None):
+            raise ValueError("replicas/live require cfg.replication > 1")
         qd = self._put_batch(q, True)
         if self.mesh is None:
             m = self.cfg.m if m is None else m
@@ -934,10 +1160,19 @@ class IndexRuntime:
         args = (hyperplanes, store.ids, store.payload)
         if cache is not None:
             args += tuple(cache)
+        if self.cfg.replication > 1:
+            args += (replicas[0], replicas[1], self._live_arr(live))
         return step(*args, qd)
 
     def contains(self, hyperplanes, store: BucketStore, q, targets, *,
-                 cache=None):
+                 cache=None, replicas=None, live=None):
+        if self.cfg.replication > 1 and replicas is None:
+            raise ValueError(
+                "replication > 1: pass replicas= (see replicate_store)"
+            )
+        if self.cfg.replication == 1 and (replicas is not None
+                                          or live is not None):
+            raise ValueError("replicas/live require cfg.replication > 1")
         qd = self._put_batch(q, True)
         td = self._put_batch(np.asarray(targets, np.int32), False)
         step = self.make_contains_step()
@@ -946,7 +1181,49 @@ class IndexRuntime:
         args = (hyperplanes, store.ids)
         if cache is not None:
             args += (cache[0],)
+        if self.cfg.replication > 1:
+            args += (replicas[0], self._live_arr(live))
         return step(*args, qd, td)
+
+
+# -----------------------------------------------------------------------------
+# failure injection: fail-stop kill with NO handoff (DESIGN.md Sec. 10)
+# -----------------------------------------------------------------------------
+
+
+def kill_node(rt: IndexRuntime, store: BucketStore, replicas, node: int):
+    """Fail-stop loss of one node: its bucket zone AND its held replica
+    slices vanish with NO handoff (contrast `reshard`, the graceful path).
+
+    Models the P2P peer that simply disappears: the zone `zone_range(node)`
+    is blanked in the primary store, and the node's replica slices (copies
+    of OTHER nodes' zones it was holding) are blanked too — replicas OF its
+    zone on its ring successors survive untouched, which is what quorum /
+    first-responder reads then serve from.  Bumps `generation` so serve
+    caches drop results that may contain the dead node's rows.  Returns
+    (store, replicas); pair with a 0 entry in the `live` mask until the
+    next re-announce repopulates the zone (`estimate_recovery_bytes`).
+    """
+    s, e = rt.topology.zone_range(node)
+    payload = store.payload
+    if payload is not None:
+        payload = payload.at[:, s:e].set(0.0)
+    new_store = dataclasses.replace(
+        store,
+        ids=store.ids.at[:, s:e].set(store_mod.EMPTY),
+        timestamps=store.timestamps.at[:, s:e].set(0),
+        write_ptr=store.write_ptr.at[:, s:e].set(0),
+        payload=payload,
+        generation=store.generation + 1,
+    )
+    new_reps = replicas
+    if replicas is not None:
+        rep_ids, rep_payload = replicas
+        new_reps = (
+            rep_ids.at[:, :, s:e].set(store_mod.EMPTY),
+            rep_payload.at[:, :, s:e].set(0.0),
+        )
+    return new_store, new_reps
 
 
 # -----------------------------------------------------------------------------

@@ -116,10 +116,27 @@ def insert_masked(
     dropped by the scatter (mode='drop'), so they can't clobber live
     slots — this is what lets the sharded runtime insert 'only the
     vectors I own' branch-free.
+
+    Duplicate ids WITHIN one batch are deduplicated keep-last before any
+    scatter: without this, two rows carrying the same (new) id both miss
+    the refresh-in-place match and both ring-append — two live copies of
+    one user in a bucket, which double-counts it in scoring and survives
+    GC twice.  Keep-last matches `build_store_host`'s bulk-build
+    semantics ('later duplicates overwrite earlier ones') and the
+    re-announce discipline: the last announcement is the current one.
     """
     l = table
     nb, cap = store.num_buckets, store.capacity
     valid = ids >= 0
+    n = ids.shape[0]
+    if n > 1:
+        # in-batch dedupe, keep-last: stable-sort by id, keep only the
+        # final row of each equal-id run (stable => batch order preserved
+        # within a run), and route the rest out-of-bounds via `valid`.
+        order_d = jnp.argsort(ids, stable=True)
+        s = ids[order_d]
+        last = jnp.concatenate([s[:-1] != s[1:], jnp.ones((1,), bool)])
+        valid &= jnp.zeros((n,), bool).at[order_d].set(last)
     bucket = jnp.where(valid, buckets.astype(jnp.int32) % nb, nb)  # nb = OOB
     bucket_c = jnp.minimum(bucket, nb - 1)
 
@@ -184,12 +201,22 @@ def insert_batch(
 
 @partial(jax.jit, donate_argnums=(0,))
 def expire(store: BucketStore, now: jax.Array, ttl: int) -> BucketStore:
-    """Garbage-collect entries not refreshed within `ttl` ticks (Sec. 4.1)."""
+    """Garbage-collect entries not refreshed within `ttl` ticks (Sec. 4.1).
+
+    `generation` bumps only when something was actually collected: a
+    no-op GC pass leaves the readable state bit-identical, and bumping
+    anyway would evict every sketch-keyed query-cache entry for nothing
+    (the serving layer's invalidation is generation-based).  The bump is
+    computed from traced data (`jnp.any` cast to int32), so the
+    conditional costs no retrace.  Note the `ids != EMPTY` guard: empty
+    slots carry timestamp 0 and would otherwise read as 'stale' forever,
+    making every pass look like a collection."""
     stale = (now - store.timestamps) > ttl
+    collected = stale & (store.ids != EMPTY)
     return dataclasses.replace(
         store,
-        ids=jnp.where(stale, EMPTY, store.ids),
-        generation=store.generation + 1,
+        ids=jnp.where(collected, EMPTY, store.ids),
+        generation=store.generation + jnp.any(collected).astype(jnp.int32),
     )
 
 
@@ -203,7 +230,10 @@ def build_store_host(
     """Fast host-side bulk build for large corpora (preprocessing).
 
     Keeps the *last* `capacity` entries per bucket when overflowing, matching
-    the ring-buffer semantics of `insert_batch`.
+    the ring-buffer semantics of `insert_batch`.  Ids here are positional
+    (`arange(n)`), so an in-batch duplicate cannot occur by construction —
+    the same keep-last outcome `insert_batch` now enforces explicitly
+    (tests/test_store.py checks the two builds agree).
     """
     n, T = codes.shape
     ids_arr = np.full((T, num_buckets, capacity), -1, dtype=np.int32)

@@ -84,7 +84,7 @@ class RuntimeBackend:
     """
 
     def __init__(self, source, hyperplanes=None, store=None, corpus=None,
-                 cache=None):
+                 cache=None, replicas=None, live=None):
         if isinstance(source, LshEngine):
             runtime = source.runtime
             hyperplanes = source.hyperplanes if hyperplanes is None else hyperplanes
@@ -106,11 +106,21 @@ class RuntimeBackend:
         if not runtime.is_distributed and cache is not None:
             raise ValueError("neighbor caches exist only on mesh runtimes "
                              "(the 1-node topology has no node bits)")
+        if runtime.cfg.replication > 1 and replicas is None:
+            raise ValueError(
+                "cfg.replication > 1 needs replicas= "
+                "(IndexRuntime.replicate_store)"
+            )
+        if runtime.cfg.replication == 1 and (replicas is not None
+                                             or live is not None):
+            raise ValueError("replicas/live require cfg.replication > 1")
         self._rt = runtime
         self._hp = hyperplanes
         self._store = store
         self._corpus = corpus
         self._cache = cache
+        self._replicas = replicas
+        self._live = self._live_arr(runtime, live)
         self._generation = int(np.asarray(store.generation))
         self._cost_gen: int | None = None
         self._cost: costmodel.QueryCost | None = None
@@ -162,6 +172,14 @@ class RuntimeBackend:
 
         self._sketch_jit = jax.jit(_sketch)
 
+    @staticmethod
+    def _live_arr(runtime, live):
+        if runtime.cfg.replication == 1:
+            return None
+        if live is None:
+            return np.ones(runtime.cfg.n_nodes, np.int32)
+        return np.asarray(live, np.int32)
+
     @property
     def runtime(self) -> IndexRuntime:
         return self._rt
@@ -188,7 +206,8 @@ class RuntimeBackend:
         return self._generation
 
     def update(self, store=None, corpus=None, cache=None, *,
-               runtime=None, hyperplanes=None) -> None:
+               runtime=None, hyperplanes=None, replicas=None,
+               live=None) -> None:
         """Install new store state (and/or corpus / refreshed neighbor
         cache) — a write epoch.  The host-side generation snapshot is what
         cache lookups compare against, so it syncs here, once per update,
@@ -208,7 +227,14 @@ class RuntimeBackend:
         dropped when swapping to a mesh runtime, whose shards embed
         payloads in their bucket slots.  Callers serving live traffic
         should swap through `RetrievalFrontend.update_backend`, which
-        drains in-flight batches on the OLD topology first."""
+        drains in-flight batches on the OLD topology first.
+
+        `replicas=`/`live=` install fresh replica slices and a liveness
+        mask on a replicated backend (DESIGN.md Sec. 10) — the failure
+        path: a kill or a revival arrives as `update(store=...,
+        replicas=..., live=...)` with NO runtime swap, so serving
+        continues on the same binding (m-headroom preserved) while the
+        generation bump kills every pre-failure cached result."""
         # -- validate the whole request before mutating anything ----------
         new_rt = self._rt if runtime is None else runtime
         if runtime is not None and store is None:
@@ -241,6 +267,15 @@ class RuntimeBackend:
         if cache is not None and not new_rt.is_distributed:
             raise ValueError("neighbor caches exist only on mesh runtimes "
                              "(the 1-node topology has no node bits)")
+        if new_rt.cfg.replication == 1 and (replicas is not None
+                                            or live is not None):
+            raise ValueError("replicas/live require cfg.replication > 1")
+        if runtime is not None and runtime.cfg.replication > 1 \
+                and replicas is None:
+            raise ValueError(
+                "swapping to a replicated runtime needs replicas= "
+                "(IndexRuntime.replicate_store)"
+            )
 
         # -- apply (each field assigned once; _bind reads the final state)
         if store is not None:
@@ -249,6 +284,10 @@ class RuntimeBackend:
             self._corpus = corpus
         if cache is not None:
             self._cache = cache
+        if replicas is not None:
+            self._replicas = replicas
+        if live is not None:
+            self._live = self._live_arr(new_rt, live)
         if runtime is not None:
             self._rt = runtime
             if hyperplanes is not None:
@@ -260,6 +299,14 @@ class RuntimeBackend:
                 self._corpus = None
             if cache is None:
                 self._cache = None
+            # replica state is topology-bound too: an unreplicated target
+            # drops it; a replicated one resets liveness to all-ones
+            # unless the swap brought a mask along
+            if runtime.cfg.replication == 1:
+                self._replicas = None
+                self._live = None
+            elif live is None:
+                self._live = self._live_arr(runtime, None)
             self._bind()
         self._generation = max(
             int(np.asarray(self._store.generation)), self._generation + 1
@@ -303,6 +350,9 @@ class RuntimeBackend:
         args = (self._hp, self._store.ids, self._store.payload)
         if self._cache is not None:
             args += tuple(self._cache)
+        if self._rt.cfg.replication > 1:
+            args += (self._replicas[0], self._replicas[1],
+                     jnp.asarray(self._live, jnp.int32))
         ids, scores, dropped = self._dispatch_jit(*args, q)
         ids = np.asarray(ids)
         scores = np.asarray(scores)
@@ -435,7 +485,7 @@ class RetrievalFrontend:
             codes = self.backend.sketch_codes(q_pad)[:n]
             miss_rows = []
             for i in range(n):
-                keys[i] = self.cache.key(codes[i], int(ex[i]), q[i])
+                keys[i] = self.cache.key(codes[i], int(ex[i]), q[i], m)
                 e = self.cache.get(keys[i], gen)
                 if e is None:
                     miss_rows.append(i)

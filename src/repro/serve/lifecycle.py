@@ -19,11 +19,14 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing, metrics
-from repro.core.churn import ChurnConfig, _lsh_setup, _pad_to, _trajectory
+from repro.core import costmodel, hashing, metrics
+from repro.core.churn import (
+    ChurnConfig, _lsh_setup, _pad_to, _trajectory, _zone_mesh,
+    make_churn_runtime,
+)
 from repro.core.corpus import DenseCorpus
 from repro.core.engine import EngineConfig, LshEngine
-from repro.core.runtime import IndexRuntime, RuntimeConfig, reshard
+from repro.core.runtime import IndexRuntime, RuntimeConfig, kill_node, reshard
 from repro.core.store import expire, insert_batch, make_store
 from repro.serve.frontend import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
@@ -191,6 +194,143 @@ def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
         repeat_mismatches=repeat_mismatches,
         swaps=swaps,
         total_handoff_bytes=int(total_handoff),
+        stale_evictions=0 if cache is None else cache.stale_evictions,
+        cache_hits=0 if cache is None else cache.hits,
+        stats=frontend.stats,
+        summary=frontend.stats.summary(),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeFailureConfig:
+    """Serving through a fail-stop node loss (DESIGN.md Sec. 10): one
+    node of an R-way replicated mesh dies MID-EPOCH with no handoff, the
+    frontend keeps serving through the surviving replicas, and the next
+    announce epoch revives the node."""
+
+    churn: ChurnConfig = ChurnConfig()
+    n_nodes: int = 4
+    replication: int = 2
+    read_mode: str = "first"        # first | quorum
+    kill_epoch: int = 3             # read epoch the node dies in
+    kill_node: int = 1
+    max_batch: int = 32
+    queue_capacity: int = 512
+    cache: bool = True
+
+
+def run_serve_failure(cfg: ServeFailureConfig, mesh=None) -> dict:
+    """Churn trajectory through ONE long-lived frontend while a node dies
+    and revives under it.
+
+    The backend is a replicated mesh runtime (`make_churn_runtime` with
+    R > 1); every write epoch re-announces, refreshes the NB cache,
+    re-replicates (`IndexRuntime.replicate_store`, bytes charged via the
+    Sec. 10 closed form), and installs the lot through
+    `frontend.update_backend`.  At `kill_epoch` the epoch's queries are
+    served once at full liveness, then `kill_node` blanks the victim's
+    zone and replica slices and the DEAD-node state installs as a plain
+    `update(store=, replicas=, live=)` — no runtime swap, so the dispatch
+    binding (and its m-headroom) survives while the generation bump kills
+    every pre-failure cached result.  The same queries are served again
+    through the survivors; the next announce revives the node (recovery
+    bytes charged) and serving returns to full liveness.
+
+    Returns per-epoch recalls plus the kill-epoch pair
+    (`recall_before_kill` / `recall_after_kill`), generation trace, and
+    the usual cache/stats evidence that repeats within a generation are
+    bit-identical and nothing stale is ever served.
+    """
+    c = cfg.churn
+    if not 1 <= cfg.kill_epoch <= c.epochs:
+        raise ValueError(f"kill_epoch {cfg.kill_epoch} outside the "
+                         f"trajectory's read epochs 1..{c.epochs}")
+    if not 0 <= cfg.kill_node < cfg.n_nodes:
+        raise ValueError(f"kill_node {cfg.kill_node} outside "
+                         f"0..{cfg.n_nodes - 1}")
+    params, hp = _lsh_setup(c)
+    if mesh is None:
+        mesh = _zone_mesh(cfg.n_nodes)
+    rt = make_churn_runtime(
+        c, cfg.n_nodes, mesh=mesh,
+        replication=cfg.replication, read_mode=cfg.read_mode,
+    )
+    store = make_store(c.L, params.num_buckets, c.capacity,
+                      payload_dim=c.dim)
+    live = np.ones((cfg.n_nodes,), np.int32)
+    replicas = rt.replicate_store(store)
+    nbcache = rt.refresh_cache(store)
+
+    backend = RuntimeBackend(rt, hyperplanes=hp, store=store,
+                             cache=nbcache, replicas=replicas)
+    frontend = RetrievalFrontend(
+        backend,
+        FrontendConfig(
+            m=c.m, max_batch=cfg.max_batch,
+            queue_capacity=cfg.queue_capacity, cache=cfg.cache,
+        ),
+    )
+
+    recalls, generations, degraded = [], [], []
+    repeat_mismatches = 0
+    replication_bytes = recovery_bytes = 0
+    recall_before_kill = recall_after_kill = None
+    per_rep = costmodel.estimate_replication_bytes(
+        c.L, c.num_users, c.dim, cfg.replication)
+    per_zone = costmodel.estimate_recovery_bytes(
+        c.L, params.num_buckets // cfg.n_nodes, c.capacity, c.dim)
+    for epoch, vecs, do_refresh, qidx, ideal in _trajectory(c):
+        if do_refresh:  # -- write epoch (revives any dead node) ----------
+            if not live.all():
+                recovery_bytes += per_zone * int((live == 0).sum())
+                live[:] = 1
+            nu = -(-c.num_users // rt.n_devices) * rt.n_devices
+            vpad = _pad_to(vecs, nu, 0.0)
+            ids_pad = _pad_to(np.arange(c.num_users, dtype=np.int32),
+                              nu, -1)
+            store = rt.insert(hp, store, vpad, ids_pad, epoch)
+            if epoch > 0:
+                store = rt.expire(store, epoch, ttl=c.ttl_epochs)
+            store = rt.payload_sync(store, vpad)
+            nbcache = rt.refresh_cache(store)
+            replicas = rt.replicate_store(store)
+            replication_bytes += per_rep
+            frontend.update_backend(store=store, cache=nbcache,
+                                    replicas=replicas, live=live.copy())
+        if epoch == 0:
+            continue
+
+        # -- read epoch ----------------------------------------------------
+        q = vecs[qidx]
+        if epoch == cfg.kill_epoch:
+            # full-liveness pass first, then the node dies MID-EPOCH
+            ids_pre, _ = frontend.search(q, exclude=qidx)
+            recall_before_kill = metrics.recall_at_m(ids_pre, ideal)
+            store, replicas = kill_node(rt, store, replicas, cfg.kill_node)
+            live[cfg.kill_node] = 0
+            frontend.update_backend(store=store, replicas=replicas,
+                                    live=live.copy())
+        ids, _ = frontend.search(q, exclude=qidx)
+        recalls.append(metrics.recall_at_m(ids, ideal))
+        if epoch == cfg.kill_epoch:
+            recall_after_kill = recalls[-1]
+        ids2, _ = frontend.search(q, exclude=qidx)
+        if not np.array_equal(ids2, ids):
+            repeat_mismatches += 1  # a cache hit diverged — must be 0
+        generations.append(backend.generation)
+        degraded.append(bool((live == 0).any()))
+
+    cache = frontend.cache
+    return dict(
+        recalls=np.asarray(recalls),
+        final_recall=float(recalls[-1]),
+        generations=np.asarray(generations),
+        degraded=np.asarray(degraded),
+        recall_before_kill=recall_before_kill,
+        recall_after_kill=recall_after_kill,
+        repeat_mismatches=repeat_mismatches,
+        replication_bytes=int(replication_bytes),
+        recovery_bytes=int(recovery_bytes),
         stale_evictions=0 if cache is None else cache.stale_evictions,
         cache_hits=0 if cache is None else cache.hits,
         stats=frontend.stats,

@@ -65,18 +65,22 @@ class QueryCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def key(self, codes, exclude: int, q: np.ndarray | None = None) -> tuple:
+    def key(self, codes, exclude: int, q: np.ndarray | None = None,
+            m: int | None = None) -> tuple:
         """Build the lookup key for one query.
 
         codes: the L-table sketch-code tuple/array of the query;
         exclude: the self-exclusion id (-2 when unused) — part of the key
         because it changes the result set; q: raw query vector, digested
-        in exact mode and ignored in sketch_only mode.
+        in exact mode and ignored in sketch_only mode; m: the requested
+        top-m — also part of the key (an entry computed at a smaller m is
+        a TRUNCATED result and must never serve a larger-m request).
         """
         code_t = tuple(int(c) for c in np.asarray(codes).reshape(-1))
+        m_t = -1 if m is None else int(m)
         if self.sketch_only or q is None:
-            return (code_t, int(exclude))
-        return (code_t, int(exclude), query_digest(q))
+            return (code_t, int(exclude), m_t)
+        return (code_t, int(exclude), m_t, query_digest(q))
 
     def get(self, key: tuple, generation: int) -> CacheEntry | None:
         """Entry for `key` iff it was computed at `generation`; a stale

@@ -103,10 +103,11 @@ class ServeStats:
 
     def percentile(self, p: float) -> float:
         """Latency percentile in microseconds over the retained window
-        (nan when nothing completed)."""
+        (0.0 when nothing completed — summaries must stay printable, and
+        a nan would poison any downstream arithmetic silently)."""
         lat = self.latencies_us
         if lat.size == 0:
-            return float("nan")
+            return 0.0
         return float(np.percentile(lat, p))
 
     @property
@@ -121,14 +122,22 @@ class ServeStats:
 
     @property
     def qps(self) -> float:
+        """Completed queries per wall second (0.0 before any completion —
+        same no-nan contract as `percentile`)."""
         w = self.wall_seconds
-        return self.completed / w if w > 0 else float("nan")
+        return self.completed / w if w > 0 else 0.0
 
     @property
     def messages_per_query(self) -> float:
         """Average overlay messages per COMPLETED query — cache hits cost 0,
         so this drops below the Table-1 closed form as the hit rate rises."""
         return self.messages / max(self.completed, 1)
+
+    @property
+    def nodes_contacted_per_query(self) -> float:
+        """Average overlay nodes contacted per COMPLETED query (Table 1's
+        first column, hit-rate discounted like `messages_per_query`)."""
+        return self.nodes_contacted / max(self.completed, 1)
 
     def summary(self) -> dict:
         return dict(
@@ -144,6 +153,7 @@ class ServeStats:
             mean_batch=self.dispatched / max(self.batches, 1),
             dropped_probes=self.dropped_probes,
             messages_per_query=self.messages_per_query,
+            nodes_contacted_per_query=self.nodes_contacted_per_query,
             vectors_searched_per_query=(
                 self.vectors_searched / max(self.completed, 1)
             ),
@@ -164,5 +174,6 @@ class ServeStats:
             f"[serve] cache hit rate={s['hit_rate']:.2f} "
             f"({s['cache_hits']}/{s['completed']})  "
             f"messages/query={s['messages_per_query']:.1f}  "
+            f"nodes/query={s['nodes_contacted_per_query']:.1f}  "
             f"dropped_probes={s['dropped_probes']}"
         )

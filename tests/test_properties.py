@@ -7,6 +7,10 @@ Two families of invariants that example tests can only spot-check:
     identity, zones tile the bucket space, and the elastic-membership
     closed form (`moved_buckets`) matches an exact owner-array count for
     every power-of-two join/leave round;
+  * replica coverage — for any R-way placement (`replicas_of`) and ANY
+    single fail-stop loss, every bucket keeps >= R-1 live replica owners
+    and the quorum-readable id set is a superset of the survivor-only
+    reference (complete at R >= 2);
   * routing conservation — every planned probe is either delivered to its
     destination buffer exactly once or counted in `dropped`, never both
     and never silently lost, over random destination plans and
@@ -123,6 +127,64 @@ def test_can_invariants_examples():
             _check_zone_tiling(k, a)
             for a_new in range(0, min(k, 5) + 1):
                 _check_moved_buckets(k, a, a_new)
+
+
+# -----------------------------------------------------------------------------
+# replica coverage invariants (DESIGN.md Sec. 10)
+# -----------------------------------------------------------------------------
+
+
+def _check_replica_coverage(k: int, a: int, R: int, dead: int) -> None:
+    """R-way placement survives any single fail-stop loss.
+
+    For every bucket: its R owners (`replicas_of`) are distinct nodes led
+    by the primary, and after killing ANY one node at least R-1 of them
+    are still alive — so with R >= 2 every bucket stays readable.  Under
+    the read model (each live owner serves its full zone copy), the
+    quorum-read id set (any live owner) is a SUPERSET of the
+    survivor-only reference (primary alive), and at R >= 2 a single kill
+    leaves it complete.
+    """
+    topo = CanTopology(k=k, n_nodes=1 << a)
+    R = min(R, topo.n_nodes)
+    codes = np.arange(1 << k, dtype=np.uint32)
+    owners = np.asarray(topo.replicas_of(codes, R))          # [B, R]
+
+    assert owners.shape == (codes.size, R)
+    assert np.array_equal(owners[:, 0], topo.node_of_np(codes))
+    assert owners.min() >= 0 and owners.max() < topo.n_nodes
+    # the R owners of a bucket are R DISTINCT nodes (ring successors)
+    assert all(len({int(x) for x in row}) == R for row in owners)
+
+    live = np.ones(topo.n_nodes, dtype=bool)
+    live[dead % topo.n_nodes] = False
+    live_owners = live[owners]                               # [B, R]
+    assert np.all(live_owners.sum(axis=1) >= R - 1)
+    if R >= 2:
+        assert np.all(live_owners.any(axis=1))               # readable
+
+    # read model: bucket is servable by its primary alone (survivor-only
+    # reference) vs by any live owner (what first/quorum reads reach)
+    survivor_ids = set(codes[live[owners[:, 0]]].tolist())
+    quorum_ids = set(codes[live_owners.any(axis=1)].tolist())
+    assert survivor_ids <= quorum_ids
+    if R >= 2:
+        assert quorum_ids == set(codes.tolist())             # no hole
+
+
+@given(st.integers(1, 10), st.integers(0, 5), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+def test_replica_coverage_property(k, a, R, dead):
+    _check_replica_coverage(k, min(a, k), R, dead)
+
+
+def test_replica_coverage_examples():
+    for k in (1, 3, 6, 9):
+        for a in range(0, min(k, 4) + 1):
+            n = 1 << a
+            for R in (1, 2, 3, n):
+                for dead in range(n):
+                    _check_replica_coverage(k, a, R, dead)
 
 
 # -----------------------------------------------------------------------------

@@ -186,6 +186,40 @@ def test_qcache_lru_and_generation():
     assert c_approx.key([1, 2, 3], -2, q) == c_approx.key([1, 2, 3], -2, q2)
 
 
+def test_cache_key_includes_m():
+    """Regression: the cache key used to omit the requested top-m, so an
+    entry computed at a small m could serve a larger-m request TRUNCATED
+    (correct prefix, silently missing tail).  m is now part of the key."""
+    c = QueryCache()
+    q = np.ones((4,), np.float32)
+    assert c.key([1, 2, 3], -2, q, m=4) != c.key([1, 2, 3], -2, q, m=8)
+    c_approx = QueryCache(sketch_only=True)
+    assert c_approx.key([1, 2, 3], -2, m=4) != c_approx.key([1, 2, 3], -2,
+                                                           m=8)
+    # end-to-end: one shared cache behind two serving depths — the m=8
+    # frontend must recompute, never serve the m=4 entry's prefix
+    emb, engine, _ = _make_engine()
+    backend = RuntimeBackend(engine)
+    fe4 = RetrievalFrontend(
+        backend, FrontendConfig(m=4, max_batch=16, queue_capacity=64,
+                                cache=True),
+    )
+    q = emb[:8]
+    ids4, _ = fe4.search(q)
+    assert ids4.shape[1] == 4
+    fe8 = RetrievalFrontend(
+        backend, FrontendConfig(m=M, max_batch=16, queue_capacity=64,
+                                cache=True),
+    )
+    fe8.cache = fe4.cache  # the two depths share one result cache
+    ids8, _ = fe8.search(q)
+    ref = engine.search(jnp.asarray(q), m=M)
+    np.testing.assert_array_equal(ids8, ref.ids)
+    # and the m=4 entries are still served at m=4 (distinct key spaces)
+    ids4b, _ = fe4.search(q)
+    np.testing.assert_array_equal(ids4b, ids4)
+
+
 def test_store_generation_bumps():
     store = make_store(L, 1 << K, 8)
     assert int(store.generation) == 0
@@ -281,6 +315,36 @@ def test_telemetry_aggregates_cost_and_drops():
     assert out["p99_us"] <= 300.0
     # format_summary is the driver's human surface — must not raise
     assert "dropped_probes=3" in s.format_summary()
+
+
+def test_telemetry_empty_summary_is_finite():
+    """Regression: before anything completes, qps/percentiles must be
+    well-defined zeros, not nan (np.percentile of an empty array) — a
+    crashed run's partial summary still has to print and aggregate."""
+    s = ServeStats()
+    out = s.summary()
+    for key, v in out.items():
+        if isinstance(v, float):
+            assert np.isfinite(v), key
+    assert out["qps"] == 0.0
+    assert out["p50_us"] == 0.0 and out["p99_us"] == 0.0
+    assert "nodes/query=" in s.format_summary()  # must not raise either
+
+
+def test_telemetry_surfaces_nodes_contacted():
+    """`nodes_contacted` was accumulated but never read out: Table 1's
+    FIRST column (nodes contacted per query) now rides summary() and
+    format_summary(), hit-rate discounted like messages_per_query."""
+    s = ServeStats()
+    cost = costmodel.table1("cnb", k=6, L=4, bucket_size=2.0)
+    s.record_batch(2, 0, dropped_probes=0, cost=cost)
+    s.record_done(10.0, hit=False)
+    s.record_done(10.0, hit=False)
+    s.record_done(5.0, hit=True)  # a cache hit contacts no node
+    assert s.summary()["nodes_contacted_per_query"] == pytest.approx(
+        cost.nodes_contacted * 2 / 3)
+    assert f"nodes/query={cost.nodes_contacted * 2 / 3:.1f}" \
+        in s.format_summary()
 
 
 def test_telemetry_latency_window_is_bounded():

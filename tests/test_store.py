@@ -153,6 +153,69 @@ def test_wraparound_then_refresh_keeps_single_copy():
     assert int(store.write_ptr[0, 0]) == 2              # no append happened
 
 
+def test_duplicate_ids_in_one_batch_keep_last():
+    """Regression: two rows with the same NEW id in one batch used to both
+    miss the refresh-in-place match and both ring-append — two live copies
+    of one user.  In-batch dedupe keeps exactly one, with the LAST row's
+    timestamp/payload (the current announcement wins, matching
+    `build_store_host`'s keep-last bulk semantics)."""
+    store = make_store(1, 8, 4, payload_dim=2)
+    ids = jnp.asarray([5, 5, 7], jnp.int32)
+    codes = jnp.asarray([[3], [3], [3]], jnp.uint32)
+    pay = jnp.asarray([[1., 0.], [0., 1.], [.5, .5]], jnp.float32)
+    store = insert_batch(store, ids, codes, jnp.int32(1), pay)
+    bucket = np.asarray(store.ids[0, 3])
+    assert int((bucket == 5).sum()) == 1          # ONE copy, not two
+    assert int((bucket == 7).sum()) == 1
+    slot = int(np.argmax(bucket == 5))
+    assert np.allclose(np.asarray(store.payload[0, 3, slot]), [0., 1.])
+    # dedup-equivalence with the host bulk build: duplicates resolved
+    # keep-last stream identically to a batch that never had them
+    dedup = make_store(1, 8, 4, payload_dim=2)
+    dedup = insert_batch(
+        dedup, jnp.asarray([5, 7], jnp.int32),
+        jnp.asarray([[3], [3]], jnp.uint32), jnp.int32(1), pay[1:],
+    )
+    assert _occupied(store, 0, 3) == _occupied(dedup, 0, 3)
+
+
+def test_duplicate_ids_dont_inflate_write_ptr():
+    """The dropped duplicate must not advance the ring pointer either —
+    a phantom advance would evict a live slot on the next append."""
+    store = make_store(1, 2, 4)
+    store = insert_batch(
+        store, jnp.asarray([1, 1, 1, 2], jnp.int32),
+        jnp.zeros((4, 1), jnp.uint32), jnp.int32(0),
+    )
+    assert _occupied(store, 0, 0) == {1, 2}
+    assert int(store.write_ptr[0, 0]) == 2        # two appends, not four
+
+
+def test_expire_noop_keeps_generation():
+    """Regression: a GC pass that collects NOTHING used to bump
+    `generation` anyway, evicting every sketch-keyed query-cache entry
+    for free.  Now the bump is conditional on something actually being
+    collected — and empty slots (timestamp 0) never count as stale."""
+    store = make_store(1, 4, 4)
+    store = insert_batch(
+        store, jnp.arange(3, dtype=jnp.int32),
+        jnp.zeros((3, 1), jnp.uint32), jnp.int32(10),
+    )
+    g0 = int(store.generation)
+    store = expire(store, jnp.int32(11), ttl=5)   # nothing is stale
+    assert int(store.generation) == g0
+    assert _occupied(store, 0, 0) == {0, 1, 2}
+    store = expire(store, jnp.int32(12), ttl=5)   # still nothing
+    assert int(store.generation) == g0
+    store = expire(store, jnp.int32(20), ttl=5)   # everything is
+    assert int(store.generation) == g0 + 1
+    assert _occupied(store, 0, 0) == set()
+    # an ALL-EMPTY store is the sharp edge: ts==0 everywhere, every slot
+    # 'stale' by timestamp — but there is nothing to collect
+    store = expire(store, jnp.int32(30), ttl=5)
+    assert int(store.generation) == g0 + 1
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     st.integers(1, 40), st.integers(1, 4), st.integers(2, 8),
