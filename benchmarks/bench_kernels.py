@@ -101,7 +101,65 @@ def _planner_rows():
     return out
 
 
-def rows():
+def _fused_rows(smoke=False):
+    """Tentpole rows: staged pipeline (jit'd gather->score->top-m, which is
+    exactly `ref.fused_query_ref`) vs the fused mega-kernel, for f32 dot
+    payloads and bit-packed hamming sketches.  The packed-over-dot ratio is
+    a real measured speedup (both sides jit'd XLA); the fused Pallas row is
+    interpret-mode on CPU and labelled so."""
+    from functools import partial
+
+    from benchmarks import roofline
+
+    s = roofline._query_shapes(smoke)
+    v = roofline._query_inputs(s)
+    w = v["payw"].shape[-1]
+    shared = f"r={s['r']};P={s['p']};KC={s['c']};D={s['d']};W={w};m={s['m']}"
+
+    staged_dot = jax.jit(partial(ref.fused_query_ref, m=s["m"]))
+    staged_ham = jax.jit(partial(ref.fused_query_ref, m=s["m"],
+                                 score="hamming"))
+    us_dot = _time(staged_dot, v["ids"], v["pay"], v["q"], v["fb"],
+                   v["meta"], reps=2 if smoke else 5)
+    us_ham = _time(staged_ham, v["ids"], v["payw"], v["qw"], v["fb"],
+                   v["meta"], reps=2 if smoke else 5)
+
+    def frac(us, payload_bytes, score, fused):
+        mdl = roofline.query_model(
+            r=s["r"], p=s["p"], kc=s["c"], payload_bytes=payload_bytes,
+            m=s["m"], score=score, fused=fused)
+        return mdl["t_model"] * 1e6 / max(us, 1e-9)
+
+    out = [
+        (f"kernels/fused_staged_dot_{s['r']}r", us_dot,
+         f"roofline_frac={frac(us_dot, 4 * s['d'], 'dot', False):.3f};"
+         f"{shared}"),
+        (f"kernels/fused_staged_hamming_{s['r']}r", us_ham,
+         f"packed_over_dot={us_dot / us_ham:.3f}x;"
+         f"roofline_frac={frac(us_ham, 4 * w, 'hamming', False):.3f};"
+         f"{shared}"),
+    ]
+    mode = "interpret" if jax.default_backend() == "cpu" else "compiled"
+    fused_dot = partial(ops.fused_query, m=s["m"])
+    us_f = _time(lambda *a: fused_dot(*a), v["ids"], v["pay"], v["q"],
+                 v["fb"], v["meta"], reps=1)
+    out.append(
+        (f"kernels/fused_query_pallas_dot_{s['r']}r", us_f,
+         f"fused_over_staged={us_dot / us_f:.3f}x;mode={mode};"
+         f"roofline_frac={frac(us_f, 4 * s['d'], 'dot', True):.3f};"
+         f"{shared}"))
+    fused_ham = partial(ops.fused_query, m=s["m"], score="hamming")
+    us_fh = _time(lambda *a: fused_ham(*a), v["ids"], v["payw"], v["qw"],
+                  v["fb"], v["meta"], reps=1)
+    out.append(
+        (f"kernels/fused_query_pallas_hamming_{s['r']}r", us_fh,
+         f"fused_over_staged={us_ham / us_fh:.3f}x;mode={mode};"
+         f"roofline_frac={frac(us_fh, 4 * w, 'hamming', True):.3f};"
+         f"{shared}"))
+    return out
+
+
+def rows(smoke=False):
     rng = np.random.default_rng(0)
     out = []
     x = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
@@ -134,4 +192,5 @@ def rows():
 
     out.extend(_planner_rows())
     out.extend(_query_path_rows())
+    out.extend(_fused_rows(smoke=smoke))
     return out

@@ -1,0 +1,86 @@
+"""Gate a fresh BENCH_tier1.json against the committed baseline.
+
+CI runs ``benchmarks.run --smoke --json BENCH_tier1.json`` and then::
+
+    python -m benchmarks.check_regression BENCH_tier1.json \
+        benchmarks/baselines/BENCH_tier1_baseline.json
+
+Raw microseconds vary wildly across runner hardware, so the gate only
+checks machine-independent signals:
+
+  * no ``*/ERROR`` rows (a suite crashed mid-run);
+  * every ``<x>_over_<y>=<r>x`` ratio present in the baseline must still
+    exist and stay above ``THRESHOLD * baseline`` — e.g. the bit-packed
+    hamming speedup over f32 dot (``packed_over_dot``) regressing below
+    half its recorded value fails the build.
+
+Interpret-mode Pallas rows (``mode=interpret``) are exempt from the ratio
+floor: their absolute cost is a CPU-emulation artifact, not a perf signal
+(the row still must exist, and parity is enforced by the tests, not here).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+RATIO = re.compile(r"([A-Za-z0-9]+_over_[A-Za-z0-9]+)=([0-9.]+)x")
+THRESHOLD = 0.4
+
+
+def _ratios(rec: list[dict]) -> dict[str, tuple[float, bool]]:
+    out = {}
+    for row in rec:
+        derived = str(row.get("derived", ""))
+        interp = "mode=interpret" in derived
+        for key, val in RATIO.findall(derived):
+            out[f"{row['name']}::{key}"] = (float(val), interp)
+    return out
+
+
+def check(current: list[dict], baseline: list[dict]) -> list[str]:
+    failures = [
+        f"suite crashed: {row['name']} ({row.get('derived', '')})"
+        for row in current if "/ERROR" in row["name"]
+    ]
+    cur = _ratios(current)
+    for key, (base_val, _) in sorted(_ratios(baseline).items()):
+        if key not in cur:
+            failures.append(
+                f"missing ratio row: {key} (baseline {base_val:.3f}x)")
+            continue
+        cur_val, interp = cur[key]
+        if interp:
+            continue
+        if cur_val < base_val * THRESHOLD:
+            failures.append(
+                f"regressed: {key} = {cur_val:.3f}x < "
+                f"{THRESHOLD} * baseline {base_val:.3f}x")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print("usage: check_regression.py CURRENT.json BASELINE.json",
+              file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        current = json.load(f)
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}")
+        return 1
+    n = len(_ratios(baseline))
+    print(f"ok: {n} baseline ratio rows present, none below "
+          f"{THRESHOLD}x of baseline, no ERROR rows "
+          f"({len(current)} rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,9 @@ def main(argv=None) -> None:
                     help="comma-separated benchmark prefixes to run")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes / fewer reps where supported "
+                         "(kernels, roofline)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -41,10 +44,10 @@ def main(argv=None) -> None:
         ("fig4", lambda: fig4_sp_empirical.rows(full=args.full)),
         ("fig5", lambda: fig5_quality.rows(full=args.full)),
         ("churn", lambda: bench_churn.rows()),
-        ("kernels", lambda: bench_kernels.rows()),
+        ("kernels", lambda: bench_kernels.rows(smoke=args.smoke)),
         ("dist", lambda: bench_distributed.rows()),
         ("serve", lambda: bench_serve.rows()),
-        ("roofline", lambda: roofline.rows()),
+        ("roofline", lambda: roofline.rows(smoke=args.smoke)),
     ]
     wanted = [w for w in args.only.split(",") if w]
     collected: list[dict] = []

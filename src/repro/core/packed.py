@@ -1,0 +1,111 @@
+"""Bit-packed sketch-code layouts (DESIGN.md Sec. 11).
+
+The staged query path carries candidate payloads as f32 vectors
+[..., D]; at D = 128 that is 512 bytes per candidate where the sketch
+itself — the thing LSH scoring actually needs — fits in k*L bits.  This
+module owns the packed layout used by the hamming scoring mode and the
+fused query kernel:
+
+  * a vector's L k-bit sketch codes (`hashing.sketch_codes`, uint32
+    [..., L], k <= 30 bits each) fold into W = ceil(L*k / 32) dense
+    uint32 words [..., W]: global bit g = l*k + j lands in word g // 32
+    at position g % 32 (little-endian within and across words);
+  * `hamming_words` is the SWAR-popcount distance over that layout — the
+    scoring primitive of `score="hamming"` runtimes and the oracle the
+    multi-word `kernels/hamming.py` Pallas kernel must match;
+  * `pack_store_payload` is the migration shim: it rewrites an embedded
+    f32-payload `BucketStore` into the packed layout in place, so stores
+    built for dot scoring can be re-used by hamming runtimes without a
+    re-announce cycle.
+
+The layout is round-trip exact (`unpack_codes(pack_codes(c)) == c`) and
+distance-preserving (`hamming_words(pack(a), pack(b)) ==
+sum_l hamming(a_l, b_l)`); both are property-tested in
+tests/test_packed.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import popcount32
+
+
+def num_words(k: int, L: int) -> int:
+    """uint32 words needed to hold L k-bit codes."""
+    return max(1, -(-(k * L) // 32))
+
+
+def pack_codes(codes: jax.Array, k: int) -> jax.Array:
+    """uint32 codes [..., L] (k live bits each) -> packed words [..., W].
+
+    Bit j of table l lands at global position l*k + j; positions fill
+    word 0 upward, little-endian.  Bits >= k of each input code are
+    ignored (codes are masked), so callers may pass raw uint32 codes.
+    """
+    L = codes.shape[-1]
+    W = num_words(k, L)
+    j = jnp.arange(k, dtype=jnp.uint32)
+    bits = (codes[..., None].astype(jnp.uint32) >> j) & jnp.uint32(1)
+    flat = bits.reshape(codes.shape[:-1] + (L * k,))     # [..., L*k]
+    g = jnp.arange(L * k)
+    shifted = flat << (g % 32).astype(jnp.uint32)
+    words = [
+        jnp.sum(jnp.where(g // 32 == w, shifted, jnp.uint32(0)),
+                axis=-1, dtype=jnp.uint32)
+        for w in range(W)
+    ]
+    return jnp.stack(words, axis=-1)
+
+
+def unpack_codes(words: jax.Array, k: int, L: int) -> jax.Array:
+    """Inverse of `pack_codes`: words [..., W] -> uint32 codes [..., L]."""
+    g = jnp.arange(L * k)
+    bit = (
+        jnp.take(words, g // 32, axis=-1) >> (g % 32).astype(jnp.uint32)
+    ) & jnp.uint32(1)                                     # [..., L*k]
+    bit = bit.reshape(words.shape[:-1] + (L, k))
+    w = jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32)
+    return jnp.sum(bit * w, axis=-1, dtype=jnp.uint32)
+
+
+def hamming_words(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int32 [...]: popcount Hamming distance over the word axis (last).
+
+    `a`/`b` broadcast against each other up to the trailing [W] axis —
+    the jnp oracle for the packed scoring mode and the multi-word
+    `kernels.ops.hamming` Pallas kernel.
+    """
+    return jnp.sum(
+        popcount32(jnp.bitwise_xor(a.astype(jnp.uint32),
+                                   b.astype(jnp.uint32))),
+        axis=-1,
+    )
+
+
+def pack_store_payload(store, hyperplanes: jax.Array):
+    """Migration shim: embedded f32 payloads -> packed sketch-code words.
+
+    Re-sketches every live slot's payload vector with `hyperplanes`
+    [L, k, d] and stores the packed words as the new payload
+    (uint32 [T, NB, C, W]); empty slots become all-zero words.  The
+    result is exactly the store an insert-from-scratch under
+    `RuntimeConfig(score="hamming")` would build from the same vectors
+    (pinned in tests/test_packed.py), so existing dot-mode stores
+    migrate without a re-announce cycle.
+    """
+    from repro.core import hashing
+
+    if store.payload is None:
+        raise ValueError("pack_store_payload needs an embedded-payload store")
+    k = hyperplanes.shape[1]
+    t, nb, c, d = store.payload.shape
+    codes = hashing.sketch_codes(
+        store.payload.reshape(-1, d), hyperplanes
+    )                                                    # [T*NB*C, L]
+    words = pack_codes(codes, k).reshape(t, nb, c, -1)
+    words = jnp.where((store.ids >= 0)[..., None], words, jnp.uint32(0))
+    return dataclasses.replace(store, payload=words)

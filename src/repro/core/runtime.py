@@ -79,10 +79,21 @@ class RuntimeConfig:
     use_kernels: bool = False      # fused Pallas sketch + score/top-m
     replication: int = 1           # R-way zone replication (DESIGN.md Sec. 10)
     read_mode: str = "first"       # first (first live replica) | quorum
+    fused: str = "auto"            # fused query mega-kernel: auto | on | off
+    score: str = "dot"             # dot | hamming (bit-packed sketch words)
 
     def __post_init__(self):
         if self.read_mode not in ("first", "quorum"):
             raise ValueError(f"unknown read_mode {self.read_mode!r}")
+        if self.fused not in ("auto", "on", "off"):
+            raise ValueError(f"unknown fused mode {self.fused!r}")
+        if self.score not in ("dot", "hamming"):
+            raise ValueError(f"unknown score mode {self.score!r}")
+        if self.score == "hamming" and self.n_nodes != 1:
+            raise ValueError(
+                "score='hamming' is 1-node only (packed sketch words do "
+                "not ride the mesh steps yet)"
+            )
         if self.replication < 1:
             raise ValueError(
                 f"replication must be >= 1, got {self.replication}"
@@ -250,7 +261,8 @@ def _pool_topk(cfg, corpus, q, flat_ids, slot_vecs, m):
         scores = jnp.where(flat_ids >= 0, scores, jnp.float32(NEG_INF))
         return dedupe_topk(flat_ids, scores, m)
     return scoring.score_topk(
-        q, flat_ids, slot_vecs, m, use_kernels=cfg.use_kernels
+        q, flat_ids, slot_vecs, m, use_kernels=cfg.use_kernels,
+        score=cfg.score,
     )
 
 
@@ -301,6 +313,115 @@ def _score_local(
             slot_vecs = all_pay[table[:, None], rep_sel[:, None], probes]
         slot_vecs = slot_vecs.reshape(r, flat_ids.shape[1], -1)
     return _pool_topk(cfg, corpus, q, flat_ids, slot_vecs, m)
+
+
+# -----------------------------------------------------------------------------
+# fused query mega-kernel dispatch (DESIGN.md Sec. 11)
+# -----------------------------------------------------------------------------
+
+
+def _fused_on(cfg: RuntimeConfig, cx, *, has_payload: bool,
+              has_corpus: bool, need_payload: bool = True) -> bool:
+    """Should this step take the fused mega-kernel path?
+
+    `auto` engages only where the fused kernel is a strict drop-in: the
+    1-node topology (routed steps interleave collectives between the
+    stages), slot-embedded payloads (an id-keyed corpus needs the global
+    gather the kernel exists to avoid), and a real accelerator backend
+    (on CPU the kernel runs in interpret mode — correct but slower than
+    the jitted staged path, so it stays a test/fallback mode).  `on`
+    forces the path (including CPU interpret) and raises where it cannot
+    apply, instead of silently degrading.
+    """
+    if cfg.fused == "off":
+        return False
+    blockers = []
+    if cx.routed:
+        blockers.append("routed topology (mesh steps stay staged)")
+    if has_corpus:
+        blockers.append("id-keyed corpus scoring")
+    if need_payload and not has_payload:
+        blockers.append("ids-only store (no payload to score)")
+    if cfg.fused == "on":
+        if blockers:
+            raise ValueError(
+                f"fused='on' unsupported here: {'; '.join(blockers)}"
+            )
+        return True
+    return not blockers and jax.default_backend() != "cpu"
+
+
+def _fused_probe_rows(cfg: RuntimeConfig, nb: int, table, local_idx, mask):
+    """(fb [r, P], pword [r]) for the mega-kernel's scalar prefetch.
+
+    `fb` flattens (table, bucket) to a row of the [T*NB, C] store view —
+    the gather the kernel's BlockSpec index map performs; `pword` packs
+    the planner's per-probe validity lanes into one int32 bitfield
+    (bit p = probe p valid; P <= 1 + k < 31 always fits).
+    """
+    probes, pvalid = plan_mod.shard_local_probes(
+        cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
+    )                                                      # [r, P] both
+    probes = probes % nb  # engine parity: fold OOB codes
+    fb = table[:, None] * nb + probes
+    shifts = jnp.arange(pvalid.shape[1], dtype=jnp.int32)
+    pword = jnp.sum(
+        pvalid.astype(jnp.int32) << shifts[None, :], axis=1
+    ).astype(jnp.int32)
+    return fb.astype(jnp.int32), pword
+
+
+def _fused_search_local(
+    cfg: RuntimeConfig,
+    store_ids: jax.Array,             # [T, NB, C]
+    store_payload: jax.Array,         # [T, NB, C, D] f32 or [T, NB, C, W] u32
+    q: jax.Array,                     # [r, d] f32 or [r, W] packed words
+    table: jax.Array,                 # [r]
+    local_idx: jax.Array,             # [r]
+    mask: jax.Array,                  # [r]
+    exclude: jax.Array | None,        # [r] or None
+    m: int,
+):
+    """Fused twin of `_score_local` (non-routed, non-replicated): one
+    Pallas call replaces gather + score + top-m; no [r, P*C] candidate
+    intermediate exists.  Bit-identical to the staged path by the
+    `ref.fused_query_ref` contract (tests/test_fused.py)."""
+    from repro.kernels import ops
+
+    t, nb, c = store_ids.shape
+    fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    excl = (
+        jnp.full_like(pword, -1) if exclude is None
+        else exclude.astype(jnp.int32)
+    )  # -1 matches only empty slots == no exclusion
+    meta = jnp.stack([pword, excl], axis=1)
+    return ops.fused_query(
+        store_ids.reshape(t * nb, c),
+        store_payload.reshape(t * nb, c, store_payload.shape[-1]),
+        q, fb, meta, m=m, score=cfg.score,
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+def _fused_contains_local(
+    cfg: RuntimeConfig,
+    store_ids: jax.Array,  # [T, NB, C]
+    table: jax.Array,      # [r]
+    local_idx: jax.Array,  # [r]
+    mask: jax.Array,       # [r]
+    target: jax.Array,     # [r]
+):
+    """Fused twin of `_contains_local`: metadata-only, works on ids-only
+    stores (no payload blocks travel)."""
+    from repro.kernels import ops
+
+    t, nb, c = store_ids.shape
+    fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    meta = jnp.stack([pword, target.astype(jnp.int32)], axis=1)
+    return ops.fused_contains(
+        store_ids.reshape(t * nb, c), fb, meta,
+        interpret=jax.default_backend() == "cpu",
+    )
 
 
 def _score_cache(
@@ -466,6 +587,13 @@ def search_kernel(
     """
     if (corpus is not None or exclude is not None) and cx.routed:
         raise ValueError("corpus scoring / wire exclusion are 1-node only")
+    if cfg.score == "hamming" and cx.routed:
+        raise ValueError("score='hamming' is 1-node only")
+    if cfg.score == "hamming" and corpus is not None:
+        raise ValueError(
+            "score='hamming' needs slot-embedded packed payloads, not an "
+            "id-keyed corpus"
+        )
     reps_on = cfg.replication > 1
     if reps_on and (rep_ids is None or rep_payload is None or live is None):
         raise ValueError(
@@ -475,17 +603,33 @@ def search_kernel(
     L = cfg.params.L
     n = cx.n
     b_loc, d = q.shape
-    _, flat = _flat_plan(cfg, cx, q, hyperplanes)
+    plan, flat = _flat_plan(cfg, cx, q, hyperplanes)
 
     if not cx.routed:
         # Identity router: every probe is local by construction. No send
         # buffers exist, so nothing can be dropped and nothing is traced
         # beyond the gather/score path the reference engine always ran.
-        ids_r, sc_r = _score_local(
-            cfg, store_ids, store_payload, corpus,
-            q[flat["qidx"]], flat["table"], flat["local"], flat["mask"],
-            None if exclude is None else exclude[flat["qidx"]], m,
-        )                                                  # [b_loc*L, m]
+        qs = q
+        if cfg.score == "hamming":
+            # hamming scores against the query's OWN packed sketch words;
+            # the planner already computed the codes, so the f32 query
+            # vector never reaches the scoring stage.
+            from repro.core import packed as packed_mod
+
+            qs = packed_mod.pack_codes(plan.codes, cfg.params.k)
+        ex = None if exclude is None else exclude[flat["qidx"]]
+        if _fused_on(cfg, cx, has_payload=store_payload is not None,
+                     has_corpus=corpus is not None):
+            ids_r, sc_r = _fused_search_local(
+                cfg, store_ids, store_payload, qs[flat["qidx"]],
+                flat["table"], flat["local"], flat["mask"], ex, m,
+            )                                              # [b_loc*L, m]
+        else:
+            ids_r, sc_r = _score_local(
+                cfg, store_ids, store_payload, corpus,
+                qs[flat["qidx"]], flat["table"], flat["local"],
+                flat["mask"], ex, m,
+            )                                              # [b_loc*L, m]
         ids, sc = dedupe_topk(
             ids_r.reshape(b_loc, L * m), sc_r.reshape(b_loc, L * m), m
         )
@@ -727,10 +871,19 @@ def contains_kernel(
     flat_tgt = jnp.repeat(targets.astype(jnp.int32), L)
 
     if not cx.routed:
-        hit = _contains_hits(
-            cfg, cx, store_ids, None, flat["table"], flat["local"],
-            flat["mask"], flat_tgt,
-        )
+        # membership needs no payload, so the fused path also serves
+        # ids-only stores (need_payload=False)
+        if _fused_on(cfg, cx, has_payload=True, has_corpus=False,
+                     need_payload=False):
+            hit = _fused_contains_local(
+                cfg, store_ids, flat["table"], flat["local"], flat["mask"],
+                flat_tgt,
+            )
+        else:
+            hit = _contains_hits(
+                cfg, cx, store_ids, None, flat["table"], flat["local"],
+                flat["mask"], flat_tgt,
+            )
         return hit.reshape(b_loc, L).any(axis=-1), jnp.int32(0)
 
     if cfg.routing == "allgather":
@@ -820,7 +973,19 @@ def insert_kernel(
     # so they can't clobber live slots.
     mine_any = owner == me[None, None]                       # [nv, L]
     new = st
-    payload = vec_all if st.payload is not None else None
+    payload = None
+    if st.payload is not None:
+        if cfg.score == "hamming":
+            # hamming stores embed the packed sketch words, not the f32
+            # vector — the planner already sketched the batch, so the
+            # pack is a pure bit shuffle on codes it computed anyway.
+            from repro.core import packed as packed_mod
+
+            payload = packed_mod.pack_codes(
+                plan.codes, cfg.params.k
+            ).astype(st.payload.dtype)
+        else:
+            payload = vec_all
     for l in range(cfg.params.L):
         sel = mine_any[:, l]
         ids_l = jnp.where(sel, vid_all, -1)
@@ -1097,7 +1262,19 @@ class IndexRuntime:
     def expire(self, store: BucketStore, now, ttl: int) -> BucketStore:
         return self.make_expire_step()(store, jnp.int32(now), ttl=ttl)
 
-    def payload_sync(self, store: BucketStore, vec) -> BucketStore:
+    def payload_sync(self, store: BucketStore, vec, *,
+                     hyperplanes=None) -> BucketStore:
+        if self.cfg.score == "hamming":
+            if hyperplanes is None:
+                raise ValueError(
+                    "score='hamming' payload_sync needs hyperplanes= to "
+                    "re-sketch the announced vectors into packed words"
+                )
+            from repro.core import hashing
+            from repro.core import packed as packed_mod
+
+            codes = hashing.sketch_codes(jnp.asarray(vec), hyperplanes)
+            vec = packed_mod.pack_codes(codes, self.cfg.params.k)
         return self.make_payload_sync()(store, self._put_batch(vec, True))
 
     def refresh_cache(self, store: BucketStore):
@@ -1207,7 +1384,7 @@ def kill_node(rt: IndexRuntime, store: BucketStore, replicas, node: int):
     s, e = rt.topology.zone_range(node)
     payload = store.payload
     if payload is not None:
-        payload = payload.at[:, s:e].set(0.0)
+        payload = payload.at[:, s:e].set(jnp.zeros((), payload.dtype))
     new_store = dataclasses.replace(
         store,
         ids=store.ids.at[:, s:e].set(store_mod.EMPTY),
@@ -1221,7 +1398,7 @@ def kill_node(rt: IndexRuntime, store: BucketStore, replicas, node: int):
         rep_ids, rep_payload = replicas
         new_reps = (
             rep_ids.at[:, :, s:e].set(store_mod.EMPTY),
-            rep_payload.at[:, :, s:e].set(0.0),
+            rep_payload.at[:, :, s:e].set(jnp.zeros((), rep_payload.dtype)),
         )
     return new_store, new_reps
 

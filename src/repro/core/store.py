@@ -242,7 +242,8 @@ def build_store_host(
     pay = (
         None
         if payload is None
-        else np.zeros((T, num_buckets, capacity, payload.shape[1]), np.float32)
+        else np.zeros((T, num_buckets, capacity, payload.shape[1]),
+                      payload.dtype)
     )
     all_ids = np.arange(n, dtype=np.int32)
     for l in range(T):

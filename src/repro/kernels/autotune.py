@@ -1,0 +1,79 @@
+"""Per-device-kind block-shape cache for the fused query kernel.
+
+The fused kernel's block shape — TB (query rows per block) and KC
+(candidate lanes per probe, the bucket-capacity pad) — trades VMEM
+scratch footprint against grid overhead, and the right point differs per
+device kind.  `benchmarks/roofline.py --sweep` is the oracle: it times
+the (TB, KC) grid against the analytic query-path roofline and calls
+`put()` with the winner.  `kernels/ops.py` consults `get()` at dispatch
+time and falls back to `DEFAULTS` when no entry exists, so a missing or
+stale cache degrades to working (just untuned) kernels, never to an
+error.
+
+The cache is a committed JSON file next to this module keyed by
+`{device_kind: {op: {params...}}}`; set REPRO_AUTOTUNE_CACHE to point at
+a scratch file when sweeping without dirtying the tree.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import pathlib
+
+import jax
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_FILE = pathlib.Path(__file__).resolve().parent / "autotune_cache.json"
+
+# Safe fallbacks when no swept entry exists.  CPU runs the kernel in
+# interpret mode, where big lane pads only add python-loop work; real
+# accelerators want full 128-wide lanes.
+DEFAULTS = {
+    "cpu": {"fused_query": {"tb": 8, "kc": 8}},
+    "*": {"fused_query": {"tb": 8, "kc": 128}},
+}
+
+
+def cache_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(_CACHE_ENV, _CACHE_FILE))
+
+
+def device_kind() -> str:
+    """Normalized device kind of the default backend (cache key)."""
+    kind = jax.devices()[0].device_kind
+    return kind.strip().lower().replace(" ", "_")
+
+
+@functools.lru_cache(maxsize=None)
+def _load(path_str: str) -> dict:
+    path = pathlib.Path(path_str)
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def get(op: str, kind: str | None = None) -> dict:
+    """Tuned params for `op` on this device kind (or `DEFAULTS`)."""
+    kind = kind or device_kind()
+    entry = _load(str(cache_path())).get(kind, {}).get(op)
+    if entry:
+        return dict(entry)
+    fam = "cpu" if kind == "cpu" else "*"
+    return dict(DEFAULTS.get(fam, {}).get(op, {}))
+
+
+def put(op: str, params: dict, kind: str | None = None) -> pathlib.Path:
+    """Record swept winners for `op`; returns the cache path written."""
+    kind = kind or device_kind()
+    path = cache_path()
+    cache = dict(_load(str(path)))
+    cache.setdefault(kind, {})
+    cache[kind] = {**cache[kind], op: dict(params)}
+    path.write_text(json.dumps(cache, indent=2, sort_keys=True) + "\n")
+    _load.cache_clear()
+    return path

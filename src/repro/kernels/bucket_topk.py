@@ -11,7 +11,10 @@ beats a full sort by a wide margin.
 
 Tiling: grid over the query batch (b/TB).  KC (candidates per query =
 L * probes * capacity, gathered by the caller) is lane-padded to 128;
-invalid slots carry valid=False and return score=-inf, idx=-1.
+invalid slots carry a 0 validity bit and return score=-inf, idx=-1.
+Validity arrives as packed uint32 bitfield words ([TB, KC/32], bit i of
+word w = slot w*32 + i) and is unpacked in-register — the int8 mask
+lanes that used to ride beside the payload tile are gone.
 """
 
 from __future__ import annotations
@@ -25,10 +28,17 @@ from jax.experimental import pallas as pl
 NEG = float("-inf")  # plain Python float: jnp constants can't be captured by kernels
 
 
-def _topk_kernel(q_ref, cand_ref, valid_ref, s_ref, i_ref, *, m: int):
+def _unpack_bits(words: jax.Array, kc: int) -> jax.Array:
+    """uint32 bitfield words [TB, KC/32] -> bool mask [TB, KC]."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[0], kc) != 0
+
+
+def _topk_kernel(q_ref, cand_ref, vwords_ref, s_ref, i_ref, *, m: int):
     q = q_ref[...]            # [TB, D]
     cand = cand_ref[...]      # [TB, KC, D]
-    valid = valid_ref[...]    # [TB, KC] (int8 mask)
+    vwords = vwords_ref[...]  # [TB, KC/32] uint32 bitfields
 
     scores = jax.lax.dot_general(
         cand,
@@ -36,7 +46,7 @@ def _topk_kernel(q_ref, cand_ref, valid_ref, s_ref, i_ref, *, m: int):
         (((2,), (1,)), ((0,), (0,))),  # batch over TB, contract D
         preferred_element_type=jnp.float32,
     )  # [TB, KC]
-    scores = jnp.where(valid != 0, scores, NEG)
+    scores = jnp.where(_unpack_bits(vwords, scores.shape[1]), scores, NEG)
 
     kc = scores.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -56,7 +66,7 @@ def _topk_kernel(q_ref, cand_ref, valid_ref, s_ref, i_ref, *, m: int):
 def bucket_topk_pallas(
     q: jax.Array,       # [b, d] float32   (b % tb == 0, d lane-padded)
     cand: jax.Array,    # [b, kc, d] float32 (kc % 128 == 0)
-    valid: jax.Array,   # [b, kc] int8
+    vwords: jax.Array,  # [b, kc/32] uint32 validity bitfields
     *,
     m: int,
     tb: int = 8,
@@ -70,7 +80,7 @@ def bucket_topk_pallas(
         in_specs=[
             pl.BlockSpec((tb, d), lambda i: (i, 0)),
             pl.BlockSpec((tb, kc, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((tb, kc), lambda i: (i, 0)),
+            pl.BlockSpec((tb, kc // 32), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((tb, m), lambda i: (i, 0)),
@@ -81,4 +91,4 @@ def bucket_topk_pallas(
             jax.ShapeDtypeStruct((b, m), jnp.int32),
         ],
         interpret=interpret,
-    )(q, cand, valid)
+    )(q, cand, vwords)

@@ -1,0 +1,228 @@
+"""Pallas mega-kernel: fused gather -> score -> top-m for the per-node
+query path (DESIGN.md Sec. 11).
+
+The staged path materializes a [r, P*C] candidate id buffer and a
+[r, P*C, D] payload buffer in HBM between its gather, score, and top-m
+stages.  This kernel runs the whole per-(query, table) pipeline inside
+one `pallas_call`: probed bucket rows are gathered straight into VMEM
+via scalar-prefetch-driven BlockSpecs (the flattened bucket index of
+every (row, probe) pair is prefetched, so the gather IS the block index
+map — no gathered intermediate ever exists in HBM), scored in-register
+(dot product for embedded f32 payloads, SWAR-popcount hamming for
+bit-packed sketch words), deduplicated, and reduced to the top m
+(id, score) pairs per row.
+
+Grid: (r/TB, P, TB) — probe steps and rows-within-block iterate
+sequentially ("arbitrary" semantics) while a [TB, P*KC] VMEM scratch
+accumulates (id, score) lanes; the final step of each row block runs the
+dedup + m-step selection and writes the [TB, m] outputs.  TB and KC
+(the per-probe candidate lane width) are the autotuned block shape
+(`kernels/autotune.py`, swept by benchmarks/roofline.py).
+
+Semantics are pinned bit-exactly to the staged path
+(`core.scoring.score_topk` over the stacked gather):
+  * candidate validity: probe bit p of the prefetched probe-word must be
+    set, slot id >= 0, id != the row's exclude id — EMPTY (-1) sentinels
+    ride in-register, there is no separate mask buffer;
+  * duplicate ids: the FIRST occurrence in (probe-major, slot-minor)
+    flat order survives with its own score — identical to the stable
+    id-sort + repeat-of-previous mask in `core.scoring.dedupe_topk`;
+  * selection: descending score, ties to the LOWEST id (the staged
+    top_k over id-sorted lanes breaks ties the same way).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hamming import _popcount32
+
+NEG = float("-inf")
+IMAX = 2**31 - 1  # id sentinel > any real id (ids are int32 >= 0)
+
+
+def _probe_scores(ids_row, pay, q, pw, excl, p, *, score: str):
+    """[KC] (ids, scores) of one probed bucket row, invalids -1 / -inf."""
+    pvalid = ((pw >> p) & 1) > 0
+    cand = jnp.where(pvalid & (ids_row >= 0), ids_row, jnp.int32(-1))
+    cand = jnp.where(cand == excl, jnp.int32(-1), cand)
+    if score == "dot":
+        s = jax.lax.dot_general(
+            pay, q, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # [KC]
+    else:
+        s = -jnp.sum(_popcount32(jnp.bitwise_xor(pay, q[None, :])),
+                     axis=-1).astype(jnp.float32)
+    return cand, jnp.where(cand >= 0, s, NEG)
+
+
+def _select_topm(ids_all, sc_all, m: int):
+    """Dedup (first occurrence wins) + m-step (max score, min id) select.
+
+    ids_all/sc_all: [TB, K].  Returns (ids [TB, m], scores [TB, m]).
+    """
+    eq = ids_all[:, :, None] == ids_all[:, None, :]       # [TB, Ki, Kj]
+    pos_i = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1)
+    pos_j = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 2)
+    dup = jnp.any(eq & (pos_i < pos_j), axis=1)           # [TB, K] (j axis)
+    sc = jnp.where(dup | (ids_all < 0), NEG, sc_all)
+    out_i, out_s = [], []
+    for _ in range(m):  # m static & small: unrolled selection
+        bs = jnp.max(sc, axis=1)                          # [TB]
+        is_best = sc == bs[:, None]
+        bi = jnp.min(jnp.where(is_best, ids_all, IMAX), axis=1)
+        dead = jnp.isneginf(bs)
+        out_i.append(jnp.where(dead, jnp.int32(-1), bi.astype(jnp.int32)))
+        out_s.append(bs)
+        sc = jnp.where(ids_all == bi[:, None], NEG, sc)
+    return jnp.stack(out_i, axis=1), jnp.stack(out_s, axis=1)
+
+
+def _fused_query_kernel(
+    fb_ref, meta_ref,               # scalar prefetch: [r, P], [r, 2]
+    q_ref, ids_ref, pay_ref,        # blocks: [1, DW], [1, KC], [1, KC, DW]
+    ids_out_ref, sc_out_ref,        # blocks: [TB, m]
+    id_acc, sc_acc,                 # VMEM scratch: [TB, P*KC]
+    *, m: int, tb: int, kc: int, n_probes: int, score: str,
+):
+    p = pl.program_id(1)
+    t = pl.program_id(2)
+    r = pl.program_id(0) * tb + t
+    cand, s = _probe_scores(
+        ids_ref[0], pay_ref[0], q_ref[0],
+        meta_ref[r, 0], meta_ref[r, 1], p, score=score,
+    )
+    idx = (pl.dslice(t, 1), pl.dslice(p * kc, kc))
+    pl.store(id_acc, idx, cand[None, :])
+    pl.store(sc_acc, idx, s[None, :])
+
+    @pl.when((p == n_probes - 1) & (t == tb - 1))
+    def _reduce():
+        top_i, top_s = _select_topm(id_acc[...], sc_acc[...], m)
+        ids_out_ref[...] = top_i
+        sc_out_ref[...] = top_s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "tb", "kc", "score", "interpret")
+)
+def fused_query_pallas(
+    ids_flat: jax.Array,   # int32 [T*NB, KC] (capacity padded with -1)
+    pay_flat: jax.Array,   # [T*NB, KC, DW] f32 vectors or uint32 words
+    q: jax.Array,          # [r, DW] f32 queries or uint32 query words
+    fb: jax.Array,         # int32 [r, P] flattened bucket row per probe
+    meta: jax.Array,       # int32 [r, 2] (probe-validity word, exclude id)
+    *,
+    m: int,
+    tb: int,
+    kc: int,
+    score: str = "dot",
+    interpret: bool = False,
+):
+    """(ids int32 [r, m], scores f32 [r, m]) — r % tb == 0 required;
+    pad rows must carry probe-word 0 (they return all -1 / -inf)."""
+    r, n_probes = fb.shape
+    dw = pay_flat.shape[-1]
+    grid = (r // tb, n_probes, tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q.shape[-1]),
+                         lambda i, p, t, fb_, mt: (i * tb + t, 0)),
+            pl.BlockSpec((1, kc),
+                         lambda i, p, t, fb_, mt: (fb_[i * tb + t, p], 0)),
+            pl.BlockSpec((1, kc, dw),
+                         lambda i, p, t, fb_, mt: (fb_[i * tb + t, p], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, m), lambda i, p, t, fb_, mt: (i, 0)),
+            pl.BlockSpec((tb, m), lambda i, p, t, fb_, mt: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tb, n_probes * kc), jnp.int32),
+            pltpu.VMEM((tb, n_probes * kc), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_query_kernel,
+            m=m, tb=tb, kc=kc, n_probes=n_probes, score=score,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, m), jnp.int32),
+            jax.ShapeDtypeStruct((r, m), jnp.float32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(
+                dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+            )
+        ),
+        interpret=interpret,
+    )(fb, meta, q, ids_flat, pay_flat)
+
+
+def _fused_contains_kernel(
+    fb_ref, meta_ref,               # scalar prefetch: [r, P], [r, 2]
+    ids_ref,                        # block: [1, KC]
+    hit_ref,                        # block: [TB, 1] int32
+    acc,                            # VMEM scratch: [TB, 1] int32
+    *, tb: int, n_probes: int,
+):
+    p = pl.program_id(1)
+    t = pl.program_id(2)
+    r = pl.program_id(0) * tb + t
+    pvalid = ((meta_ref[r, 0] >> p) & 1) > 0
+    hit = jnp.any((ids_ref[0] == meta_ref[r, 1]) & pvalid)
+    prev = pl.load(acc, (pl.dslice(t, 1), pl.dslice(0, 1)))  # [1, 1]
+    cur = jnp.where(p == 0, hit.astype(jnp.int32),
+                    prev[0, 0] | hit.astype(jnp.int32))
+    pl.store(acc, (pl.dslice(t, 1), pl.dslice(0, 1)), cur[None, None])
+
+    @pl.when((p == n_probes - 1) & (t == tb - 1))
+    def _emit():
+        hit_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def fused_contains_pallas(
+    ids_flat: jax.Array,   # int32 [T*NB, KC]
+    fb: jax.Array,         # int32 [r, P]
+    meta: jax.Array,       # int32 [r, 2] (probe-validity word, target id)
+    *,
+    tb: int,
+    interpret: bool = False,
+):
+    """int32 [r, 1]: nonzero iff the target id sits in any valid probed
+    bucket of the row.  Same gather discipline as `fused_query_pallas`,
+    metadata-only (no payload blocks travel)."""
+    r, n_probes = fb.shape
+    kc = ids_flat.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r // tb, n_probes, tb),
+        in_specs=[
+            pl.BlockSpec((1, kc),
+                         lambda i, p, t, fb_, mt: (fb_[i * tb + t, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, p, t, fb_, mt: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((tb, 1), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_contains_kernel, tb=tb, n_probes=n_probes),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        compiler_params=dict(
+            mosaic=dict(
+                dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+            )
+        ),
+        interpret=interpret,
+    )(fb, meta, ids_flat)

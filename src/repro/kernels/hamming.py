@@ -1,8 +1,14 @@
 """Pallas TPU kernel: popcount Hamming distance over packed sketch codes.
 
-Used by Layered-LSH node assignment and by ranked multi-probe planning:
-given each query's code and a tile of candidate bucket codes, produce the
-Hamming distance matrix.  Pure VPU bit arithmetic (SWAR popcount); no MXU.
+Two entry points sharing one SWAR popcount (pure VPU bit arithmetic, no
+MXU):
+
+  * `hamming_pallas` — single-word codes ([n] vs [n, kc]), used by
+    ranked multi-probe planning and Layered-LSH node assignment;
+  * `hamming_words_pallas` — multi-word packed rows ([n, W] vs
+    [n, kc, W], the `core.packed` layout), the staged scoring primitive
+    of `score="hamming"` runtimes; the fused query kernel inlines the
+    same popcount for its hamming mode.
 
 Tiling: grid over (n/TN); candidate dim KC is lane-padded to 128.
 """
@@ -50,3 +56,34 @@ def hamming_pallas(
         out_shape=jax.ShapeDtypeStruct((n, kc), jnp.int32),
         interpret=interpret,
     )(codes[:, None], cand_codes)
+
+
+def _hamming_words_kernel(codes_ref, cand_ref, out_ref):
+    codes = codes_ref[...]  # [TN, 1, W] uint32
+    cand = cand_ref[...]    # [TN, KC, W] uint32
+    out_ref[...] = jnp.sum(
+        _popcount32(jnp.bitwise_xor(codes, cand)), axis=-1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def hamming_words_pallas(
+    codes: jax.Array,       # [n, W] uint32 packed words (n % tn == 0)
+    cand_codes: jax.Array,  # [n, kc, W] uint32 (kc % 128 == 0)
+    *,
+    tn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n, kc, w = cand_codes.shape
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _hamming_words_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, 1, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, kc, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, kc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, kc), jnp.int32),
+        interpret=interpret,
+    )(codes[:, None, :], cand_codes)

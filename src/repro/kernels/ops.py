@@ -13,7 +13,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import bucket_topk as _bt
+from repro.kernels import fused_query as _fq
 from repro.kernels import hamming as _hm
 from repro.kernels import simhash as _sh
 
@@ -34,15 +36,33 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """bool/int [..., n] (n % 32 == 0) -> uint32 bitfield words [..., n/32].
+
+    Kernel-side validity layout only (little-endian, bit i of word w =
+    lane w*32 + i); the canonical sketch-code packing lives in
+    `core.packed` — this tiny twin exists so kernels/ has no import edge
+    into core/.
+    """
+    *lead, n = bits.shape
+    grouped = bits.reshape(*lead, n // 32, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+
+
 def simhash(
     x: jax.Array,            # [n, d] float
     hyperplanes: jax.Array,  # [L, k, d] float
     *,
     tn: int = 256,
     td: int = 512,
+    packed: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Packed LSH codes, uint32 [n, L]. Matches `ref.simhash_ref`."""
+    """LSH sketch codes: uint32 [n, L] per-table codes, or with
+    packed=True dense `core.packed` words uint32 [n, ceil(L*k/32)]
+    emitted directly in-kernel.  Matches `ref.simhash_ref` (resp. its
+    pack_codes composition)."""
     interpret = _on_cpu() if interpret is None else interpret
     n, d = x.shape
     L, k, _ = hyperplanes.shape
@@ -60,7 +80,8 @@ def simhash(
     x_p = _pad_to(x_p, 1, td_eff)
     h_t = _pad_to(h_t, 0, td_eff)
     out = _sh.simhash_pallas(
-        x_p, h_t, k=k, L=L, tn=tn_eff, td=td_eff, interpret=interpret
+        x_p, h_t, k=k, L=L, tn=tn_eff, td=td_eff, packed=packed,
+        interpret=interpret,
     )
     return out[:n]
 
@@ -75,7 +96,9 @@ def bucket_topk(
     interpret: bool | None = None,
 ):
     """Fused score + top-m. Returns (scores [b, m] f32, idx [b, m] i32).
-    Matches `ref.bucket_topk_ref` (ties -> lowest index)."""
+    Matches `ref.bucket_topk_ref` (ties -> lowest index).  Validity
+    travels as packed uint32 bitfield words (32x less mask traffic than
+    the old int8 lanes); the kernel unpacks bits in-register."""
     interpret = _on_cpu() if interpret is None else interpret
     b, kc, d = cand.shape
     tb_eff = min(tb, max(1, b))
@@ -86,21 +109,36 @@ def bucket_topk(
     cand_p = _pad_to(_pad_to(cand_p, 2, LANE), 1, LANE)
     valid_p = _pad_to(valid_p, 1, LANE)
     s, i = _bt.bucket_topk_pallas(
-        q_p, cand_p, valid_p, m=m, tb=tb_eff, interpret=interpret
+        q_p, cand_p, _pack_bits(valid_p), m=m, tb=tb_eff, interpret=interpret
     )
     return s[:b], i[:b]
 
 
 def hamming(
-    codes: jax.Array,       # [n] uint32
-    cand_codes: jax.Array,  # [n, kc] uint32
+    codes: jax.Array,       # [n] uint32 or [n, W] packed words
+    cand_codes: jax.Array,  # [n, kc] uint32 or [n, kc, W] packed words
     *,
     tn: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Hamming distances int32 [n, kc]. Matches `ref.hamming_ref`.
-    Padded candidate columns return distance vs code 0 and are sliced off."""
+    """Hamming distances int32 [n, kc].
+
+    Single-word inputs ([n] vs [n, kc]) match `ref.hamming_ref`;
+    multi-word packed rows ([n, W] vs [n, kc, W], the `core.packed`
+    layout) match `ref.hamming_words_ref` — this shape is the staged
+    scoring primitive of `score="hamming"` runtimes.  Padded candidate
+    columns return distance vs code 0 and are sliced off."""
     interpret = _on_cpu() if interpret is None else interpret
+    if cand_codes.ndim == 3:
+        n, kc, w = cand_codes.shape
+        tn_eff = min(tn, max(8, n))
+        codes_p = _pad_to(codes.astype(jnp.uint32), 0, tn_eff)
+        cand_p = _pad_to(cand_codes.astype(jnp.uint32), 0, tn_eff)
+        cand_p = _pad_to(cand_p, 1, LANE if not interpret else 8)
+        out = _hm.hamming_words_pallas(
+            codes_p, cand_p, tn=tn_eff, interpret=interpret
+        )
+        return out[:n, :kc]
     n, kc = cand_codes.shape
     tn_eff = min(tn, max(8, n))
     codes_p = _pad_to(codes.astype(jnp.uint32), 0, tn_eff)
@@ -108,3 +146,79 @@ def hamming(
     cand_p = _pad_to(cand_p, 1, LANE)
     out = _hm.hamming_pallas(codes_p, cand_p, tn=tn_eff, interpret=interpret)
     return out[:n, :kc]
+
+
+def fused_query(
+    ids_flat: jax.Array,   # int32 [T*NB, C] bucket slot ids (-1 = empty)
+    pay_flat: jax.Array,   # [T*NB, C, D] f32 vectors or [T*NB, C, W] words
+    q: jax.Array,          # [r, D] f32 queries or [r, W] packed query words
+    fb: jax.Array,         # int32 [r, P] flattened bucket row per probe
+    meta: jax.Array,       # int32 [r, 2] (probe-validity word, exclude id)
+    *,
+    m: int,
+    score: str = "dot",
+    tb: int | None = None,
+    kc: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused gather -> score -> top-m (ids [r, m] i32, scores [r, m] f32).
+
+    Matches `ref.fused_query_ref` — which routes through
+    `core.scoring.dedupe_topk`, so fused results are bit-identical to
+    the staged path by construction.  tb/kc default to the autotuned
+    block shape for this device kind (`kernels.autotune`); kc is the
+    capacity pad multiple (bucket rows are padded to a whole number of
+    candidate lanes)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    tuned = autotune.get("fused_query")
+    tb = int(tuned.get("tb", 8)) if tb is None else tb
+    kc = int(tuned.get("kc", 8 if interpret else LANE)) if kc is None else kc
+    r, _ = fb.shape
+    c = ids_flat.shape[-1]
+    kc_eff = min(kc, max(8, c)) if interpret else kc
+    ids_p = _pad_to(ids_flat.astype(jnp.int32), 1, kc_eff, value=-1)
+    pay_p = _pad_to(pay_flat, 1, kc_eff)
+    if score == "dot":
+        pay_p = _pad_to(pay_p.astype(jnp.float32), 2, 8 if interpret else LANE)
+        q_p = _pad_to(q.astype(jnp.float32), 1, 8 if interpret else LANE)
+    else:
+        pay_p = pay_p.astype(jnp.uint32)
+        q_p = q.astype(jnp.uint32)
+    tb_eff = min(tb, max(1, r))
+    fb_p = jnp.clip(
+        _pad_to(fb.astype(jnp.int32), 0, tb_eff), 0, ids_p.shape[0] - 1
+    )
+    meta_p = _pad_to(meta.astype(jnp.int32), 0, tb_eff)  # pad: pword 0
+    ids_r, sc_r = _fq.fused_query_pallas(
+        ids_p, pay_p, _pad_to(q_p, 0, tb_eff), fb_p, meta_p,
+        m=m, tb=tb_eff, kc=ids_p.shape[-1], score=score, interpret=interpret,
+    )
+    return ids_r[:r], sc_r[:r]
+
+
+def fused_contains(
+    ids_flat: jax.Array,   # int32 [T*NB, C]
+    fb: jax.Array,         # int32 [r, P]
+    meta: jax.Array,       # int32 [r, 2] (probe-validity word, target id)
+    *,
+    tb: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused membership probe: bool [r]. Matches `ref.fused_contains_ref`.
+    Needs no payload, so it serves ids-only stores too."""
+    interpret = _on_cpu() if interpret is None else interpret
+    tuned = autotune.get("fused_query")
+    tb = int(tuned.get("tb", 8)) if tb is None else tb
+    r, _ = fb.shape
+    c = ids_flat.shape[-1]
+    kc_eff = min(8, max(1, c)) if interpret else LANE
+    ids_p = _pad_to(ids_flat.astype(jnp.int32), 1, kc_eff, value=-1)
+    tb_eff = min(tb, max(1, r))
+    fb_p = jnp.clip(
+        _pad_to(fb.astype(jnp.int32), 0, tb_eff), 0, ids_p.shape[0] - 1
+    )
+    meta_p = _pad_to(meta.astype(jnp.int32), 0, tb_eff)
+    hit = _fq.fused_contains_pallas(
+        ids_p, fb_p, meta_p, tb=tb_eff, interpret=interpret
+    )
+    return hit[:r, 0] > 0

@@ -11,6 +11,14 @@ Tiling: grid (n/TN, d/TD).  d is the contraction dim; a VMEM scratch
 accumulator [TN, LK] carries partial projections across d-steps
 ("arbitrary" semantics); the pack happens on the last d-step.
 LK = L*k is zero-padded to a lane multiple (128) by the ops.py wrapper.
+
+Two output layouts, chosen by `packed`:
+  * per-table codes uint32 [n, L] (k live bits per lane) — the classic
+    layout every bucket mapper consumes;
+  * dense packed words uint32 [n, W], W = ceil(L*k/32), the
+    `core.packed` layout — global bit l*k + j lands in word (l*k+j)/32.
+    Hamming-mode runtimes sketch queries straight into this layout, so
+    the unpacked [n, L] intermediate never exists.
 """
 
 from __future__ import annotations
@@ -23,7 +31,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _simhash_kernel(x_ref, h_ref, out_ref, acc_ref, *, k: int, L: int):
+def _simhash_kernel(
+    x_ref, h_ref, out_ref, acc_ref, *, k: int, L: int, packed: bool = False
+):
     d_step = pl.program_id(1)
     n_dsteps = pl.num_programs(1)
 
@@ -43,18 +53,35 @@ def _simhash_kernel(x_ref, h_ref, out_ref, acc_ref, *, k: int, L: int):
     def _pack():
         proj = acc_ref[...]  # [TN, LKpad]
         bits = (proj >= 0).astype(jnp.uint32)  # [TN, LKpad]
-        # lane l*k + j holds bit j of table l, so (lane % k) is the bit
-        # position; padded tail lanes (>= L*k) are never sliced below.
+        # lane l*k + j holds bit j of table l.
         lane = jax.lax.broadcasted_iota(jnp.int32, proj.shape, 1)
-        weighted = bits << (lane % k).astype(jnp.uint32)
-        # per-table static slices + lane reduction (no scatter in-kernel)
-        codes = [
-            jnp.sum(weighted[:, l * k : (l + 1) * k], axis=1) for l in range(L)
-        ]
-        out_ref[...] = jnp.stack(codes, axis=1)
+        if packed:
+            # dense core.packed layout: lane g -> word g/32 bit g%32.
+            # padded tail lanes (proj 0 => bit 1) must be masked here.
+            n_words = -(-(L * k) // 32)
+            live = jnp.where(lane < L * k, bits, jnp.uint32(0))
+            shifted = live << (lane % 32).astype(jnp.uint32)
+            words = [
+                jnp.sum(jnp.where(lane // 32 == w, shifted, jnp.uint32(0)),
+                        axis=1)
+                for w in range(n_words)
+            ]
+            out_ref[...] = jnp.stack(words, axis=1)
+        else:
+            # (lane % k) is the in-code bit position; padded tail lanes
+            # (>= L*k) are never sliced below.
+            weighted = bits << (lane % k).astype(jnp.uint32)
+            # per-table static slices + lane reduction (no in-kernel scatter)
+            codes = [
+                jnp.sum(weighted[:, l * k : (l + 1) * k], axis=1)
+                for l in range(L)
+            ]
+            out_ref[...] = jnp.stack(codes, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "L", "tn", "td", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "L", "tn", "td", "packed", "interpret")
+)
 def simhash_pallas(
     x: jax.Array,          # [n, d] float32 (padded: n % tn == 0, d % td == 0)
     h_t: jax.Array,        # [d, LKpad] float32, transposed + lane-padded H
@@ -63,20 +90,22 @@ def simhash_pallas(
     L: int,
     tn: int = 256,
     td: int = 512,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     n, d = x.shape
     lkpad = h_t.shape[1]
     grid = (n // tn, d // td)
+    width = -(-(L * k) // 32) if packed else L
     return pl.pallas_call(
-        functools.partial(_simhash_kernel, k=k, L=L),
+        functools.partial(_simhash_kernel, k=k, L=L, packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tn, td), lambda i, j: (i, j)),
             pl.BlockSpec((td, lkpad), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((tn, L), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, L), jnp.uint32),
+        out_specs=pl.BlockSpec((tn, width), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), jnp.uint32),
         scratch_shapes=[pltpu.VMEM((tn, lkpad), jnp.float32)],
         interpret=interpret,
     )(x, h_t)

@@ -1,0 +1,177 @@
+"""Fused query mega-kernel equivalence matrix (DESIGN.md Sec. 11).
+
+The acceptance bar for the fused path: search ids BIT-IDENTICAL to the
+staged path and to the checked-in goldens (tests/goldens/engine_v1.npz)
+on every cell of the runtime equivalence matrix — variants (lsh, nb,
+cnb) x probe budgets (full, p2, ranked3) — plus contains parity and the
+hamming scoring mode, where the exact integer popcount scores make even
+the SCORES bit-equal between staged and fused.
+
+The routed topologies always run staged (the fused dispatch never
+engages under collectives), so the 2-node golden
+(runtime_2node_v1.npz, tests/test_runtime.py) is untouched by
+construction; this module pins the 1-node side where the kernel lives.
+Everything runs with fused="on" to force the Pallas path through CPU
+interpret mode — "auto" stays staged on CPU hosts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LshParams, make_hyperplanes, packed
+from repro.core.hashing import sketch_codes_batched
+from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.store import build_store_host, make_store
+
+GOLDENS = os.path.join(os.path.dirname(__file__), "goldens", "engine_v1.npz")
+
+# must mirror tests/goldens/make_goldens.py exactly
+N, D, K, L, M, NQ = 1200, 32, 5, 3, 10, 48
+PROBE_CELLS = [
+    ("full", dict()),
+    ("p2", dict(num_probes=2)),
+    ("ranked3", dict(num_probes=3, ranked_probes=True)),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(17)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    params = LshParams(d=D, k=K, L=L, seed=23)
+    h = make_hyperplanes(params)
+    codes = sketch_codes_batched(jnp.asarray(vecs), h)
+    store = build_store_host(codes, params.num_buckets, capacity=64,
+                             payload=vecs)
+    golden = dict(np.load(GOLDENS))
+    return params, h, store, vecs, golden
+
+
+def _cells():
+    return [(v, name, pkw) for v in ("lsh", "nb", "cnb")
+            for name, pkw in PROBE_CELLS]
+
+
+def _pair(params, m, variant, pkw, **kw):
+    staged = RuntimeConfig(params=params, variant=variant, m=m,
+                           fused="off", **pkw, **kw)
+    fused = dataclasses.replace(staged, fused="on")
+    return IndexRuntime(staged), IndexRuntime(fused)
+
+
+@pytest.mark.parametrize("variant,cell,pkw", _cells(),
+                         ids=[f"{v}-{c}" for v, c, _ in _cells()])
+def test_fused_search_matches_staged_and_goldens(setup, variant, cell, pkw):
+    """Dot mode, embedded payloads: fused ids == staged ids == golden ids
+    on every matrix cell; scores match to float tolerance."""
+    params, h, store, vecs, golden = setup
+    rt_s, rt_f = _pair(params, M, variant, pkw)
+    q = vecs[:NQ]
+    ex = np.arange(NQ)
+    ids_s, sc_s, _ = rt_s.search(h, store, q, exclude=ex)
+    ids_f, sc_f, _ = rt_f.search(h, store, q, exclude=ex)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_s))
+    np.testing.assert_allclose(np.asarray(sc_f), np.asarray(sc_s),
+                               atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(ids_f), golden[f"search_ids_{variant}_{cell}"])
+
+
+@pytest.mark.parametrize("variant,cell,pkw", _cells(),
+                         ids=[f"{v}-{c}" for v, c, _ in _cells()])
+def test_fused_contains_matches_staged_and_goldens(setup, variant, cell,
+                                                   pkw):
+    """Metadata-only membership: the fused kernel needs no payload, so it
+    runs on the ids-only store and must reproduce the golden hit mask."""
+    params, h, store, vecs, golden = setup
+    rt_s, rt_f = _pair(params, M, variant, pkw)
+    q = vecs[:NQ]
+    hits_s, _ = rt_s.contains(h, store, q, golden["targets"])
+    hits_f, _ = rt_f.contains(h, store, q, golden["targets"])
+    np.testing.assert_array_equal(np.asarray(hits_f), np.asarray(hits_s))
+    np.testing.assert_array_equal(
+        np.asarray(hits_f), golden[f"contains_{variant}_{cell}"])
+
+
+@pytest.mark.parametrize("variant,cell,pkw", _cells(),
+                         ids=[f"{v}-{c}" for v, c, _ in _cells()])
+def test_fused_hamming_bit_exact(setup, variant, cell, pkw):
+    """Hamming mode scores are exact integers, so staged and fused agree
+    on SCORES bit-for-bit, not just on ids."""
+    params, h, store, vecs, golden = setup
+    rt_s, rt_f = _pair(params, M, variant, pkw, score="hamming")
+    w = packed.num_words(K, L)
+    sth = make_store(L, params.num_buckets, 64, payload_dim=w,
+                     dtype=jnp.uint32)
+    sth = rt_s.insert(h, sth, vecs, np.arange(N, dtype=np.int32), 0)
+    q = vecs[:NQ]
+    ex = np.arange(NQ)
+    ids_s, sc_s, _ = rt_s.search(h, sth, q, exclude=ex)
+    ids_f, sc_f, _ = rt_f.search(h, sth, q, exclude=ex)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(sc_f), np.asarray(sc_s))
+
+
+def test_hamming_store_via_migration_shim(setup):
+    """`pack_store_payload` on a dot store == building the hamming store
+    from scratch, and both search identically (staged vs fused)."""
+    params, h, store, vecs, golden = setup
+    migrated = packed.pack_store_payload(store, h)
+    rt_s, rt_f = _pair(params, M, "cnb", {}, score="hamming")
+    q = vecs[:NQ]
+    ids_s, sc_s, _ = rt_s.search(h, migrated, q)
+    ids_f, sc_f, _ = rt_f.search(h, migrated, q)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(sc_f), np.asarray(sc_s))
+
+
+def test_fused_on_raises_where_unsupported(setup):
+    """fused='on' must refuse (not silently degrade) when the kernel
+    cannot apply: id-keyed corpus scoring and ids-only search stores."""
+    from repro.core import BucketStore, DenseCorpus
+
+    params, h, store, vecs, golden = setup
+    rt = IndexRuntime(
+        RuntimeConfig(params=params, variant="cnb", m=M, fused="on"))
+    ids_only = BucketStore(store.ids, store.timestamps, store.write_ptr,
+                           None)
+    q = vecs[:8]
+    with pytest.raises(ValueError, match="corpus"):
+        rt.search(h, ids_only, q, corpus=DenseCorpus(jnp.asarray(vecs)))
+    with pytest.raises(ValueError, match="ids-only"):
+        rt.search(h, ids_only, q)
+
+
+def test_fused_auto_stays_staged_on_cpu(setup):
+    """'auto' must not pick interpret-mode Pallas on CPU hosts — it is
+    correct but slower than the jitted staged path."""
+    import jax
+
+    from repro.core import runtime as runtime_mod
+
+    if jax.default_backend() != "cpu":
+        pytest.skip("CPU-backend specific dispatch check")
+    cfg = RuntimeConfig(params=LshParams(d=D, k=K, L=L), m=M)
+    assert not runtime_mod._fused_on(
+        cfg, runtime_mod.LOCAL, has_payload=True, has_corpus=False)
+    assert runtime_mod._fused_on(
+        dataclasses.replace(cfg, fused="on"), runtime_mod.LOCAL,
+        has_payload=True, has_corpus=False)
+
+
+def test_hamming_mode_validation():
+    """Config-level guards: hamming is 1-node only; bad knobs raise."""
+    params = LshParams(d=D, k=K, L=L)
+    with pytest.raises(ValueError, match="1-node"):
+        RuntimeConfig(params=params, n_nodes=2, score="hamming")
+    with pytest.raises(ValueError, match="score"):
+        RuntimeConfig(params=params, score="cosine")
+    with pytest.raises(ValueError, match="fused"):
+        RuntimeConfig(params=params, fused="maybe")

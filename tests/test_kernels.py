@@ -89,3 +89,99 @@ def test_simhash_agrees_with_core_hashing(rng):
     core = hashing.sketch_codes(x, h)
     kern = ops.simhash(x, h)
     assert np.array_equal(np.asarray(core), np.asarray(kern))
+
+
+@pytest.mark.parametrize("n,kc,w", [(100, 50, 1), (7, 33, 2), (64, 128, 5)])
+def test_hamming_words_matches_ref(rng, n, kc, w):
+    """Multi-word packed rows (the core.packed layout)."""
+    c = jnp.asarray(rng.integers(0, 2**31, (n, w)), jnp.uint32)
+    cc = jnp.asarray(rng.integers(0, 2**31, (n, kc, w)), jnp.uint32)
+    got = ops.hamming(c, cc)
+    want = ref.hamming_words_ref(c, cc)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,L,k", [(40, 96, 3, 11), (9, 64, 5, 7),
+                                     (33, 128, 1, 30)])
+def test_simhash_packed_matches_pack_codes(rng, n, d, L, k):
+    """In-kernel packed-word emit == pack_codes over the unpacked codes."""
+    from repro.core import packed
+
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((L, k, d)), jnp.float32)
+    words = ops.simhash(x, h, packed=True)
+    want = packed.pack_codes(ops.simhash(x, h), k)
+    assert words.shape == (n, packed.num_words(k, L))
+    assert np.array_equal(np.asarray(words), np.asarray(want))
+
+
+def _fused_inputs(rng, t, nb, c, d, r, p, id_max=60):
+    ids_flat = np.full((t * nb, c), -1, np.int32)
+    pay_flat = np.zeros((t * nb, c, d), np.float32)
+    for row in range(t * nb):
+        live = rng.integers(0, c + 1)
+        ids_flat[row, :live] = rng.integers(0, id_max, size=live)
+        pay_flat[row, :live] = rng.standard_normal((live, d))
+    fb = rng.integers(0, t * nb, size=(r, p)).astype(np.int32)
+    pword = rng.integers(0, 2**p, size=(r,)).astype(np.int32)
+    excl = np.where(rng.random(r) < 0.5,
+                    rng.integers(0, id_max, size=r), -1).astype(np.int32)
+    meta = np.stack([pword, excl], axis=1).astype(np.int32)
+    q = rng.standard_normal((r, d)).astype(np.float32)
+    return (jnp.asarray(ids_flat), jnp.asarray(pay_flat), jnp.asarray(q),
+            jnp.asarray(fb), jnp.asarray(meta))
+
+
+@pytest.mark.parametrize(
+    "t,nb,c,d,r,p,m",
+    [(3, 8, 6, 16, 14, 5, 4), (1, 4, 3, 8, 5, 1, 2),
+     (2, 16, 10, 32, 30, 6, 10), (4, 4, 1, 8, 8, 3, 1)],
+)
+def test_fused_query_matches_ref(rng, t, nb, c, d, r, p, m):
+    ids_flat, pay_flat, q, fb, meta = _fused_inputs(rng, t, nb, c, d, r, p)
+    gi, gs = ops.fused_query(ids_flat, pay_flat, q, fb, meta, m=m)
+    wi, ws = ref.fused_query_ref(ids_flat, pay_flat, q, fb, meta, m=m)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+def test_fused_query_hamming_matches_ref_bitexact(rng, w):
+    t, nb, c, r, p, m = 2, 8, 5, 12, 4, 6
+    ids_flat, _, _, fb, meta = _fused_inputs(rng, t, nb, c, 8, r, p)
+    pay = rng.integers(0, 2**32, size=(t * nb, c, w), dtype=np.uint32)
+    pay[np.asarray(ids_flat) < 0] = 0
+    qw = jnp.asarray(
+        rng.integers(0, 2**32, size=(r, w), dtype=np.uint32))
+    pay = jnp.asarray(pay)
+    gi, gs = ops.fused_query(ids_flat, pay, qw, fb, meta, m=m,
+                             score="hamming")
+    wi, ws = ref.fused_query_ref(ids_flat, pay, qw, fb, meta, m=m,
+                                 score="hamming")
+    # integer scores: ids AND scores bit-equal
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.array_equal(np.asarray(gs), np.asarray(ws))
+
+
+@pytest.mark.parametrize("tb,kc", [(2, 4), (8, 8), (16, 32)])
+def test_fused_query_block_shape_invariance(rng, tb, kc):
+    """Autotuned block shapes must never change results, only speed."""
+    ids_flat, pay_flat, q, fb, meta = _fused_inputs(rng, 2, 8, 6, 16, 13, 4)
+    gi0, gs0 = ops.fused_query(ids_flat, pay_flat, q, fb, meta, m=5)
+    gi, gs = ops.fused_query(ids_flat, pay_flat, q, fb, meta, m=5,
+                             tb=tb, kc=kc)
+    assert np.array_equal(np.asarray(gi), np.asarray(gi0))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(gs0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_contains_matches_ref(rng):
+    t, nb, c, r, p = 3, 8, 6, 20, 5
+    ids_flat, _, _, fb, meta = _fused_inputs(rng, t, nb, c, 8, r, p)
+    tgt = rng.integers(0, 60, size=r).astype(np.int32)
+    meta = jnp.asarray(
+        np.stack([np.asarray(meta)[:, 0], tgt], axis=1).astype(np.int32))
+    got = ops.fused_contains(ids_flat, fb, meta)
+    want = ref.fused_contains_ref(ids_flat, fb, meta)
+    assert np.array_equal(np.asarray(got), np.asarray(want)[:, 0] > 0)

@@ -1,0 +1,98 @@
+"""Packed sketch-code layout invariants (core/packed.py, DESIGN.md
+Sec. 11).
+
+Property tests (hypothesis, behind the conftest guard) with seeded
+example twins, so the invariants are always exercised tier-1 even
+without hypothesis installed:
+
+  * pack -> unpack is the identity for random k, L, widths;
+  * packed hamming == sum of per-table unpacked hamming distances;
+  * the multi-word Pallas hamming kernel matches the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from conftest import given, st  # hypothesis or skip-fallback
+
+from repro.core import packed
+from repro.core.hashing import hamming_distance
+
+
+def _random_codes(seed: int, n: int, k: int, L: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << k, size=(n, L), dtype=np.uint32)
+
+
+def _check_roundtrip(seed: int, k: int, L: int, n: int = 16):
+    codes = jnp.asarray(_random_codes(seed, n, k, L))
+    words = packed.pack_codes(codes, k)
+    assert words.shape == (n, packed.num_words(k, L))
+    assert words.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(packed.unpack_codes(words, k, L)), np.asarray(codes))
+
+
+def _check_distance(seed: int, k: int, L: int, n: int = 16):
+    a = jnp.asarray(_random_codes(seed, n, k, L))
+    b = jnp.asarray(_random_codes(seed + 1, n, k, L))
+    got = packed.hamming_words(packed.pack_codes(a, k),
+                               packed.pack_codes(b, k))
+    want = jnp.sum(hamming_distance(a, b), axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30), st.integers(1, 8))
+def test_pack_unpack_roundtrip_property(seed, k, L):
+    _check_roundtrip(seed, k, L)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30), st.integers(1, 8))
+def test_packed_hamming_matches_unpacked_property(seed, k, L):
+    _check_distance(seed, k, L)
+
+
+def test_pack_unpack_roundtrip_examples():
+    """Seeded twins of the property: word-boundary-straddling widths
+    (k*L = 31, 32, 33, 64, 65) and the single-word/multi-word edges."""
+    for seed, (k, L) in enumerate(
+            [(1, 1), (30, 1), (10, 3), (8, 4), (11, 3), (16, 2),
+             (13, 5), (30, 8)]):
+        _check_roundtrip(seed, k, L)
+        _check_distance(seed, k, L)
+
+
+def test_num_words():
+    assert packed.num_words(8, 4) == 1   # 32 bits exactly
+    assert packed.num_words(8, 5) == 2   # 40 bits
+    assert packed.num_words(1, 1) == 1   # never zero words
+    assert packed.num_words(30, 8) == 8  # 240 bits
+
+
+def test_pack_masks_high_bits():
+    """Raw uint32 codes may carry garbage above bit k-1; pack ignores it."""
+    k, L = 5, 3
+    clean = jnp.asarray(_random_codes(7, 8, k, L))
+    dirty = clean | jnp.uint32(0xFFFFFFE0)  # set every bit >= k
+    np.testing.assert_array_equal(
+        np.asarray(packed.pack_codes(dirty, k)),
+        np.asarray(packed.pack_codes(clean, k)))
+
+
+def test_hamming_words_kernel_matches_oracle():
+    """ops.hamming on multi-word rows == packed.hamming_words == the
+    ref oracle (all three own a SWAR popcount; they must not drift)."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(3)
+    n, kc, w = 33, 17, 3
+    codes = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    cand = jnp.asarray(
+        rng.integers(0, 2**32, size=(n, kc, w), dtype=np.uint32))
+    want = ref.hamming_words_ref(codes, cand)
+    np.testing.assert_array_equal(
+        np.asarray(ops.hamming(codes, cand)), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(packed.hamming_words(codes[:, None, :], cand)),
+        np.asarray(want))

@@ -1,0 +1,190 @@
+"""`core.scoring.dedupe_topk` tie/edge semantics (DESIGN.md Sec. 11).
+
+These are THE semantics the fused mega-kernel's in-register reduce must
+reproduce, so every edge case is pinned twice: once on `dedupe_topk`
+itself, and once as a staged-vs-fused agreement check through the
+kernel wrappers (`ops.fused_query` vs `ref.fused_query_ref` — the ref
+calls `dedupe_topk`, so agreement there IS agreement with the staged
+path).
+
+Covered edges: all-EMPTY candidate rows, duplicate ids straddling a
+probe-block boundary in the fused scratch, m larger than the live
+candidate count, and m larger than K itself (which used to crash
+`lax.top_k`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scoring import NEG_INF, dedupe_topk, score_topk
+
+NEG = float("-inf")
+
+
+def test_all_empty_rows():
+    """A row with no live candidate returns all id -1 / score -inf."""
+    ids = jnp.full((3, 8), -1, jnp.int32)
+    scores = jnp.full((3, 8), NEG_INF)
+    top_i, top_s = dedupe_topk(ids, scores, 4)
+    np.testing.assert_array_equal(np.asarray(top_i), -1)
+    assert np.all(np.isneginf(np.asarray(top_s)))
+
+
+def test_m_larger_than_k():
+    """m > K used to crash lax.top_k; now the tail pads with -1/-inf."""
+    ids = jnp.asarray([[3, 7, 3]], jnp.int32)
+    scores = jnp.asarray([[1.0, 2.0, 0.5]])
+    top_i, top_s = dedupe_topk(ids, scores, 6)
+    np.testing.assert_array_equal(np.asarray(top_i)[0], [7, 3, -1, -1, -1, -1])
+    np.testing.assert_array_equal(
+        np.asarray(top_s)[0], [2.0, 1.0, NEG, NEG, NEG, NEG])
+
+
+def test_m_larger_than_live_count():
+    """More requested results than live candidates: the dead tail is
+    id -1 / -inf, and every live id appears exactly once."""
+    ids = jnp.asarray([[5, -1, 5, 2, -1, -1]], jnp.int32)
+    scores = jnp.asarray([[1.0, NEG, 9.0, 0.5, NEG, NEG]])
+    top_i, top_s = dedupe_topk(ids, scores, 5)
+    # first occurrence of id 5 (score 1.0) wins over the later 9.0 copy
+    np.testing.assert_array_equal(np.asarray(top_i)[0], [5, 2, -1, -1, -1])
+    np.testing.assert_array_equal(
+        np.asarray(top_s)[0], [1.0, 0.5, NEG, NEG, NEG])
+
+
+def test_first_occurrence_keeps_its_score():
+    """Duplicate ids collapse to the FIRST flat occurrence's score, even
+    when a later copy scores higher (stale-copy semantics: the probe
+    order is the freshness order)."""
+    ids = jnp.asarray([[9, 4, 9, 4]], jnp.int32)
+    scores = jnp.asarray([[1.0, 3.0, 8.0, 7.0]])
+    top_i, top_s = dedupe_topk(ids, scores, 2)
+    np.testing.assert_array_equal(np.asarray(top_i)[0], [4, 9])
+    np.testing.assert_array_equal(np.asarray(top_s)[0], [3.0, 1.0])
+
+
+def test_score_ties_break_to_lowest_id():
+    ids = jnp.asarray([[30, 10, 20]], jnp.int32)
+    scores = jnp.asarray([[2.0, 2.0, 2.0]])
+    top_i, _ = dedupe_topk(ids, scores, 3)
+    np.testing.assert_array_equal(np.asarray(top_i)[0], [10, 20, 30])
+
+
+def test_score_topk_m_larger_than_k_kernel_parity():
+    """The m > K pad must hold on the kernel path too (sorted id lanes
+    feed `bucket_topk`, whose KC is lane-padded past m anyway)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    vecs = jnp.asarray(rng.standard_normal((4, 3, 16)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, 5, size=(4, 3)), jnp.int32)
+    ref_i, ref_s = score_topk(q, ids, vecs, 7)
+    ker_i, ker_s = score_topk(q, ids, vecs, 7, use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(ker_i), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(ker_s), np.asarray(ref_s),
+                               atol=1e-5)
+
+
+def test_score_topk_hamming_kernel_parity():
+    """Hamming mode: the jnp path (packed.hamming_words) and the Pallas
+    path (ops.hamming multi-word) return bit-equal integer scores."""
+    rng = np.random.default_rng(1)
+    b, kk, w = 6, 9, 2
+    q = jnp.asarray(rng.integers(0, 2**32, size=(b, w), dtype=np.uint32))
+    cand = jnp.asarray(
+        rng.integers(0, 2**32, size=(b, kk, w), dtype=np.uint32))
+    ids = jnp.asarray(rng.integers(-1, 20, size=(b, kk)), jnp.int32)
+    ref_i, ref_s = score_topk(q, ids, cand, 4, score="hamming")
+    ker_i, ker_s = score_topk(q, ids, cand, 4, score="hamming",
+                              use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(ker_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(ker_s), np.asarray(ref_s))
+
+
+# ---------------------------------------------------------------------------
+# staged-vs-fused agreement on the same edges, through the kernel wrappers
+# ---------------------------------------------------------------------------
+
+
+def _fused_case(ids_flat, pay_flat, q, fb, meta, m, score="dot"):
+    from repro.kernels import ops, ref
+
+    got_i, got_s = ops.fused_query(
+        jnp.asarray(ids_flat), jnp.asarray(pay_flat), jnp.asarray(q),
+        jnp.asarray(fb), jnp.asarray(meta), m=m, score=score)
+    want_i, want_s = ref.fused_query_ref(
+        jnp.asarray(ids_flat), jnp.asarray(pay_flat), jnp.asarray(q),
+        jnp.asarray(fb), jnp.asarray(meta), m=m, score=score)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    return np.asarray(got_i), np.asarray(got_s), np.asarray(want_s)
+
+
+def test_fused_all_empty_rows():
+    """Rows whose every probe is invalid (probe word 0) or whose buckets
+    are all EMPTY come back as -1/-inf from the fused kernel."""
+    c, d = 4, 8
+    ids_flat = np.full((6, c), -1, np.int32)
+    pay_flat = np.zeros((6, c, d), np.float32)
+    q = np.ones((3, d), np.float32)
+    fb = np.zeros((3, 2), np.int32)
+    meta = np.asarray([[0, -1], [3, -1], [0, -1]], np.int32)
+    got_i, got_s, want_s = _fused_case(ids_flat, pay_flat, q, fb, meta, 3)
+    np.testing.assert_array_equal(got_i, -1)
+    assert np.all(np.isneginf(got_s))
+
+
+def test_fused_duplicate_across_probe_blocks():
+    """The same id in two DIFFERENT probed buckets lands in two different
+    KC blocks of the fused scratch; the first probe's copy must win with
+    its own score — exactly `dedupe_topk`'s stable first-occurrence rule."""
+    c, d = 4, 8
+    rng = np.random.default_rng(2)
+    ids_flat = np.full((6, c), -1, np.int32)
+    pay_flat = np.zeros((6, c, d), np.float32)
+    # id 7 lives in bucket row 0 (weak vector) AND row 3 (strong vector)
+    ids_flat[0, :3] = [7, 1, 2]
+    ids_flat[3, :2] = [7, 5]
+    pay_flat[0, :3] = rng.standard_normal((3, d)) * 0.1
+    pay_flat[3, 0] = 10.0  # stale duplicate scores much higher
+    pay_flat[3, 1] = rng.standard_normal(d)
+    q = np.ones((1, d), np.float32)
+    fb = np.asarray([[0, 3]], np.int32)
+    meta = np.asarray([[0b11, -1]], np.int32)
+    got_i, got_s, want_s = _fused_case(ids_flat, pay_flat, q, fb, meta, 4)
+    assert list(got_i[0]).count(7) == 1  # deduped
+    # id 7's surviving score is the FIRST (probe-0, weak) copy's
+    pos = list(got_i[0]).index(7)
+    assert got_s[0][pos] == want_s[0][pos]
+    assert got_s[0][pos] < 1.0
+
+
+def test_fused_m_larger_than_live():
+    c, d = 4, 8
+    ids_flat = np.full((6, c), -1, np.int32)
+    pay_flat = np.zeros((6, c, d), np.float32)
+    ids_flat[1, 0] = 3
+    pay_flat[1, 0] = 1.0
+    q = np.ones((2, d), np.float32)
+    fb = np.asarray([[1, 2], [2, 2]], np.int32)
+    meta = np.asarray([[0b11, -1], [0b11, -1]], np.int32)
+    got_i, got_s, _ = _fused_case(ids_flat, pay_flat, q, fb, meta, 5)
+    np.testing.assert_array_equal(got_i[0], [3, -1, -1, -1, -1])
+    np.testing.assert_array_equal(got_i[1], -1)
+
+
+def test_fused_exclude_sentinel():
+    """exclude=-1 means no exclusion (only matches EMPTY slots); a real
+    exclude id drops exactly that id."""
+    c, d = 4, 8
+    ids_flat = np.full((2, c), -1, np.int32)
+    pay_flat = np.zeros((2, c, d), np.float32)
+    ids_flat[0, :2] = [11, 12]
+    pay_flat[0, :2] = 1.0
+    q = np.ones((2, d), np.float32)
+    fb = np.asarray([[0], [0]], np.int32)
+    meta = np.asarray([[1, 11], [1, -1]], np.int32)
+    got_i, _, _ = _fused_case(ids_flat, pay_flat, q, fb, meta, 2)
+    assert 11 not in got_i[0] and 12 in got_i[0]
+    assert set(got_i[1]) == {11, 12}
