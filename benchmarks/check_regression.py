@@ -25,7 +25,12 @@ import json
 import re
 import sys
 
-RATIO = re.compile(r"([A-Za-z0-9]+_over_[A-Za-z0-9]+)=([0-9.]+)x")
+# full float syntax (sign, scientific notation): producers format ratios
+# fixed-point today, but a '1.2e-01x' row must gate, not vanish silently
+RATIO = re.compile(
+    r"([A-Za-z0-9]+_over_[A-Za-z0-9]+)="
+    r"(-?(?:[0-9]+\.?[0-9]*|\.[0-9]+)(?:[eE][+-]?[0-9]+)?)x"
+)
 THRESHOLD = 0.4
 
 

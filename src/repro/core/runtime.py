@@ -327,11 +327,13 @@ def _fused_on(cfg: RuntimeConfig, cx, *, has_payload: bool,
     `auto` engages only where the fused kernel is a strict drop-in: the
     1-node topology (routed steps interleave collectives between the
     stages), slot-embedded payloads (an id-keyed corpus needs the global
-    gather the kernel exists to avoid), and a real accelerator backend
-    (on CPU the kernel runs in interpret mode — correct but slower than
-    the jitted staged path, so it stays a test/fallback mode).  `on`
-    forces the path (including CPU interpret) and raises where it cannot
-    apply, instead of silently degrading.
+    gather the kernel exists to avoid), and a TPU backend — the kernel
+    is Mosaic-only (PrefetchScalarGridSpec + TPU compiler params), so on
+    GPU it would fail to lower rather than run slow, and on CPU it runs
+    in interpret mode — correct but slower than the jitted staged path.
+    Both stay on the staged path under `auto`.  `on` forces the path
+    (including CPU interpret) and raises where it cannot apply, instead
+    of silently degrading.
     """
     if cfg.fused == "off":
         return False
@@ -348,7 +350,7 @@ def _fused_on(cfg: RuntimeConfig, cx, *, has_payload: bool,
                 f"fused='on' unsupported here: {'; '.join(blockers)}"
             )
         return True
-    return not blockers and jax.default_backend() != "cpu"
+    return not blockers and jax.default_backend() == "tpu"
 
 
 def _fused_probe_rows(cfg: RuntimeConfig, nb: int, table, local_idx, mask):
@@ -981,9 +983,15 @@ def insert_kernel(
             # pack is a pure bit shuffle on codes it computed anyway.
             from repro.core import packed as packed_mod
 
-            payload = packed_mod.pack_codes(
-                plan.codes, cfg.params.k
-            ).astype(st.payload.dtype)
+            W = packed_mod.num_words(cfg.params.k, cfg.params.L)
+            if st.payload.dtype != jnp.uint32 or st.payload.shape[-1] != W:
+                raise ValueError(
+                    "score='hamming' insert needs a packed uint32 payload "
+                    f"[..., {W}] — run pack_store_payload on stores built "
+                    f"for dot scoring; got {st.payload.dtype} payload with "
+                    f"shape {tuple(st.payload.shape)}"
+                )
+            payload = packed_mod.pack_codes(plan.codes, cfg.params.k)
         else:
             payload = vec_all
     for l in range(cfg.params.L):

@@ -166,6 +166,16 @@ def test_fused_auto_stays_staged_on_cpu(setup):
         has_payload=True, has_corpus=False)
 
 
+def test_hamming_insert_rejects_unpacked_payload(setup):
+    """score='hamming' insert must refuse an f32 dot-mode payload store —
+    casting packed words into f32 slots silently drops bits above 2^24;
+    `pack_store_payload` is the migration path."""
+    params, h, store, vecs, golden = setup
+    rt = IndexRuntime(RuntimeConfig(params=params, m=M, score="hamming"))
+    with pytest.raises(ValueError, match="packed uint32"):
+        rt.insert(h, store, vecs[:4], np.arange(4, dtype=np.int32), 0)
+
+
 def test_hamming_mode_validation():
     """Config-level guards: hamming is 1-node only; bad knobs raise."""
     params = LshParams(d=D, k=K, L=L)
