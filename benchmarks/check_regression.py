@@ -12,7 +12,11 @@ checks machine-independent signals:
   * every ``<x>_over_<y>=<r>x`` ratio present in the baseline must still
     exist and stay above ``THRESHOLD * baseline`` — e.g. the bit-packed
     hamming speedup over f32 dot (``packed_over_dot``) regressing below
-    half its recorded value fails the build.
+    half its recorded value fails the build;
+  * ratios in ``ABSOLUTE_FLOORS`` additionally gate against a fixed
+    floor, independent of the recorded baseline — the observability
+    overhead ratio (``obs_on_over_obs_off``) must stay >= 0.95, i.e.
+    tracing every query may cost at most 5% qps.
 
 Interpret-mode Pallas rows (``mode=interpret``) are exempt from the ratio
 floor: their absolute cost is a CPU-emulation artifact, not a perf signal
@@ -26,12 +30,18 @@ import re
 import sys
 
 # full float syntax (sign, scientific notation): producers format ratios
-# fixed-point today, but a '1.2e-01x' row must gate, not vanish silently
+# fixed-point today, but a '1.2e-01x' row must gate, not vanish silently.
+# The side names allow underscores (obs_on_over_obs_off) — excluding them
+# silently truncated such keys to their inner words, detaching the
+# ABSOLUTE_FLOORS lookup from the row it was meant to gate.
 RATIO = re.compile(
-    r"([A-Za-z0-9]+_over_[A-Za-z0-9]+)="
+    r"([A-Za-z0-9_]+_over_[A-Za-z0-9_]+)="
     r"(-?(?:[0-9]+\.?[0-9]*|\.[0-9]+)(?:[eE][+-]?[0-9]+)?)x"
 )
 THRESHOLD = 0.4
+# per-ratio-key hard floors (by the derived key, any row): gate against
+# the constant even if the baseline itself was recorded below par
+ABSOLUTE_FLOORS = {"obs_on_over_obs_off": 0.95}
 
 
 def _ratios(rec: list[dict]) -> dict[str, tuple[float, bool]]:
@@ -62,6 +72,11 @@ def check(current: list[dict], baseline: list[dict]) -> list[str]:
             failures.append(
                 f"regressed: {key} = {cur_val:.3f}x < "
                 f"{THRESHOLD} * baseline {base_val:.3f}x")
+    for key, (cur_val, interp) in sorted(cur.items()):
+        floor = ABSOLUTE_FLOORS.get(key.split("::")[-1])
+        if floor is not None and not interp and cur_val < floor:
+            failures.append(
+                f"below floor: {key} = {cur_val:.3f}x < {floor}")
     return failures
 
 

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +14,11 @@ from repro.core import (
 from repro.core.corpus import exact_topk_sparse, sparse_densify_host
 from repro.core.store import build_store_host
 from repro.data import osn
+from repro.obs.trace import Tracer
+
+# module-level tracer: benchmark timings all come off one monotonic
+# perf_counter clock, and drivers may export the spans for inspection
+TRACER = Tracer()
 
 
 def sketch_sparse_codes(corpus, hyperplanes, chunk: int = 8192) -> np.ndarray:
@@ -52,33 +56,33 @@ def build_dataset(spec: osn.OsnSpec, L: int, num_queries: int, m: int = 10,
     key = (spec.name, L, num_queries, m, capacity, seed)
     if key in _CACHE:
         return _CACHE[key]
-    t0 = time.time()
-    corpus = osn.generate(spec)
-    params = LshParams(d=spec.num_interests, k=spec.k, L=L, seed=seed + 13)
-    h = make_hyperplanes(params)
-    codes = sketch_sparse_codes(corpus, h)
-    store = build_store_host(codes, params.num_buckets, capacity=capacity)
+    with TRACER.span(f"bench/build:{spec.name}", cat="bench", L=L) as sp:
+        corpus = osn.generate(spec)
+        params = LshParams(d=spec.num_interests, k=spec.k, L=L, seed=seed + 13)
+        h = make_hyperplanes(params)
+        codes = sketch_sparse_codes(corpus, h)
+        store = build_store_host(codes, params.num_buckets, capacity=capacity)
 
-    rng = np.random.default_rng(seed + 4)
-    qidx = rng.choice(corpus.n, num_queries, replace=False)
-    qd = sparse_densify_host(corpus, qidx)
-    qd /= np.maximum(np.linalg.norm(qd, axis=1, keepdims=True), 1e-12)
+        rng = np.random.default_rng(seed + 4)
+        qidx = rng.choice(corpus.n, num_queries, replace=False)
+        qd = sparse_densify_host(corpus, qidx)
+        qd /= np.maximum(np.linalg.norm(qd, axis=1, keepdims=True), 1e-12)
 
-    ideal_s = np.empty((num_queries, m), np.float32)
-    ideal_i = np.empty((num_queries, m), np.int32)
-    qchunk = 256
-    for s0 in range(0, num_queries, qchunk):
-        e0 = min(s0 + qchunk, num_queries)
-        isc, iid = exact_topk_sparse(corpus, qd[s0:e0], m + 1)
-        for i in range(e0 - s0):
-            mask = iid[i] != qidx[s0 + i]
-            ideal_s[s0 + i] = isc[i][mask][:m]
-            ideal_i[s0 + i] = iid[i][mask][:m]
-    built = BuiltDataset(spec, corpus, params, h, store, qidx, qd,
-                         ideal_i, ideal_s)
-    _CACHE[key] = built
+        ideal_s = np.empty((num_queries, m), np.float32)
+        ideal_i = np.empty((num_queries, m), np.int32)
+        qchunk = 256
+        for s0 in range(0, num_queries, qchunk):
+            e0 = min(s0 + qchunk, num_queries)
+            isc, iid = exact_topk_sparse(corpus, qd[s0:e0], m + 1)
+            for i in range(e0 - s0):
+                mask = iid[i] != qidx[s0 + i]
+                ideal_s[s0 + i] = isc[i][mask][:m]
+                ideal_i[s0 + i] = iid[i][mask][:m]
+        built = BuiltDataset(spec, corpus, params, h, store, qidx, qd,
+                             ideal_i, ideal_s)
+        _CACHE[key] = built
     print(f"# built {spec.name} (n={corpus.n}, k={spec.k}, L={L}) "
-          f"in {time.time()-t0:.1f}s")
+          f"in {sp.duration_s:.1f}s")
     return built
 
 
@@ -87,9 +91,11 @@ def evaluate_variant(ds: BuiltDataset, variant: str, m: int = 10):
     topo = paper_topology(ds.spec.k)
     e = LshEngine(ds.params, ds.hyperplanes, ds.store, ds.corpus, topo,
                   EngineConfig(variant=variant))
-    t0 = time.time()
-    r = e.search(jnp.asarray(ds.queries_dense), m=m, exclude=ds.queries_idx)
-    dt = (time.time() - t0) / len(ds.queries_idx)
+    with TRACER.span(f"bench/search:{variant}", cat="bench",
+                     dataset=ds.spec.name) as sp:
+        r = e.search(jnp.asarray(ds.queries_dense), m=m,
+                     exclude=ds.queries_idx)
+    dt = sp.duration_s / len(ds.queries_idx)
     return (
         metrics.recall_at_m(r.ids, ds.ideal_ids),
         metrics.ncs_at_m(r.scores, ds.ideal_scores),

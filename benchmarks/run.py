@@ -6,6 +6,9 @@ every benchmark at CPU-friendly scale.  `--json PATH` additionally writes
 the same rows as machine-readable JSON (a list of
 ``{"name", "us_per_call", "derived", "suite"}`` objects, e.g.
 ``BENCH_serve.json``), so perf trajectories can be tracked across commits.
+Rows whose benchmark published ``bench_dropped_probes`` /
+``bench_nodes_contacted`` gauges into the obs metrics registry
+(bench_serve does) additionally carry those as JSON columns.
 """
 
 from __future__ import annotations
@@ -35,6 +38,7 @@ def main(argv=None) -> None:
         fig5_quality, table1_costs,
     )
     from benchmarks import roofline
+    from repro.obs.registry import REGISTRY
 
     suites = [
         ("fig1", lambda: fig1_sp_vs_buckets.rows()),
@@ -59,10 +63,17 @@ def main(argv=None) -> None:
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.2f},{derived}")
-                collected.append(dict(
+                row = dict(
                     name=row_name, us_per_call=round(float(us), 2),
                     derived=str(derived), suite=name,
-                ))
+                )
+                dp = REGISTRY.value("bench_dropped_probes", row=row_name)
+                if dp is not None:
+                    row["dropped_probes"] = int(dp)
+                nc = REGISTRY.value("bench_nodes_contacted", row=row_name)
+                if nc is not None:
+                    row["nodes_contacted"] = round(float(nc), 2)
+                collected.append(row)
             print(f"# suite {name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness running

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import costmodel, hashing, metrics
 from repro.core.hashing import LshParams
+from repro.obs.flight import QueryRecord
 from repro.core.runtime import IndexRuntime, RuntimeConfig, kill_node, reshard
 from repro.core.store import make_store
 
@@ -195,6 +196,7 @@ def run_churn_runtime(
     schedule=None,
     mesh_for=None,
     kills=None,
+    obs=None,
 ) -> dict:
     """Drive the churn trajectory on ANY topology (the one driver).
 
@@ -226,6 +228,13 @@ def run_churn_runtime(
     revival, `costmodel.estimate_recovery_bytes`).  Requires
     `rt.cfg.replication > 1`; each announce's R-1-way fan-out is charged
     via `costmodel.estimate_replication_bytes`, never silently.
+
+    With `obs` (an `repro.obs.Observability`) the run feeds the flight
+    recorder and metrics registry (DESIGN.md Sec. 12): one ``epoch``
+    record per epoch whose stats and byte charges sum EXACTLY to the
+    aggregate arrays returned here (the smoke drivers assert it), an
+    anomaly dump on every `kill_node` and reshard, and the drop/byte
+    totals as registry counters.
     """
     from repro.core import distributed as dist_mod
 
@@ -286,6 +295,11 @@ def run_churn_runtime(
                 raise ValueError(f"node {node} killed while already dead")
             store, reps = kill_node(rt, store, reps, node)
             live[node] = 0
+            if obs is not None:
+                obs.flight.note_anomaly(
+                    "kill_node", node=int(node), epoch=int(epoch),
+                    live_nodes=int(live.sum()),
+                )
         if sched is not None and sched[epoch] != rt.cfg.n_nodes:
             # -- membership round: join/leave to the scheduled node count
             n_new = sched[epoch]
@@ -299,6 +313,11 @@ def run_churn_runtime(
                 )
             runtimes[n_new] = rt
             events.append(ev)
+            if obs is not None:
+                obs.flight.note_anomaly(
+                    "reshard", epoch=int(epoch), old_n=int(ev.old_n),
+                    new_n=int(ev.new_n), handoff_bytes=int(ev.handoff_bytes),
+                )
             ep_handoff += ev.handoff_bytes
             total_handoff += ev.handoff_bytes
             # the new owners' NB caches are cold — rewarm immediately
@@ -351,6 +370,18 @@ def run_churn_runtime(
                 total_repl += b
             last_refresh = epoch
         if epoch == 0:
+            if obs is not None:
+                # the initial announce: byte charges but no queries —
+                # recorded so the ring's records sum to the run TOTALS
+                # (per-read-epoch arrays exclude epoch 0 by convention)
+                obs.flight.record(QueryRecord(
+                    qid=0, kind="epoch",
+                    extra=dict(
+                        replication_bytes=ep_repl, recovery_bytes=ep_recov,
+                        handoff_bytes=ep_handoff, refresh_bytes=ep_refresh,
+                        live_nodes=int(live.sum()),
+                    ),
+                ))
             continue
 
         kw = {}
@@ -376,6 +407,40 @@ def run_churn_runtime(
         recov_b.append(ep_recov)
         nodes_traj.append(rt.cfg.n_nodes)
         live_traj.append(int(live.sum()))
+        if obs is not None:
+            # one EXACT record per read epoch: the StepStats of the epoch's
+            # search dispatch plus the epoch's byte charges — summing the
+            # ring's ``epoch`` records reproduces the aggregate arrays
+            # above bit-for-bit (asserted by the smoke drivers)
+            hs = (drop.host() if hasattr(drop, "host")
+                  else dict(dropped_probes=int(drop)))
+            obs.flight.record(QueryRecord(
+                qid=int(epoch), kind="epoch", batch_size=cfg.num_queries,
+                **hs,
+                extra=dict(
+                    replication_bytes=ep_repl, recovery_bytes=ep_recov,
+                    handoff_bytes=ep_handoff, refresh_bytes=ep_refresh,
+                    recall=float(recalls[-1]), staleness=int(staleness[-1]),
+                    live_nodes=int(live.sum()), n_nodes=rt.cfg.n_nodes,
+                ),
+            ))
+
+    if obs is not None:
+        reg = obs.registry
+        reg.counter(
+            "churn_dropped_probes_total",
+            "router-overflow probe drops across all read epochs",
+        ).inc(int(np.sum(dropped)))
+        for name, total in (
+            ("churn_replication_bytes_total", total_repl),
+            ("churn_recovery_bytes_total", total_recov),
+            ("churn_handoff_bytes_total", total_handoff),
+            ("churn_refresh_bytes_total", total_refresh),
+        ):
+            reg.counter(name).inc(int(total))
+        reg.gauge("churn_recall").set(float(recalls[-1]), window="last")
+        reg.gauge("churn_recall").set(float(np.mean(recalls)), window="mean")
+        reg.gauge("churn_live_nodes").set(int(live.sum()))
 
     stale_arr = np.asarray(staleness)
     return dict(
@@ -424,6 +489,7 @@ def run_churn_distributed(
     n_shards: int = 2,
     mesh=None,
     cap_factor: float | None = None,
+    obs=None,
 ) -> dict:
     """The same trajectory on the sharded mesh topology.
 
@@ -437,7 +503,7 @@ def run_churn_distributed(
         require_host_devices(n_shards)
         mesh = make_host_mesh(data=1, model=n_shards)
     return run_churn_runtime(
-        cfg, make_churn_runtime(cfg, n_shards, mesh, cap_factor)
+        cfg, make_churn_runtime(cfg, n_shards, mesh, cap_factor), obs=obs
     )
 
 
@@ -458,7 +524,7 @@ class NodeChurnConfig:
     schedule: tuple[int, ...] = (1, 2, 4, 2, 1)
 
 
-def run_node_churn(cfg: NodeChurnConfig, mesh_for=None) -> dict:
+def run_node_churn(cfg: NodeChurnConfig, mesh_for=None, obs=None) -> dict:
     """Interleave node join/leave epochs with content churn and queries.
 
     The topology axis becomes a runtime variable: membership rounds fire
@@ -475,7 +541,7 @@ def run_node_churn(cfg: NodeChurnConfig, mesh_for=None) -> dict:
     mesh = None if n0 == 1 else (mesh_for or _zone_mesh)(n0)
     rt = make_churn_runtime(cfg.churn, n0, mesh=mesh)
     return run_churn_runtime(cfg.churn, rt, schedule=sched,
-                             mesh_for=mesh_for)
+                             mesh_for=mesh_for, obs=obs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -497,7 +563,8 @@ class FailureChurnConfig:
     kills: tuple[tuple[int, int], ...] = ((3, 1),)
 
 
-def run_failure_churn(cfg: FailureChurnConfig, mesh_for=None) -> dict:
+def run_failure_churn(cfg: FailureChurnConfig, mesh_for=None,
+                      obs=None) -> dict:
     """Measure recall degradation and recovery across fail-stop kills.
 
     Runs the SAME runtime (same mesh, same compiled steps, same R and
@@ -518,7 +585,9 @@ def run_failure_churn(cfg: FailureChurnConfig, mesh_for=None) -> dict:
         cfg.churn, cfg.n_nodes, mesh=mesh,
         replication=cfg.replication, read_mode=cfg.read_mode,
     )
-    failure = run_churn_runtime(cfg.churn, rt, kills=cfg.kills)
+    # only the failure run feeds obs: the reference would double-count
+    # every byte charge and drop in the flight totals
+    failure = run_churn_runtime(cfg.churn, rt, kills=cfg.kills, obs=obs)
     reference = run_churn_runtime(cfg.churn, rt)
 
     gap = reference["recalls"] - failure["recalls"]

@@ -74,6 +74,20 @@ class MessageCounter:
     def add_result(self, n: int = 1) -> None:
         self.result_messages += int(n)
 
+    def publish(self, registry, **labels) -> None:
+        """Mirror the counts into an `repro.obs` metrics registry (the
+        unified export surface, DESIGN.md Sec. 12).  Gauges, not
+        counters: a MessageCounter is itself the accumulator, so
+        publishing is an idempotent snapshot."""
+        for field in ("dht_lookups", "lookup_hops", "neighbor_messages",
+                      "result_messages"):
+            registry.gauge(f"overlay_{field}").set(
+                getattr(self, field), **labels)
+        registry.gauge(
+            "overlay_messages_total",
+            "Table-1 overlay messages (lookup hops + neighbor forwards)",
+        ).set(self.total, **labels)
+
 
 # -- elastic membership: bucket-state handoff (DESIGN.md Sec. 9) -------------
 

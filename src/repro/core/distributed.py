@@ -164,6 +164,26 @@ def make_replicate_store(cfg: RuntimeConfig, mesh):
 # -----------------------------------------------------------------------------
 
 
+def _stats_spec():
+    """shard_map out-spec for a `StepStats` pytree: every leaf replicated
+    (the global psum below makes them identical across devices)."""
+    from jax.sharding import PartitionSpec as P
+
+    return runtime_mod.StepStats(
+        dropped=P(), probes_issued=P(), probes_routed=P(),
+        nodes_contacted=P(), replica_fanout=P(), dropped_by_dest=P(),
+    )
+
+
+def _psum_stats(stats, psum_axes):
+    """Global `StepStats`: sum the additive accounting fields across the
+    mesh.  `replica_fanout` is a per-step constant (identical on every
+    device), so it is carried through rather than summed."""
+    summed = jax.lax.psum(
+        dataclasses.replace(stats, replica_fanout=jnp.int32(0)), psum_axes)
+    return dataclasses.replace(summed, replica_fanout=stats.replica_fanout)
+
+
 def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
     """The un-jitted shard_map'd search callable (serve backends wrap it
     with their own jit to count retraces); `make_search_step` is the jit'd
@@ -183,7 +203,7 @@ def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
         store_p = P(None, "model", None, None)
         cache_i = P(None, None, "model", None)
         cache_p = P(None, None, "model", None, None)
-        out_specs = (P(batch_axes, None), P(batch_axes, None), P())
+        out_specs = (P(batch_axes, None), P(batch_axes, None), _stats_spec())
 
         # positional layout: hyperplanes, store, [cache], [reps + live], q
         in_specs = [P(), store_i, store_p]
@@ -204,11 +224,11 @@ def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
                 kw = dict(rep_ids=rest.pop(0), rep_payload=rest.pop(0),
                           live=rest.pop(0))
             (q,) = rest
-            i, s, drop = runtime_mod.search_kernel(
+            i, s, stats = runtime_mod.search_kernel(
                 cfg, cx, cfg.m, hyperplanes, ids, payload,
                 c_ids, c_payload, q, **kw,
             )
-            return i, s, jax.lax.psum(drop, psum_axes)
+            return i, s, _psum_stats(stats, psum_axes)
 
         return compat.shard_map(
             step, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs
@@ -219,11 +239,12 @@ def search_step_fn(cfg: RuntimeConfig, batch_axes=("data", "model")):
 
 def make_search_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed search: queries [B, d] sharded over batch_axes ->
-    (ids [B, m], scores [B, m], dropped_probes int32 scalar).
+    (ids [B, m], scores [B, m], stats `StepStats`).
 
-    ids/scores keep the query sharding; `dropped_probes` is the GLOBAL
-    count of (query, table) probes that overflowed the capacitated
-    all_to_all buffers this step (replicated; 0 under allgather routing).
+    ids/scores keep the query sharding; the stats pytree carries GLOBAL
+    (psum'd, replicated) accounting — `int(stats)` is the count of
+    (query, table) probes that overflowed the capacitated all_to_all
+    buffers this step (0 under allgather routing).
     """
     return jax.jit(search_step_fn(cfg, batch_axes)(mesh))
 
@@ -231,7 +252,7 @@ def make_search_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
 def make_contains_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     """jit'd distributed `contains` (paper Sec. 6.3 success probability):
     (hyperplanes, store_ids, [cache_ids,] queries [B, d], targets [B]) ->
-    (hits bool [B], dropped_probes int32).
+    (hits bool [B], stats `StepStats` — `int(stats)` = dropped probes).
 
     Uses the same `ProbePlan` and router as the search step, so the
     measured success probability is exactly the deployed query
@@ -244,7 +265,7 @@ def make_contains_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
     tspec = P(batch_axes)
     store_i = P(None, "model", None)
     cache_i = P(None, None, "model", None)
-    out_specs = (P(batch_axes), P())
+    out_specs = (P(batch_axes), _stats_spec())
     psum_axes = _psum_axes(batch_axes)
 
     has_cache = cfg.variant == "cnb" and cfg.node_bits > 0
@@ -266,10 +287,10 @@ def make_contains_step(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
         if has_reps:
             kw = dict(rep_ids=rest.pop(0), live=rest.pop(0))
         q, targets = rest
-        h, drop = runtime_mod.contains_kernel(
+        h, stats = runtime_mod.contains_kernel(
             cfg, cx, hyperplanes, ids, c_ids, q, targets, **kw
         )
-        return h, jax.lax.psum(drop, psum_axes)
+        return h, _psum_stats(stats, psum_axes)
 
     fn = compat.shard_map(
         step, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs

@@ -216,10 +216,13 @@ class LshEngine:
         return np.asarray(out).reshape(-1)[:nq]
 
     def simulate_messages(
-        self, queries: jax.Array, rng: np.random.Generator | None = None
+        self, queries: jax.Array, rng: np.random.Generator | None = None,
+        registry=None,
     ) -> float:
         """Hop-counted message simulation over the CAN topology; converges to
-        Table 1's closed forms (tested)."""
+        Table 1's closed forms (tested).  With `registry=` the raw counts
+        publish into the obs metrics registry (`MessageCounter.publish`),
+        labeled by variant."""
         rng = rng or np.random.default_rng(0)
         codes = np.asarray(hashing.sketch_codes(jnp.asarray(queries), self.hyperplanes))
         topo = self.topology
@@ -236,4 +239,8 @@ class LshEngine:
                     # already on-node in the sharded geometry.
                     counter.add_neighbor(topo.node_bits)
                     counter.add_result(topo.node_bits)
+        if registry is not None:
+            counter.publish(registry, variant=self.config.variant)
+            registry.gauge("overlay_messages_per_query").set(
+                counter.total / nq, variant=self.config.variant)
         return counter.total / nq

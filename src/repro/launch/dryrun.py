@@ -20,7 +20,6 @@ Usage:
 import argparse
 import json
 import re
-import time
 import traceback
 
 import jax
@@ -34,6 +33,7 @@ from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import model as M
 from repro.models import sharding as sh
 from repro.models.config import ModelConfig
+from repro.obs.trace import Tracer
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts
 
@@ -312,13 +312,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     rules = RULE_PRESETS[rules_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
-    with unroll_mod.unroll_scope(unroll), unroll_mod.remat_scope(remat):
-        lowered, meta = build_lowering(arch, shape_name, mesh, rules)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    tracer = Tracer()
+    with tracer.span("dryrun/lower", cat="compile", arch=arch) as sp_lower:
+        with unroll_mod.unroll_scope(unroll), unroll_mod.remat_scope(remat):
+            lowered, meta = build_lowering(arch, shape_name, mesh, rules)
+    t_lower = sp_lower.duration_s
+    with tracer.span("dryrun/compile", cat="compile", arch=arch) as sp_comp:
+        compiled = lowered.compile()
+    t_compile = sp_comp.duration_s
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()

@@ -42,7 +42,7 @@ def _parse_kills(text: str) -> tuple[tuple[int, int], ...]:
     return tuple(kills)
 
 
-def run(args) -> dict:
+def run(args, obs=None) -> dict:
     from repro.core.churn import (
         ChurnConfig, FailureChurnConfig, run_failure_churn,
     )
@@ -58,7 +58,7 @@ def run(args) -> dict:
     out = run_failure_churn(FailureChurnConfig(
         churn=cfg, n_nodes=args.n_nodes, replication=args.replication,
         read_mode=args.read_mode, kills=kills,
-    ))
+    ), obs=obs)
 
     print(f"[failure-churn] n_nodes={args.n_nodes} R={args.replication} "
           f"read_mode={args.read_mode} "
@@ -104,6 +104,10 @@ def main(argv=None):
     ap.add_argument("--refresh-every", type=int, default=2)
     ap.add_argument("--ttl-epochs", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome-trace-event JSON (Perfetto) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry JSON snapshot here")
     ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
@@ -130,7 +134,21 @@ def main(argv=None):
         proc = subprocess.run(cmd, env=env)
         raise SystemExit(proc.returncode)
 
-    out = run(args)
+    obs = None
+    if args.trace_out or args.metrics_out or args.smoke:
+        from repro.obs import Observability
+
+        obs = Observability()
+
+    out = run(args, obs=obs)
+
+    if obs is not None:
+        if args.trace_out:
+            obs.export_trace(args.trace_out)
+            print(f"[failure-churn] trace -> {args.trace_out}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"[failure-churn] metrics -> {args.metrics_out}")
 
     if args.smoke:
         import numpy as np
@@ -160,6 +178,21 @@ def main(argv=None):
         assert np.all(out["recovery_bytes"][recovered] == per_zone)
         assert out["total_recovery_bytes"] == sum(
             b for _e, _n, b in out["recoveries"])
+        # the observability gates (DESIGN.md Sec. 12): every kill dumped
+        # the flight ring, and the ring's per-epoch records account
+        # EXACTLY for the aggregate arrays asserted above — the same
+        # numbers, reconstructed record by record
+        fl = obs.flight
+        kill_dumps = [d for d in fl.dumps if d["reason"] == "kill_node"]
+        assert len(kill_dumps) == len(_parse_kills(args.kills)), fl.dumps
+        assert fl.total("dropped_probes") == int(out["dropped_probes"].sum())
+        assert fl.total("replication_bytes") == out["total_replication_bytes"]
+        assert fl.total("recovery_bytes") == out["total_recovery_bytes"]
+        assert fl.total("refresh_bytes") == out["total_refresh_bytes"]
+        eps = fl.records(kind="epoch")
+        assert len(eps) == args.epochs + 1  # read epochs + the epoch-0 announce
+        per_epoch = [r.extra["recovery_bytes"] for r in eps[1:]]
+        assert per_epoch == out["recovery_bytes"].tolist()
         print("[smoke] OK")
     return out
 

@@ -35,7 +35,7 @@ def _parse_schedule(text: str) -> tuple[int, ...]:
     return sched
 
 
-def run(args) -> dict:
+def run(args, obs=None) -> dict:
     import numpy as np
 
     from repro.core.churn import (
@@ -50,7 +50,7 @@ def run(args) -> dict:
         num_queries=args.queries, m=args.m, seed=args.seed,
     )
     sched = _parse_schedule(args.schedule)
-    out = run_node_churn(NodeChurnConfig(churn=cfg, schedule=sched))
+    out = run_node_churn(NodeChurnConfig(churn=cfg, schedule=sched), obs=obs)
 
     print(f"[node-churn] schedule={','.join(map(str, sched))} "
           f"refresh_every={cfg.refresh_every}")
@@ -97,6 +97,10 @@ def main(argv=None):
     ap.add_argument("--no-reference", dest="reference",
                     action="store_false",
                     help="skip the static-topology comparison run")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome-trace-event JSON (Perfetto) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry JSON snapshot here")
     ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
@@ -125,7 +129,25 @@ def main(argv=None):
         proc = subprocess.run(cmd, env=env)
         raise SystemExit(proc.returncode)
 
-    out = run(args)
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Observability
+
+        obs = Observability()
+
+    out = run(args, obs=obs)
+
+    if obs is not None:
+        # every membership round must have dumped the flight ring
+        rounds = len(out["reshard_events"])
+        dumped = sum(d["reason"] == "reshard" for d in obs.flight.dumps)
+        assert dumped == rounds, (dumped, rounds)
+        if args.trace_out:
+            obs.export_trace(args.trace_out)
+            print(f"[node-churn] trace -> {args.trace_out}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"[node-churn] metrics -> {args.metrics_out}")
 
     if args.smoke:
         import numpy as np

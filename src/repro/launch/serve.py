@@ -11,7 +11,6 @@ made `repro.serve` the retrieval-only serving package).
 from __future__ import annotations
 
 import argparse
-import time
 from functools import partial
 
 import jax
@@ -23,6 +22,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models import sharding as sh
 from repro.models.config import ModelConfig
+from repro.obs.trace import Tracer
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int):
@@ -104,12 +104,14 @@ def main(argv=None):
             jnp.int32,
         )
         max_len = args.prompt_len + args.gen + 8
-        t0 = time.time()
-        out = generate(
-            params, cfg, batch, steps=args.gen, max_len=max_len,
-            seed=args.seed,
-        )
-        dt = time.time() - t0
+        tracer = Tracer()
+        with tracer.span("lm/generate", cat="lm", batch=args.batch,
+                         gen=args.gen) as sp:
+            out = generate(
+                params, cfg, batch, steps=args.gen, max_len=max_len,
+                seed=args.seed,
+            )
+        dt = sp.duration_s
     toks = np.asarray(out)
     print(f"[serve] generated {toks.shape} tokens in {dt:.1f}s "
           f"({toks.size / dt:.1f} tok/s)")

@@ -13,7 +13,14 @@ Reports p50/p99 latency, queries/sec, cache hit rate, messages/query
 (Table-1 cost model — hits cost zero network), rejects, and router
 `dropped_probes`.
 
-    PYTHONPATH=src python -m repro.launch.serve_retrieval --smoke
+With `--trace-out PATH` the run records every pipeline stage span and
+per-query flight record and writes a Chrome-trace-event JSON loadable in
+Perfetto (ui.perfetto.dev); `--metrics-out PATH` writes the metrics
+registry snapshot; `--recall-probe-every N` shadow-rescores every Nth
+served miss against the exact top-m (DESIGN.md Sec. 12).
+
+    PYTHONPATH=src python -m repro.launch.serve_retrieval --smoke \
+        --trace-out /tmp/serve_trace.json
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ from repro.core import (
 )
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host, expire, insert_batch
+from repro.obs import Observability, ObsConfig
 from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
 
 
@@ -35,7 +43,7 @@ def _unit(x):
     return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
 
 
-def build_frontend(args, rng):
+def build_frontend(args, rng, obs=None):
     """Corpus + store + engine + frontend; returns (frontend, corpus, h)."""
     emb = _unit(rng.standard_normal((args.n, args.d))).astype(np.float32)
     params = LshParams(d=args.d, k=args.k, L=args.L, seed=args.seed + 1)
@@ -52,6 +60,7 @@ def build_frontend(args, rng):
             m=args.m, max_batch=args.max_batch,
             queue_capacity=args.queue_capacity, cache=not args.no_cache,
         ),
+        obs=obs,
     )
     return frontend, emb, h, store
 
@@ -88,9 +97,9 @@ def churn_tick(args, rng, emb, h, store, frontend, now: int):
     return store
 
 
-def run(args) -> dict:
+def run(args, obs=None) -> dict:
     rng = np.random.default_rng(args.seed)
-    frontend, emb, h, store = build_frontend(args, rng)
+    frontend, emb, h, store = build_frontend(args, rng, obs=obs)
     arrivals = make_workload(args, rng)
 
     # warm the jit cache so reported latencies measure serving, not tracing:
@@ -135,6 +144,12 @@ def run(args) -> dict:
     cost = frontend.backend.cost()
     print(f"[serve] closed-form messages/query (no cache) = {cost.messages:.1f}"
           f"  store generation = {frontend.backend.generation}")
+    if obs is not None:
+        frontend.stats.publish(obs.registry)
+        probe = obs.registry.value("serve_recall_probe", window="mean")
+        if probe is not None:
+            print(f"[serve] shadow recall probe (1-in-"
+                  f"{obs.config.recall_probe_every} misses) = {probe:.3f}")
     return frontend.stats.summary()
 
 
@@ -165,6 +180,13 @@ def main(argv=None):
                     help="GC horizon in write epochs (paper Sec. 4.1)")
     ap.add_argument("--no-warmup", dest="warmup", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome-trace-event JSON (Perfetto) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry JSON snapshot here")
+    ap.add_argument("--recall-probe-every", type=int, default=0,
+                    help="shadow-rescore every Nth served miss against "
+                         "the exact top-m (0 = off; needs obs enabled)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -173,8 +195,25 @@ def main(argv=None):
         args.offered, args.max_batch, args.queue_capacity = 16, 32, 128
         if args.churn_every == 0:
             args.churn_every = 8
+        if (args.trace_out or args.metrics_out) \
+                and args.recall_probe_every == 0:
+            args.recall_probe_every = 8
 
-    s = run(args)
+    obs = None
+    if args.trace_out or args.metrics_out or args.recall_probe_every:
+        obs = Observability(ObsConfig(
+            recall_probe_every=max(args.recall_probe_every, 0)))
+
+    s = run(args, obs=obs)
+
+    if obs is not None:
+        if args.trace_out:
+            obs.export_trace(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"(load in ui.perfetto.dev)")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"[serve] metrics -> {args.metrics_out}")
 
     if args.smoke:
         # CI gate: everything admitted was served, rejects/drops were
@@ -187,6 +226,25 @@ def main(argv=None):
             assert s["hit_rate"] > 0.2, s
             full = 0.5 * args.k * args.L  # Table-1 kL/2
             assert s["messages_per_query"] < full, s
+        if obs is not None:
+            # the observability gates: every pipeline stage traced, the
+            # flight ring accounts for every completed query, and the
+            # emitted Chrome trace is schema-valid JSON
+            import json
+
+            evs = obs.chrome_trace()["traceEvents"]
+            names = {e["name"] for e in evs}
+            for stage in ("serve/intake", "serve/batch", "serve/dispatch",
+                          "serve/device", "serve/merge", "serve/respond"):
+                assert stage in names, f"missing span {stage}"
+            for e in evs:
+                assert {"name", "cat", "ph", "ts", "pid", "tid"} <= set(e), e
+            assert len(obs.flight.records(kind="query")) == s["completed"]
+            assert obs.flight.total(
+                "dropped_probes", kind="dispatch") == s["dropped_probes"]
+            if args.trace_out:
+                with open(args.trace_out) as f:
+                    assert json.load(f)["traceEvents"]
         print("[smoke] OK")
     return s
 

@@ -14,7 +14,6 @@ Fault tolerance (DESIGN.md Sec. 6):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -25,6 +24,7 @@ from repro.data import tokens as data_tokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models import sharding as sh
+from repro.obs.trace import Tracer
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts
 
@@ -77,25 +77,27 @@ def main(argv=None):
                 start_step = int(meta["step"])
 
         step_fn = ts.make_train_step(cfg, ocfg, hp)
-        t0 = time.time()
-        for step in range(start_step, args.steps):
-            batch = data_tokens.make_batch(cfg, dcfg, step, args.batch, args.seq)
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            if step % args.log_every == 0 or step == args.steps - 1:
-                loss = float(metrics["xent"])
-                gn = float(metrics["grad_norm"])
-                dt = time.time() - t0
-                print(f"[step {step:5d}] xent={loss:.4f} gnorm={gn:.2f} "
-                      f"({dt:.1f}s)", flush=True)
-                if not np.isfinite(loss):
-                    raise RuntimeError(f"loss diverged at step {step}")
-            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                path = ckpt.save(
-                    args.ckpt_dir, step + 1,
-                    {"params": params, "opt": opt_state},
-                    extra={"arch": args.arch, "data_seed": args.seed},
-                )
-                print(f"[ckpt] wrote {path}", flush=True)
+        tracer = Tracer()
+        with tracer.span("train/run", cat="train", arch=args.arch) as run_sp:
+            for step in range(start_step, args.steps):
+                batch = data_tokens.make_batch(
+                    cfg, dcfg, step, args.batch, args.seq)
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    loss = float(metrics["xent"])
+                    gn = float(metrics["grad_norm"])
+                    dt = run_sp.elapsed_s
+                    print(f"[step {step:5d}] xent={loss:.4f} gnorm={gn:.2f} "
+                          f"({dt:.1f}s)", flush=True)
+                    if not np.isfinite(loss):
+                        raise RuntimeError(f"loss diverged at step {step}")
+                if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                    path = ckpt.save(
+                        args.ckpt_dir, step + 1,
+                        {"params": params, "opt": opt_state},
+                        extra={"arch": args.arch, "data_seed": args.seed},
+                    )
+                    print(f"[ckpt] wrote {path}", flush=True)
     print("[done]")
 
 

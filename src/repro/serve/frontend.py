@@ -31,9 +31,12 @@ import jax
 import numpy as np
 
 from repro.core import costmodel
+from repro.core import metrics as metrics_mod
 from repro.core import plan as plan_mod
 from repro.core.engine import LshEngine
 from repro.core.runtime import IndexRuntime
+from repro.obs import QueryRecord
+from repro.obs.trace import span_or_null
 from repro.serve.qcache import QueryCache
 from repro.serve.telemetry import ServeStats
 
@@ -126,6 +129,11 @@ class RuntimeBackend:
         self._cost: costmodel.QueryCost | None = None
         self.traces = 0
         self.sketch_traces = 0
+        # observability hooks — host-side only, never traced: the frontend
+        # installs a Tracer here when built with obs; the exact-rescoring
+        # corpus cache backs the sampled recall probe
+        self.tracer = None
+        self._exact_vecs: np.ndarray | None = None
         self._bind()
 
     def _bind(self) -> None:
@@ -282,6 +290,7 @@ class RuntimeBackend:
             self._store = store
         if corpus is not None:
             self._corpus = corpus
+            self._exact_vecs = None  # recall-probe ground truth died too
         if cache is not None:
             self._cache = cache
         if replicas is not None:
@@ -297,6 +306,7 @@ class RuntimeBackend:
             # unless the rewarmed one arrived with the swap
             if runtime.is_distributed:
                 self._corpus = None
+                self._exact_vecs = None
             if cache is None:
                 self._cache = None
             # replica state is topology-bound too: an unreplicated target
@@ -328,42 +338,63 @@ class RuntimeBackend:
         return self._cost
 
     def dispatch(self, q_pad: np.ndarray, ex_pad: np.ndarray, m: int):
+        """One batch through the jit'd step.  Returns (ids, scores,
+        stats): `stats` is the step's `StepStats` aux output — use
+        `int(stats)` for the bare dropped-probe count (the telemetry
+        does), `stats.host()` for the full accounting record."""
         import jax.numpy as jnp
 
-        if not self._rt.is_distributed:
-            payload = (
-                self._corpus if self._corpus is not None
-                else self._store.payload
-            )
-            ids, scores, dropped = self._dispatch_jit(
-                self._hp, self._store.ids, payload,
-                jnp.asarray(q_pad, jnp.float32), jnp.asarray(ex_pad), m,
-            )
-            return np.asarray(ids), np.asarray(scores), int(dropped)
+        with span_or_null(self.tracer, "serve/device"):
+            if not self._rt.is_distributed:
+                payload = (
+                    self._corpus if self._corpus is not None
+                    else self._store.payload
+                )
+                ids, scores, stats = self._dispatch_jit(
+                    self._hp, self._store.ids, payload,
+                    jnp.asarray(q_pad, jnp.float32), jnp.asarray(ex_pad), m,
+                )
+                return np.asarray(ids), np.asarray(scores), stats
 
-        if m > self.max_m:
-            raise ValueError(
-                f"m={m} exceeds the step's headroom (built with "
-                f"cfg.m={self._rt.cfg.m}; serveable m <= {self.max_m})"
-            )
-        q = jax.device_put(jnp.asarray(q_pad, jnp.float32), self._qspec)
-        args = (self._hp, self._store.ids, self._store.payload)
-        if self._cache is not None:
-            args += tuple(self._cache)
-        if self._rt.cfg.replication > 1:
-            args += (self._replicas[0], self._replicas[1],
-                     jnp.asarray(self._live, jnp.int32))
-        ids, scores, dropped = self._dispatch_jit(*args, q)
-        ids = np.asarray(ids)
-        scores = np.asarray(scores)
-        # host-side self-exclusion + slice to the serving m
-        out_i = np.full((ids.shape[0], m), -1, np.int32)
-        out_s = np.full((ids.shape[0], m), -np.inf, np.float32)
-        for i in range(ids.shape[0]):
-            keep = ids[i] != ex_pad[i]
-            out_i[i] = ids[i][keep][:m]
-            out_s[i] = scores[i][keep][:m]
-        return out_i, out_s, int(dropped)
+            if m > self.max_m:
+                raise ValueError(
+                    f"m={m} exceeds the step's headroom (built with "
+                    f"cfg.m={self._rt.cfg.m}; serveable m <= {self.max_m})"
+                )
+            q = jax.device_put(jnp.asarray(q_pad, jnp.float32), self._qspec)
+            args = (self._hp, self._store.ids, self._store.payload)
+            if self._cache is not None:
+                args += tuple(self._cache)
+            if self._rt.cfg.replication > 1:
+                args += (self._replicas[0], self._replicas[1],
+                         jnp.asarray(self._live, jnp.int32))
+            ids, scores, stats = self._dispatch_jit(*args, q)
+            ids = np.asarray(ids)
+            scores = np.asarray(scores)
+            # host-side self-exclusion + slice to the serving m
+            out_i = np.full((ids.shape[0], m), -1, np.int32)
+            out_s = np.full((ids.shape[0], m), -np.inf, np.float32)
+            for i in range(ids.shape[0]):
+                keep = ids[i] != ex_pad[i]
+                out_i[i] = ids[i][keep][:m]
+                out_s[i] = scores[i][keep][:m]
+            return out_i, out_s, stats
+
+    def exact_topm(self, q: np.ndarray, exclude: int, m: int):
+        """Exact top-m ids by full corpus scan — ground truth for the
+        sampled shadow-rescoring recall probe.  None when this backend
+        cannot rescore exactly (mesh topologies embed payloads in bucket
+        slots; sparse corpora have no dense row matrix)."""
+        if self._corpus is None or not hasattr(self._corpus, "vectors"):
+            return None
+        if self._exact_vecs is None:
+            self._exact_vecs = np.asarray(self._corpus.vectors)
+        sims = self._exact_vecs @ np.asarray(q, np.float32)
+        if 0 <= exclude < sims.size:
+            sims[exclude] = -np.inf
+        m = min(m, sims.size)
+        top = np.argpartition(-sims, m - 1)[:m]
+        return top[np.argsort(-sims[top])].astype(np.int32)
 
 
 # -----------------------------------------------------------------------------
@@ -404,6 +435,7 @@ class RetrievalFrontend:
         backend,
         config: FrontendConfig = FrontendConfig(),
         stats: ServeStats | None = None,
+        obs=None,
     ):
         if backend.max_m is not None and config.m > backend.max_m:
             raise ValueError(
@@ -412,6 +444,17 @@ class RetrievalFrontend:
         self.backend = backend
         self.cfg = config
         self.stats = stats if stats is not None else ServeStats()
+        # observability (DESIGN.md Sec. 12): `obs` is an
+        # `repro.obs.Observability` bundle or None.  Strictly host-side —
+        # the dispatch jit is identical either way (tests/test_obs.py
+        # counts retraces obs-on vs obs-off to prove it).
+        self.obs = obs
+        if obs is not None:
+            backend.tracer = obs.tracer
+        self._dispatch_seq = 0
+        self._probe_seen = 0    # served misses, for 1-in-N probe sampling
+        self._probe_sum = 0.0
+        self._probe_n = 0
         self.cache = (
             QueryCache(config.cache_capacity, config.sketch_only_cache)
             if config.cache
@@ -459,40 +502,58 @@ class RetrievalFrontend:
         return self._results.pop(ticket, None)
 
     def step(self) -> int:
-        """Serve one coalesced batch from the ring; returns #completed."""
+        """Serve one coalesced batch from the ring; returns #completed.
+
+        With obs installed, the pipeline stages emit spans
+        (intake -> batch -> dispatch -> device -> merge -> respond) and
+        every served query + every backend dispatch appends a
+        `QueryRecord` to the flight recorder — dispatch records carry the
+        step's EXACT `StepStats`, query records their batch's per-row
+        share plus the latency breakdown.
+        """
         n = min(self._size, self.cfg.max_batch)
         if n == 0:
             return 0
+        obs = self.obs
+        tr = obs.tracer if obs is not None else None
         cap = self.cfg.queue_capacity
-        idx = (self._head + np.arange(n)) % cap
-        q = self._ring_q[idx].copy()
-        ex = self._ring_ex[idx].copy()
-        tickets = self._ring_ticket[idx].copy()
-        t_sub = self._ring_t[idx].copy()
-        self._head = (self._head + n) % cap
-        self._size -= n
+        with span_or_null(tr, "serve/intake", n=n):
+            idx = (self._head + np.arange(n)) % cap
+            q = self._ring_q[idx].copy()
+            ex = self._ring_ex[idx].copy()
+            tickets = self._ring_ticket[idx].copy()
+            t_sub = self._ring_t[idx].copy()
+            self._head = (self._head + n) % cap
+            self._size -= n
 
         gen = self.backend.generation
         m = self.cfg.m
         miss_rows = list(range(n))
         keys: list[tuple | None] = [None] * n
-        if self.cache is not None:
-            # sketch once for the whole coalesced batch (pow-2 padded, so
-            # the sketch jit shares the dispatch shape grid)
-            pad = dispatch_pad(n, self.backend.min_batch)
-            q_pad = np.zeros((pad, q.shape[1]), np.float32)
-            q_pad[:n] = q
-            codes = self.backend.sketch_codes(q_pad)[:n]
-            miss_rows = []
-            for i in range(n):
-                keys[i] = self.cache.key(codes[i], int(ex[i]), q[i], m)
-                e = self.cache.get(keys[i], gen)
-                if e is None:
-                    miss_rows.append(i)
-                else:
-                    self._results[int(tickets[i])] = (e.ids, e.scores)
-                    lat = (time.perf_counter() - t_sub[i]) * 1e6
-                    self.stats.record_done(lat, hit=True)
+        with span_or_null(tr, "serve/batch"):
+            if self.cache is not None:
+                # sketch once for the whole coalesced batch (pow-2 padded,
+                # so the sketch jit shares the dispatch shape grid)
+                pad = dispatch_pad(n, self.backend.min_batch)
+                q_pad = np.zeros((pad, q.shape[1]), np.float32)
+                q_pad[:n] = q
+                codes = self.backend.sketch_codes(q_pad)[:n]
+                miss_rows = []
+                for i in range(n):
+                    keys[i] = self.cache.key(codes[i], int(ex[i]), q[i], m)
+                    e = self.cache.get(keys[i], gen)
+                    if e is None:
+                        miss_rows.append(i)
+                    else:
+                        self._results[int(tickets[i])] = (e.ids, e.scores)
+                        lat = (time.perf_counter() - t_sub[i]) * 1e6
+                        self.stats.record_done(lat, hit=True)
+                        if obs is not None:
+                            obs.flight.record(QueryRecord(
+                                qid=int(tickets[i]), kind="query",
+                                latency_us=lat, cache_hit=True,
+                                generation=gen,
+                            ))
 
         if miss_rows:
             nm = len(miss_rows)
@@ -501,16 +562,79 @@ class RetrievalFrontend:
             mex = np.full((pad,), NO_EXCLUDE, np.int32)
             mq[:nm] = q[miss_rows]
             mex[:nm] = ex[miss_rows]
-            ids, scores, dropped = self.backend.dispatch(mq, mex, m)
-            self.stats.record_batch(nm, pad - nm, dropped, self.backend.cost())
-            t_done = time.perf_counter()
-            for j, i in enumerate(miss_rows):
-                ids_i, sc_i = ids[j], scores[j]
-                self._results[int(tickets[i])] = (ids_i, sc_i)
-                if self.cache is not None:
-                    self.cache.put(keys[i], ids_i, sc_i, gen)
-                self.stats.record_done((t_done - t_sub[i]) * 1e6, hit=False)
+            with span_or_null(tr, "serve/dispatch", rows=nm, pad=pad) as dsp:
+                ids, scores, stats = self.backend.dispatch(mq, mex, m)
+            self.stats.record_batch(nm, pad - nm, stats, self.backend.cost())
+            seq, hs = self._dispatch_seq, None
+            self._dispatch_seq += 1
+            if obs is not None:
+                hs = (stats.host() if hasattr(stats, "host")
+                      else dict(dropped_probes=int(stats)))
+                obs.flight.record(QueryRecord(
+                    qid=seq, kind="dispatch", batch=seq, batch_size=pad,
+                    generation=gen,
+                    stage_us=dict(dispatch=dsp.duration_us),
+                    extra=dict(live_rows=nm, padded_rows=pad - nm), **hs,
+                ))
+            with span_or_null(tr, "serve/merge"):
+                for j, i in enumerate(miss_rows):
+                    ids_i, sc_i = ids[j], scores[j]
+                    self._results[int(tickets[i])] = (ids_i, sc_i)
+                    if self.cache is not None:
+                        self.cache.put(keys[i], ids_i, sc_i, gen)
+            with span_or_null(tr, "serve/respond"):
+                t_done = time.perf_counter()
+                if obs is not None:
+                    # per-row share of the batch's planned probes (uniform:
+                    # the planner issues the same probe count per row);
+                    # drops stay on the dispatch record — the
+                    # authoritative sum.  stage dict shared read-only.
+                    share = hs["probes_issued"] // pad
+                    fanout = hs.get("replica_fanout", 1)
+                    stage = dict(dispatch=dsp.duration_us)
+                    t_rec = obs.flight.to_us(t_done)  # one stamp per batch
+                for j, i in enumerate(miss_rows):
+                    lat = (t_done - t_sub[i]) * 1e6
+                    self.stats.record_done(lat, hit=False)
+                    if obs is not None:
+                        obs.flight.record(QueryRecord(
+                            qid=int(tickets[i]), kind="query", t_us=t_rec,
+                            latency_us=lat, cache_hit=False, generation=gen,
+                            batch=seq, batch_size=pad,
+                            probes_issued=share, replica_fanout=fanout,
+                            stage_us=stage,
+                        ))
+            if obs is not None and obs.config.recall_probe_every > 0:
+                self._recall_probe(obs, mq, mex, ids, nm, m)
         return n
+
+    def _recall_probe(self, obs, mq, mex, ids, nm, m) -> None:
+        """Sampled shadow-rescoring recall probe (DESIGN.md Sec. 12): every
+        `recall_probe_every`-th served miss is rescored EXACTLY against
+        the corpus and `recall_at_m` lands in the registry — live search
+        quality next to the live cost counters.  Silently inactive on
+        backends with no exact ground truth (mesh topologies)."""
+        every = obs.config.recall_probe_every
+        for j in range(nm):
+            self._probe_seen += 1
+            if self._probe_seen % every:
+                continue
+            exact = self.backend.exact_topm(mq[j], int(mex[j]), m)
+            if exact is None:
+                return
+            r = metrics_mod.recall_at_m(ids[j][None, :], exact[None, :])
+            self._probe_sum += r
+            self._probe_n += 1
+            obs.registry.counter(
+                "serve_recall_probes_total",
+                "queries shadow-rescored against the exact corpus",
+            ).inc()
+            g = obs.registry.gauge(
+                "serve_recall_probe",
+                "recall@m of sampled served queries vs exact top-m",
+            )
+            g.set(r, window="last")
+            g.set(self._probe_sum / self._probe_n, window="mean")
 
     def flush(self) -> None:
         while self._size:

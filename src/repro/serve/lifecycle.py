@@ -42,14 +42,16 @@ class ServeChurnConfig:
     variant: str = "cnb"
 
 
-def run_serve_churn(cfg: ServeChurnConfig) -> dict:
+def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
     """Drive the churn trajectory through the serving frontend.
 
     Write epochs: announce (insert_batch) + GC (expire) + backend.update —
     one generation bump per mutation, invalidating the cache.  Read
     epochs: the epoch's query batch is served `query_repeats` times; all
     repeats must return identical ids (cache hits are real results, never
-    stale ones), and repeat recall is measured per epoch.
+    stale ones), and repeat recall is measured per epoch.  With `obs`
+    (an `repro.obs.Observability`) the frontend traces its pipeline
+    spans and flight records per query (DESIGN.md Sec. 12).
     """
     c = cfg.churn
     params, hp = _lsh_setup(c)
@@ -69,6 +71,7 @@ def run_serve_churn(cfg: ServeChurnConfig) -> dict:
             m=c.m, max_batch=cfg.max_batch,
             queue_capacity=cfg.queue_capacity, cache=cfg.cache,
         ),
+        obs=obs,
     )
 
     recalls, generations, repeat_mismatches = [], [], 0
@@ -98,6 +101,8 @@ def run_serve_churn(cfg: ServeChurnConfig) -> dict:
                 repeat_mismatches += 1  # a cache hit diverged — must be 0
         generations.append(backend.generation)
 
+    if obs is not None:
+        frontend.stats.publish(obs.registry)
     return dict(
         recalls=np.asarray(recalls),
         final_recall=float(recalls[-1]),
@@ -111,7 +116,7 @@ def run_serve_churn(cfg: ServeChurnConfig) -> dict:
     )
 
 
-def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
+def run_serve_reshard(cfg: ServeChurnConfig, mesh=None, obs=None) -> dict:
     """Churn trajectory through the frontend with a LIVE topology swap at
     every read epoch (the serving half of elastic membership, DESIGN.md
     Sec. 9).
@@ -150,6 +155,7 @@ def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
             m=c.m, max_batch=cfg.max_batch,
             queue_capacity=cfg.queue_capacity, cache=cfg.cache,
         ),
+        obs=obs,
     )
 
     recalls, generations = [], []
@@ -177,6 +183,11 @@ def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
         rt, store, ev = reshard(rt, store, runtime=rt_new)
         total_handoff += ev.handoff_bytes
         swaps += 1
+        if obs is not None:
+            obs.flight.note_anomaly(
+                "reshard", epoch=int(epoch), old_n=int(ev.old_n),
+                new_n=int(ev.new_n), handoff_bytes=int(ev.handoff_bytes),
+            )
         frontend.update_backend(runtime=rt, store=store)
 
         for _ in range(2):  # post-swap recompute, then cache-served
@@ -185,6 +196,8 @@ def run_serve_reshard(cfg: ServeChurnConfig, mesh=None) -> dict:
                 repeat_mismatches += 1
         generations.append(backend.generation)
 
+    if obs is not None:
+        frontend.stats.publish(obs.registry)
     cache = frontend.cache
     return dict(
         recalls=np.asarray(recalls),
@@ -219,7 +232,7 @@ class ServeFailureConfig:
     cache: bool = True
 
 
-def run_serve_failure(cfg: ServeFailureConfig, mesh=None) -> dict:
+def run_serve_failure(cfg: ServeFailureConfig, mesh=None, obs=None) -> dict:
     """Churn trajectory through ONE long-lived frontend while a node dies
     and revives under it.
 
@@ -269,6 +282,7 @@ def run_serve_failure(cfg: ServeFailureConfig, mesh=None) -> dict:
             m=c.m, max_batch=cfg.max_batch,
             queue_capacity=cfg.queue_capacity, cache=cfg.cache,
         ),
+        obs=obs,
     )
 
     recalls, generations, degraded = [], [], []
@@ -308,6 +322,13 @@ def run_serve_failure(cfg: ServeFailureConfig, mesh=None) -> dict:
             recall_before_kill = metrics.recall_at_m(ids_pre, ideal)
             store, replicas = kill_node(rt, store, replicas, cfg.kill_node)
             live[cfg.kill_node] = 0
+            if obs is not None:
+                # the mid-epoch fail-stop: dump the flight ring so the
+                # pre-failure query records are preserved for post-mortem
+                obs.flight.note_anomaly(
+                    "kill_node", node=int(cfg.kill_node), epoch=int(epoch),
+                    live_nodes=int(live.sum()),
+                )
             frontend.update_backend(store=store, replicas=replicas,
                                     live=live.copy())
         ids, _ = frontend.search(q, exclude=qidx)
@@ -320,6 +341,8 @@ def run_serve_failure(cfg: ServeFailureConfig, mesh=None) -> dict:
         generations.append(backend.generation)
         degraded.append(bool((live == 0).any()))
 
+    if obs is not None:
+        frontend.stats.publish(obs.registry)
     cache = frontend.cache
     return dict(
         recalls=np.asarray(recalls),

@@ -139,6 +139,15 @@ class ServeStats:
         first column, hit-rate discounted like `messages_per_query`)."""
         return self.nodes_contacted / max(self.completed, 1)
 
+    def publish(self, registry, **labels) -> None:
+        """Mirror the summary into an `repro.obs` metrics registry — the
+        machine-readable export surface (DESIGN.md Sec. 12); `summary()`
+        stays as the in-process dict view.  Gauges, not counters: this
+        object is already the accumulator, so publishing is an idempotent
+        snapshot, safe to repeat mid-run."""
+        for key, val in self.summary().items():
+            registry.gauge(f"serve_{key}").set(float(val), **labels)
+
     def summary(self) -> dict:
         return dict(
             accepted=self.accepted,
