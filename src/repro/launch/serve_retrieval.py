@@ -1,17 +1,26 @@
-"""Online retrieval serving driver: closed-loop load generator over the
-`repro.serve` frontend (DESIGN.md Sec. 7).
+"""Online retrieval serving driver: load generation over the
+`repro.serve` frontend (DESIGN.md Sec. 7 + 13).
 
-Builds a synthetic corpus + LSH index, then drives a zipf-skewed query
+Two load modes.  The default CLOSED loop drives a zipf-skewed query
 stream through the dynamic batcher tick by tick — submitting `--offered`
 arrivals per tick and serving one coalesced batch per tick, so backlog
 (and admission rejects) build up whenever offered load exceeds service
-capacity.  Live churn can be interleaved (`--churn-every`): every T ticks
-a slice of the corpus drifts and re-announces, bumping the store
-generation and invalidating the sketch-keyed result cache.
+capacity.  `--open-loop` instead draws a Poisson arrival schedule at a
+FIXED offered rate (`--rate`, qps; 0 = auto from measured capacity),
+measures latency from each arrival's SCHEDULED time (coordinated
+omission counts against the server), and serves the same schedule twice
+on one warm runtime — synchronous (depth 1) then pipelined
+(`--pipeline` staged device batches) — reporting p50/p99 against the
+`--slo-p99-ms` target for each and verifying the served ids are
+BIT-IDENTICAL across the two paths.
+
+Live churn can be interleaved (`--churn-every`): every T ticks a slice
+of the corpus drifts and re-announces, bumping the store generation and
+invalidating the sketch-keyed result cache.
 
 Reports p50/p99 latency, queries/sec, cache hit rate, messages/query
-(Table-1 cost model — hits cost zero network), rejects, and router
-`dropped_probes`.
+(Table-1 cost model — hits cost zero network), rejects, ring-full
+pushback, and router `dropped_probes`.
 
 With `--trace-out PATH` the run records every pipeline stage span and
 per-query flight record and writes a Chrome-trace-event JSON loadable in
@@ -36,7 +45,10 @@ from repro.core import (
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host, expire, insert_batch
 from repro.obs import Observability, ObsConfig
-from repro.serve import FrontendConfig, RetrievalFrontend, RuntimeBackend
+from repro.serve import (
+    FrontendConfig, RetrievalFrontend, RuntimeBackend, poisson_arrivals,
+    run_open_loop,
+)
 
 
 def _unit(x):
@@ -59,6 +71,7 @@ def build_frontend(args, rng, obs=None):
         FrontendConfig(
             m=args.m, max_batch=args.max_batch,
             queue_capacity=args.queue_capacity, cache=not args.no_cache,
+            pipeline_depth=args.pipeline,
         ),
         obs=obs,
     )
@@ -153,6 +166,80 @@ def run(args, obs=None) -> dict:
     return frontend.stats.summary()
 
 
+def run_openloop(args, obs=None) -> dict:
+    """Open-loop mode: one Poisson/uniform arrival schedule at a fixed
+    offered rate, served TWICE on the same warm runtime — synchronous
+    (depth 1), then pipelined (`--pipeline`) — latency measured from the
+    SCHEDULE (DESIGN.md Sec. 13).  Returns per-mode results plus the
+    bit-identity verdict the smoke gate asserts on."""
+    import time
+
+    rng = np.random.default_rng(args.seed)
+    frontend, emb, h, store = build_frontend(args, rng, obs=obs)
+    backend = frontend.backend
+
+    def fresh(depth):
+        return RetrievalFrontend(
+            backend,
+            FrontendConfig(m=args.m, max_batch=args.max_batch,
+                           queue_capacity=args.queue_capacity,
+                           cache=not args.no_cache, pipeline_depth=depth),
+        )
+
+    # warm every dispatch shape the run can hit, then measure capacity
+    if args.warmup:
+        warm = fresh(1)
+        wrng = np.random.default_rng(args.seed + 99)
+        b = 1
+        while b <= args.max_batch:
+            warm.search(_unit(wrng.standard_normal(
+                (b, args.d))).astype(np.float32))
+            b *= 2
+    wq = emb[np.random.default_rng(args.seed + 7).integers(
+        0, args.n, size=args.max_batch)]
+    # cache OFF for the capacity probe: repeats must redispatch, or the
+    # "service time" would be a cache lookup
+    meter = RetrievalFrontend(
+        backend, FrontendConfig(m=args.m, max_batch=args.max_batch,
+                                queue_capacity=args.queue_capacity,
+                                cache=False))
+    meter.search(wq)  # one untimed pass (any residual compile)
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        meter.search(wq)
+    svc = (time.perf_counter() - t0) / reps
+    capacity = args.max_batch / svc
+    rate = args.rate if args.rate > 0 else 0.5 * capacity
+    print(f"[openloop] batch service {svc * 1e3:.2f} ms "
+          f"-> capacity ~{capacity:.0f} qps; offered rate {rate:.0f} qps")
+
+    rows = np.random.default_rng(args.seed + 1).integers(
+        0, args.n, size=args.queries)
+    arr = poisson_arrivals(rate, args.queries, seed=args.seed,
+                           deterministic=args.smoke)
+    out = {}
+    for name, depth in (("sync", 1), ("pipelined", max(args.pipeline, 2))):
+        res = run_open_loop(fresh(depth), emb[rows], arr,
+                            exclude=rows)
+        out[name] = res
+        verdict = "PASS" if res.slo_ok(args.slo_p99_ms) else "FAIL"
+        print(f"[openloop] {name:9s} (depth {depth}): "
+              f"p50 {res.p50_ms:7.2f} ms  p99 {res.p99_ms:7.2f} ms  "
+              f"shed {res.shed}  served {res.served_qps:.0f} qps  "
+              f"SLO p99<={args.slo_p99_ms:.0f}ms {verdict}")
+    s, p = out["sync"], out["pipelined"]
+    identical = (
+        s.completed == p.completed == args.queries
+        and set(s.ids) == set(p.ids)
+        and all(np.array_equal(s.ids[i], p.ids[i]) for i in s.ids)
+    )
+    print(f"[openloop] sync == pipelined served ids: "
+          f"{'bit-identical' if identical else 'MISMATCH'}")
+    return dict(sync=s, pipelined=p, identical=identical, rate=rate,
+                capacity=capacity)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -179,6 +266,17 @@ def main(argv=None):
     ap.add_argument("--ttl-epochs", type=int, default=4,
                     help="GC horizon in write epochs (paper Sec. 4.1)")
     ap.add_argument("--no-warmup", dest="warmup", action="store_false")
+    ap.add_argument("--pipeline", type=int, default=1,
+                    help="staged device batches (1 = synchronous; "
+                         "DESIGN.md Sec. 13)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="open-loop mode: fixed offered rate, latency "
+                         "from scheduled arrival, sync vs pipelined")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop offered rate in qps (0 = half of "
+                         "measured closed-loop capacity)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="open-loop p99 SLO target in milliseconds")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None,
                     help="write Chrome-trace-event JSON (Perfetto) here")
@@ -204,6 +302,26 @@ def main(argv=None):
         obs = Observability(ObsConfig(
             recall_probe_every=max(args.recall_probe_every, 0)))
 
+    if args.open_loop:
+        ol = run_openloop(args, obs=obs)
+        if args.smoke:
+            # CI gate for the open-loop cell: both modes served EVERY
+            # arrival (a smoke rate never sheds), the latency population
+            # is sane, the SLO verdict is well-defined at both depths,
+            # and — the pipeline's non-negotiable invariant — the two
+            # paths served bit-identical ids on the same schedule.
+            for name in ("sync", "pipelined"):
+                r = ol[name]
+                assert r.completed == args.queries and r.shed == 0, name
+                assert r.completed + r.shed == args.queries, name
+                assert np.isfinite(r.p99_ms) and r.p99_ms >= r.p50_ms > 0
+                assert r.slo_ok(args.slo_p99_ms) == (
+                    r.shed == 0 and r.p99_ms <= args.slo_p99_ms)
+                assert r.summary["completed"] == r.completed, name
+            assert ol["identical"], "pipelined ids diverged from sync"
+            print("[smoke] OK")
+        return ol
+
     s = run(args, obs=obs)
 
     if obs is not None:
@@ -216,10 +334,11 @@ def main(argv=None):
             print(f"[serve] metrics -> {args.metrics_out}")
 
     if args.smoke:
-        # CI gate: everything admitted was served, rejects/drops were
-        # counted (not negative/silent), and the repeated-query workload
-        # actually hit the cache, reducing measured messages/query.
-        assert s["completed"] + s["rejected"] == args.queries, s
+        # CI gate: everything admitted was served, rejects/ring-full/
+        # drops were counted (not negative/silent), and the repeated-
+        # query workload actually hit the cache, reducing messages/query.
+        assert s["completed"] + s["rejected"] + s["ring_full"] \
+            == args.queries, s
         assert s["dropped_probes"] == 0, s
         assert np.isfinite(s["p99_us"]) and s["p99_us"] > 0, s
         if not args.no_cache:
@@ -234,8 +353,8 @@ def main(argv=None):
 
             evs = obs.chrome_trace()["traceEvents"]
             names = {e["name"] for e in evs}
-            for stage in ("serve/intake", "serve/batch", "serve/dispatch",
-                          "serve/device", "serve/merge", "serve/respond"):
+            for stage in ("serve/intake", "serve/enqueue", "serve/stage",
+                          "serve/compute", "serve/reap", "serve/respond"):
                 assert stage in names, f"missing span {stage}"
             for e in evs:
                 assert {"name", "cat", "ph", "ts", "pid", "tid"} <= set(e), e

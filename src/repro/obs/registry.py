@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import bisect
 
+import numpy as np
+
 # default histogram buckets: microsecond-latency oriented, widening
 # geometrically; anything above the last edge lands in +Inf
 DEFAULT_BUCKETS = (
@@ -101,6 +103,32 @@ class Histogram(_Metric):
         st["counts"][bisect.bisect_left(self.buckets, float(value))] += 1
         st["sum"] += float(value)
         st["count"] += 1
+
+    def observe_many(self, values, **labels) -> None:
+        """Bulk `observe`: one vectorized pass over a batch of samples.
+        Hot-path API — the serving frontend observes queue time for
+        every ring row of every staged batch, and a Python-level
+        `observe` per row is measurable against its near-zero-overhead
+        budget (bench `serve/obs_overhead`)."""
+        vals = np.asarray(values, dtype=float)
+        if vals.size == 0:
+            return
+        k = _label_key(labels)
+        st = self._series.get(k)
+        if st is None:
+            st = self._series[k] = {
+                "counts": [0] * (len(self.buckets) + 1),
+                "sum": 0.0,
+                "count": 0,
+            }
+        # searchsorted(side='left') == bisect_left: same bucket edges
+        idx, cnt = np.unique(
+            np.searchsorted(self.buckets, vals, side="left"),
+            return_counts=True)
+        for i, c in zip(idx, cnt):
+            st["counts"][int(i)] += int(c)
+        st["sum"] += float(vals.sum())
+        st["count"] += int(vals.size)
 
     def value(self, **labels):
         """Observation count for the label set (0 when never observed)."""

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,6 +30,7 @@ from repro.core.engine import EngineConfig, LshEngine
 from repro.core.runtime import IndexRuntime, RuntimeConfig, kill_node, reshard
 from repro.core.store import expire, insert_batch, make_store
 from repro.serve.frontend import FrontendConfig, RetrievalFrontend, RuntimeBackend
+from repro.serve.writer import ChurnWriter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +42,11 @@ class ServeChurnConfig:
     queue_capacity: int = 512
     cache: bool = True
     variant: str = "cnb"
+    pipeline_depth: int = 1    # staged device batches (DESIGN.md Sec. 13);
+    #                            the trajectory is bit-identical at any depth
+    use_writer: bool = False   # route write epochs through the background
+    #                            ChurnWriter (prepare/install split) instead
+    #                            of mutating the backend on the serving path
 
 
 def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
@@ -52,6 +59,16 @@ def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
     stale ones), and repeat recall is measured per epoch.  With `obs`
     (an `repro.obs.Observability`) the frontend traces its pipeline
     spans and flight records per query (DESIGN.md Sec. 12).
+
+    `cfg.use_writer` routes each write epoch through the `ChurnWriter`
+    prepare/install split (DESIGN.md Sec. 13): the epoch's announce +
+    expire build the new store inside the writer's prep function and the
+    prepared update installs through `apply_update` at the next stage
+    boundary — `drain()` is the per-epoch barrier, so the trajectory
+    (and every recall number) stays bit-identical to the direct path.
+    `cfg.pipeline_depth` deepens the device dispatch queue; depth changes
+    batch OVERLAP, never batch composition, so the trajectory is
+    bit-identical there too (tests/test_pipeline.py).
     """
     c = cfg.churn
     params, hp = _lsh_setup(c)
@@ -70,22 +87,46 @@ def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
         FrontendConfig(
             m=c.m, max_batch=cfg.max_batch,
             queue_capacity=cfg.queue_capacity, cache=cfg.cache,
+            pipeline_depth=cfg.pipeline_depth,
         ),
         obs=obs,
     )
+    writer = ChurnWriter(frontend) if cfg.use_writer else None
+
+    def prep_write(epoch, vecs):
+        """One write epoch's heavy half: sketch + insert + expire.  Runs
+        on the writer thread when `use_writer`; returns the update kwargs
+        the install half applies at a stage boundary.  Mutates the
+        closed-over `store` chain so consecutive epochs compose (the
+        writer runs preps FIFO on one thread)."""
+        nonlocal store
+        codes = hashing.sketch_codes(jnp.asarray(vecs), hp)
+        # `insert_batch`/`expire` DONATE their input store, and once an
+        # epoch has installed, the chained `store` IS the live serving
+        # one — donating it would invalidate buffers an overlapped
+        # dispatch still reads (the writer runs while serving continues).
+        # Prep therefore always chains from a snapshot copy.
+        store = jax.tree.map(jnp.copy, store)
+        store = insert_batch(
+            store, jnp.arange(c.num_users, dtype=jnp.int32), codes,
+            jnp.int32(epoch),
+        )
+        if epoch > 0:
+            store = expire(store, jnp.int32(epoch), ttl=c.ttl_epochs)
+        return dict(store=store, corpus=DenseCorpus(jnp.asarray(vecs)))
 
     recalls, generations, repeat_mismatches = [], [], 0
     for epoch, vecs, do_refresh, qidx, ideal in _trajectory(c):
         if do_refresh:  # -- write epoch -----------------------------------
             announced = vecs.copy()
-            codes = hashing.sketch_codes(jnp.asarray(announced), hp)
-            store = insert_batch(
-                store, jnp.arange(c.num_users, dtype=jnp.int32), codes,
-                jnp.int32(epoch),
-            )
-            if epoch > 0:
-                store = expire(store, jnp.int32(epoch), ttl=c.ttl_epochs)
-            backend.update(store, DenseCorpus(jnp.asarray(announced)))
+            if writer is not None:
+                ep = int(epoch)
+                writer.submit(lambda v=announced, e=ep: prep_write(e, v))
+                # per-epoch barrier: prepared AND installed before the
+                # epoch's reads, so the trajectory matches the reference
+                writer.drain()
+            else:
+                backend.update(**prep_write(epoch, announced))
         if epoch == 0:
             continue
 
@@ -101,6 +142,8 @@ def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
                 repeat_mismatches += 1  # a cache hit diverged — must be 0
         generations.append(backend.generation)
 
+    if writer is not None:
+        writer.close()
     if obs is not None:
         frontend.stats.publish(obs.registry)
     return dict(
@@ -110,6 +153,7 @@ def run_serve_churn(cfg: ServeChurnConfig, obs=None) -> dict:
         generations=np.asarray(generations),
         store_generation=int(store.generation),
         repeat_mismatches=repeat_mismatches,
+        writer_installed=0 if writer is None else writer.installed,
         stats=frontend.stats,
         summary=frontend.stats.summary(),
         refresh_every=c.refresh_every,

@@ -3,11 +3,12 @@
 One mutable `ServeStats` object rides along with a `RetrievalFrontend` and
 aggregates everything the per-step objects only report individually:
 
-  * request accounting — accepted / rejected (admission control) /
-    completed, cache hits vs misses, dispatched batch sizes and padding
-    overhead;
+  * request accounting — accepted / rejected (admission shed) /
+    ring_full (transient backpressure, retryable) / completed, cache
+    hits vs misses, dispatched batch sizes and padding overhead;
   * latency — per-request microseconds from submit to result, with
-    p50/p99 read out of the recorded population;
+    p50/p99 read out of the recorded population, plus time-in-queue
+    (submit to device stage) for the pipelined frontend;
   * network cost — the Table-1 `QueryCost` closed form is charged per
     *dispatched* (cache-miss) query and averaged over ALL completed
     queries, so a cache hit genuinely shows up as saved messages;
@@ -32,6 +33,8 @@ class ServeStats:
 
     accepted: int = 0        # requests admitted into the ring
     rejected: int = 0        # admission-control rejects (counted, not silent)
+    ring_full: int = 0       # transient full-ring pushback (retryable —
+    #                          distinct from `rejected`, which is a shed)
     completed: int = 0       # results delivered (hit or miss)
     cache_hits: int = 0
     cache_misses: int = 0
@@ -48,6 +51,9 @@ class ServeStats:
     # O(window), not O(total requests served)
     latency_window: int = 65536
     _lat: np.ndarray | None = None
+    # time-in-queue samples (submit -> device stage), same ring discipline
+    staged: int = 0
+    _queue: np.ndarray | None = None
     _t_first: float | None = None
     _t_last: float | None = None
 
@@ -61,6 +67,23 @@ class ServeStats:
             self.accepted += 1
         else:
             self.rejected += 1
+
+    def record_ring_full(self) -> None:
+        """One transient full-ring pushback — the RETRYABLE submit outcome
+        (the caller may step/retry), kept apart from `rejected` so the
+        two failure modes never collapse into one count again."""
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        self.ring_full += 1
+
+    def record_queue_time(self, queue_us: float) -> None:
+        """Time one request spent in the ring before its batch was staged
+        onto the device queue."""
+        if self._queue is None:
+            self._queue = np.empty((self.latency_window,), np.float64)
+        self._queue[self.staged % self.latency_window] = queue_us
+        self.staged += 1
 
     def record_done(self, latency_us: float, *, hit: bool) -> None:
         if hit:
@@ -110,6 +133,16 @@ class ServeStats:
             return 0.0
         return float(np.percentile(lat, p))
 
+    def queue_percentile(self, p: float) -> float:
+        """Time-in-queue percentile in microseconds (same no-nan
+        contract as `percentile`)."""
+        if self._queue is None:
+            return 0.0
+        q = self._queue[: min(self.staged, self.latency_window)]
+        if q.size == 0:
+            return 0.0
+        return float(np.percentile(q, p))
+
     @property
     def hit_rate(self) -> float:
         return self.cache_hits / max(self.completed, 1)
@@ -152,6 +185,7 @@ class ServeStats:
         return dict(
             accepted=self.accepted,
             rejected=self.rejected,
+            ring_full=self.ring_full,
             completed=self.completed,
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
@@ -168,6 +202,8 @@ class ServeStats:
             ),
             p50_us=self.percentile(50),
             p99_us=self.percentile(99),
+            p50_queue_us=self.queue_percentile(50),
+            p99_queue_us=self.queue_percentile(99),
             qps=self.qps,
         )
 
@@ -175,7 +211,7 @@ class ServeStats:
         s = self.summary()
         return (
             f"[serve] completed={s['completed']} rejected={s['rejected']} "
-            f"qps={s['qps']:.0f}\n"
+            f"ring_full={s['ring_full']} qps={s['qps']:.0f}\n"
             f"[serve] latency p50={s['p50_us']:.0f}us "
             f"p99={s['p99_us']:.0f}us  "
             f"batches={s['batches']} (mean size {s['mean_batch']:.1f}, "

@@ -1,0 +1,149 @@
+"""Background churn writer: prepare write-epoch state off the serving
+thread, install it at stage boundaries (DESIGN.md Sec. 13).
+
+A write epoch has two halves with very different costs.  PREPARATION —
+sketching re-announced vectors, building the inserted/expired store,
+re-replicating — is heavy host+device work that has no business on the
+serving thread.  INSTALLATION — swapping the backend's store/corpus
+references and bumping the generation — is a few pointer writes, but it
+mutates state the step machine reads, so it must happen on the serving
+thread at a well-defined point.
+
+`ChurnWriter` splits them exactly there: `submit(prep_fn)` hands the
+heavy half to a daemon worker thread (`inline=True` runs it on the spot —
+the deterministic mode the equivalence tests use); the worker queues the
+prepared update kwargs; and the frontend drains that queue through
+`install` at every STAGE BOUNDARY — immediately before a new batch is
+dispatched, never while one is being assembled.  In-flight batches are
+not drained first: they hold references to the store pytree they were
+dispatched with, complete as if serialized before the update, and their
+cached results die with the generation bump (`RetrievalFrontend.
+apply_update`).  Prepared updates therefore interleave BETWEEN
+dispatches at whatever rate serving allows, and the never-serve-stale
+cache rules hold throughout.
+
+Topology swaps (runtime=) are refused — those rebind the dispatch jit
+and must drain through `update_backend` on the serving thread.
+
+DONATION CONTRACT: `core.store.insert_batch` and `expire` donate their
+input store's buffers to XLA.  A prep function must never feed the
+INSTALLED store into them — serving dispatches overlapping the prep
+would read deleted buffers.  Chain from a snapshot instead
+(`jax.tree.map(jnp.copy, store)` — the copy is a few hundred
+microseconds at the shapes here) or build the new store from scratch.
+Preps should also keep each device computation small (chunk bulk
+inserts): a single CPU/GPU device executes its queue FIFO, so one
+monolithic multi-ms prep op would stall every serving dispatch enqueued
+behind it just as badly as an inline stall.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+
+
+class ChurnWriter:
+    """Background writer for one `RetrievalFrontend`.
+
+    prep_fn: () -> dict of `RuntimeBackend.update` kwargs.  Jobs run
+    FIFO on ONE worker thread, so a prep that chains on the previous
+    epoch's store sees it completed.  `prepared`/`installed` count the
+    two halves; `drain()` blocks until every submitted job is prepared
+    AND installed (the end-of-run / deterministic-test barrier).
+    """
+
+    def __init__(self, frontend, *, inline: bool = False):
+        self._frontend = frontend
+        self._inline = inline
+        self._ready: deque = deque()  # prepared kwargs, install order
+        self._submitted = 0
+        self.prepared = 0
+        self.installed = 0
+        self._error: BaseException | None = None
+        if inline:
+            self._jobs = None
+            self._thread = None
+        else:
+            self._jobs: queue.Queue = queue.Queue()
+            self._thread = threading.Thread(
+                target=self._worker, name="serve-churn-writer", daemon=True
+            )
+            self._thread.start()
+        frontend.writer = self
+
+    def _worker(self) -> None:
+        while True:
+            fn = self._jobs.get()
+            if fn is None:
+                return
+            try:
+                self._ready.append(fn())
+                self.prepared += 1
+            except BaseException as e:  # surfaced on the serving thread
+                self._error = e
+                return
+
+    def submit(self, prep_fn) -> None:
+        """Queue one write epoch for preparation (non-blocking unless
+        `inline`)."""
+        if self._error is not None:
+            raise RuntimeError("churn writer died") from self._error
+        self._submitted += 1
+        if self._inline:
+            self._ready.append(prep_fn())
+            self.prepared += 1
+        else:
+            self._jobs.put(prep_fn)
+
+    def install(self, frontend=None) -> int:
+        """Install every prepared update — called by the frontend at
+        stage boundaries, on the serving thread.  Returns #installed."""
+        if self._error is not None:
+            raise RuntimeError("churn writer died") from self._error
+        fe = self._frontend if frontend is None else frontend
+        n = 0
+        while True:
+            try:
+                kw = self._ready.popleft()
+            except IndexError:
+                break
+            fe.apply_update(**kw)
+            self.installed += 1
+            n += 1
+        return n
+
+    def drain(self, timeout_s: float = 30.0) -> None:
+        """Block until every submitted epoch is prepared, then install
+        the lot.  The end-of-run barrier (and the whole story in
+        `inline` mode, where nothing was ever pending)."""
+        deadline = time.perf_counter() + timeout_s
+        while self.prepared < self._submitted:
+            if self._error is not None:
+                raise RuntimeError("churn writer died") from self._error
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"churn writer: {self._submitted - self.prepared} "
+                    f"epoch(s) still preparing after {timeout_s}s"
+                )
+            time.sleep(0.0005)
+        self.install()
+
+    def close(self) -> None:
+        """Stop the worker (prepared-but-uninstalled updates are
+        dropped); detaches from the frontend."""
+        if self._thread is not None:
+            self._jobs.put(None)
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if self._frontend.writer is self:
+            self._frontend.writer = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -104,6 +104,20 @@ def test_histogram_counts_and_quantile():
     assert h.quantile(0.5, stage="other") == 0.0
 
 
+def test_histogram_observe_many_matches_observe():
+    reg = Registry()
+    one = reg.histogram("a", buckets=(10.0, 100.0, 1000.0))
+    many = reg.histogram("b", buckets=(10.0, 100.0, 1000.0))
+    vals = [5.0, 10.0, 99.0, 100.0, 5000.0, 0.0]  # edges land identically
+    for v in vals:
+        one.observe(v, stage="s")
+    many.observe_many(vals, stage="s")
+    assert one._series == many._series
+    many.observe_many([], stage="s")  # no-op, no series mutation
+    assert one._series == many._series
+    assert many.value(stage="s") == len(vals)
+
+
 def test_snapshot_schema_and_prometheus_text():
     reg = Registry()
     reg.counter("c_total", "help text").inc(4, node="0")
@@ -344,8 +358,8 @@ def test_frontend_obs_records_agree_with_stats():
         assert r.batch_size == d.batch_size
         assert r.probes_issued == d.probes_issued // d.batch_size
     span_names = {e[1] for e in obs.tracer.events()}
-    assert {"serve/intake", "serve/batch", "serve/dispatch", "serve/device",
-            "serve/merge", "serve/respond"} <= span_names
+    assert {"serve/intake", "serve/enqueue", "serve/stage", "serve/compute",
+            "serve/reap", "serve/respond"} <= span_names
 
 
 def test_cache_hits_become_hit_records():

@@ -1,0 +1,365 @@
+"""Pipelined serving (DESIGN.md Sec. 13): depth-K dispatch queue,
+out-of-order reap, background churn writer, open-loop load.
+
+The load-bearing invariant: pipelining changes WHEN work happens, never
+WHAT is computed.  Batch composition is a function of the submit/step
+call schedule alone (FIFO intake of min(pending, max_batch) rows at
+every stage point), per-row results are independent of batch
+composition, and in-flight batches hold the store pytree they were
+dispatched with — so served ids are bit-identical across pipeline
+depths under any deterministic schedule, with or without the cache,
+with churn updates interleaved mid-flight.  These tests pin that down,
+plus the writer-vs-reader generation contract and the open-loop
+generator's accounting.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DenseCorpus, EngineConfig, LshEngine, LshParams, make_hyperplanes,
+)
+from repro.core.churn import ChurnConfig, run_churn
+from repro.core.hashing import sketch_codes_batched
+from repro.core.store import build_store_host, insert_batch
+from repro.serve import (
+    ChurnWriter, FrontendConfig, RetrievalFrontend, RuntimeBackend,
+    ServeChurnConfig, SubmitReject, poisson_arrivals, run_open_loop,
+    run_serve_churn,
+)
+
+K, L, D, M = 5, 3, 16, 8
+
+
+def _make_engine(n=400, seed=0, capacity=32):
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    params = LshParams(d=D, k=K, L=L, seed=seed + 1)
+    h = make_hyperplanes(params)
+    codes = sketch_codes_batched(jnp.asarray(emb), h)
+    store = build_store_host(codes, params.num_buckets, capacity=capacity)
+    engine = LshEngine(params, h, store, DenseCorpus(jnp.asarray(emb)), None,
+                       EngineConfig(variant="cnb"))
+    return emb, engine, h
+
+
+def _new_store_update(emb, h, seed, epoch):
+    """One churn write epoch's update kwargs: fresh vectors, rebuilt
+    store — applied via `apply_update` mid-schedule."""
+    rng = np.random.default_rng(seed)
+    vecs = (emb + 0.05 * rng.standard_normal(emb.shape)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    codes = sketch_codes_batched(jnp.asarray(vecs), h)
+    store = build_store_host(codes, 1 << K, capacity=32)
+    store = insert_batch(
+        store, jnp.arange(0, dtype=jnp.int32),
+        jnp.zeros((0, L), jnp.uint32), jnp.int32(epoch),
+    )  # no-op insert: bumps generation past any previous store's
+    return dict(store=store, corpus=DenseCorpus(jnp.asarray(vecs))), vecs
+
+
+def _drive_schedule(fe, emb, h, *, churn):
+    """One fixed deterministic schedule: submit bursts of varied sizes,
+    interleaved step() calls, optional mid-flight churn updates — the
+    SAME call sequence regardless of the frontend's pipeline depth.
+    Returns ids keyed by submission order."""
+    tickets = []
+    rng = np.random.default_rng(7)
+    rows = rng.integers(0, emb.shape[0], size=60)
+    rows[45:] = rows[:15]   # the last burst repeats served rows (hits)
+    qsrc = emb
+
+    def sub(a, b):
+        for r in rows[a:b]:
+            t = fe.submit(qsrc[r], int(r))
+            assert not isinstance(t, SubmitReject)
+            tickets.append(t)
+
+    sub(0, 5)
+    fe.step()
+    sub(5, 20)          # includes repeats of earlier rows (cache fodder)
+    fe.step()
+    fe.step()
+    if churn:
+        kw, qsrc = _new_store_update(emb, h, seed=11, epoch=2)
+        fe.apply_update(**kw)
+    sub(20, 41)
+    fe.step()
+    if churn:
+        kw, qsrc = _new_store_update(emb, h, seed=12, epoch=3)
+        fe.apply_update(**kw)
+    sub(41, 45)
+    fe.flush()          # part of the schedule: rows 0..44 all reaped here
+    sub(45, 60)         # repeats of rows 0..14 — cache hits at ANY depth
+    fe.flush()
+    return np.stack([fe.poll(t)[0] for t in tickets])
+
+
+@pytest.mark.parametrize("cache", [False, True])
+@pytest.mark.parametrize("churn", [False, True])
+def test_pipelined_ids_bit_identical_to_sync(cache, churn):
+    """THE equivalence invariant: under one deterministic schedule the
+    pipelined frontend serves ids bit-identical to the synchronous
+    (depth-1) path — cache on or off, churn updates installed mid-flight
+    or not.  (With churn the schedule queries the post-update vectors,
+    so every row is a fresh exact-mode key: hit/miss timing cannot
+    diverge between depths across a generation bump.)"""
+    emb, engine, h = _make_engine()
+    ref = None
+    for depth in (1, 3):
+        fe = RetrievalFrontend(
+            RuntimeBackend(engine),
+            FrontendConfig(m=M, max_batch=8, queue_capacity=256,
+                           cache=cache, pipeline_depth=depth),
+        )
+        ids = _drive_schedule(fe, emb, h, churn=churn)
+        if cache and not churn:
+            assert fe.stats.cache_hits > 0  # repeats really hit
+        if ref is None:
+            ref = ids
+        else:
+            np.testing.assert_array_equal(ids, ref)
+
+
+def test_deep_pipeline_really_overlaps():
+    """Sanity on the machine itself: with depth 3 and pending rows, step
+    stages WITHOUT reaping until the pipeline fills, so multiple batches
+    are genuinely in flight at once."""
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=64, cache=False,
+                       pipeline_depth=3),
+    )
+    for i in range(12):
+        fe.submit(emb[i])
+    fe.step()
+    fe.step()
+    assert fe.inflight == 2 and fe.inflight_rows == 8
+    fe.step()   # stages the 3rd AND block-reaps the oldest (pipeline full)
+    assert fe.inflight == 2
+    fe.flush()
+    assert fe.inflight == 0 and fe.stats.completed == 12
+
+
+def test_out_of_order_reap_by_ticket():
+    """`wait(ticket)` reaps exactly the batch carrying the ticket; a
+    batch dispatched EARLIER stays on the device queue, and its results
+    stay pending until their own reap."""
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=64, cache=False,
+                       pipeline_depth=3),
+    )
+    ta = [fe.submit(emb[i]) for i in range(4)]
+    fe.step()                       # stage batch A
+    tb = [fe.submit(emb[i]) for i in range(4, 8)]
+    fe.step()                       # stage batch B
+    assert fe.inflight == 2
+    got = fe.wait(tb[2])            # newest batch first
+    assert got[0].shape == (M,)
+    assert fe.inflight == 1         # batch A still in flight
+    # B's wait reaped ONLY B: A's results are not scattered yet
+    assert all(t not in fe._results for t in ta)
+    assert all(fe.poll(t) is not None for t in tb if t != tb[2])
+    assert all(fe.wait(t) is not None for t in ta)
+    assert fe.inflight == 0
+    # unknown tickets raise once nothing is pending
+    with pytest.raises(KeyError):
+        fe.wait(10_000)
+
+
+def test_writer_generation_vs_reader():
+    """Writer-vs-reader contract: a result computed by a batch that was
+    in flight when a churn update installed is cached at its STAGE-TIME
+    generation — after the install, lookups evict it as stale and
+    recompute against the new store.  Nothing pre-update is ever served
+    post-update."""
+    emb, engine, h = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=64, cache=True,
+                       pipeline_depth=2),
+    )
+    q = emb[:4]
+    for r in q:
+        fe.submit(r)
+    fe.step()                               # batch in flight at gen g0
+    assert fe.inflight == 1
+    kw, _ = _new_store_update(emb, h, seed=21, epoch=2)
+    fe.apply_update(**kw)                   # installs mid-flight: gen g1
+    g1 = fe.backend.generation
+    fe.flush()                              # reap: cache fill at g0 < g1
+    evict0 = fe.cache.stale_evictions
+    ids2, _ = fe.search(q)                  # post-update serving
+    assert fe.cache.stale_evictions == evict0 + 4  # born-stale entries died
+    assert fe.stats.cache_hits == 0
+    # and the recompute really used the new store: it matches a fresh
+    # synchronous frontend over the same updated backend state
+    fe2 = RetrievalFrontend(
+        fe.backend, FrontendConfig(m=M, max_batch=4, queue_capacity=64,
+                                   cache=False),
+    )
+    np.testing.assert_array_equal(ids2, fe2.search(q)[0])
+
+
+@pytest.mark.parametrize("inline", [True, False])
+def test_churn_writer_prepare_install_split(inline):
+    """`ChurnWriter`: prep runs off the serving path (worker thread, or
+    inline for determinism), the prepared update installs at the next
+    stage boundary, and `drain` is a full barrier."""
+    emb, engine, h = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=64, cache=True,
+                       pipeline_depth=2),
+    )
+    with ChurnWriter(fe, inline=inline) as w:
+        assert fe.writer is w
+        g0 = fe.backend.generation
+        kw, vecs = _new_store_update(emb, h, seed=31, epoch=2)
+        w.submit(lambda: kw)
+        if inline:
+            assert w.prepared == 1 and w.installed == 0
+            assert fe.backend.generation == g0  # prepared != installed
+        # the next stage boundary installs it before dispatching
+        for r in vecs[:4]:
+            fe.submit(r)
+        if not inline:
+            w.drain()                        # thread barrier, then install
+        else:
+            fe.step()                        # stage boundary installs
+        assert w.installed == 1
+        assert fe.backend.generation > g0
+        fe.flush()
+        # served against the NEW store: match a clean frontend on it
+        ids, _ = fe.search(vecs[:4])
+        fe_ref = RetrievalFrontend(
+            fe.backend, FrontendConfig(m=M, max_batch=4,
+                                       queue_capacity=64, cache=False),
+        )
+        np.testing.assert_array_equal(ids, fe_ref.search(vecs[:4])[0])
+    assert fe.writer is None                 # close() detached
+
+
+def test_writer_refuses_topology_swaps():
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(RuntimeBackend(engine), FrontendConfig(m=M))
+    with ChurnWriter(fe, inline=True) as w:
+        w.submit(lambda: dict(runtime=object()))
+        with pytest.raises(ValueError, match="update_backend"):
+            w.install()
+
+
+def test_serve_churn_writer_and_depth_track_reference():
+    """The lifecycle driver through the writer path at depth 2 still
+    tracks the run_churn reference trajectory bit-exactly."""
+    churn = ChurnConfig(
+        num_users=400, dim=D, k=K, L=L, capacity=32, epochs=4,
+        num_queries=32, m=M, refresh_every=2, ttl_epochs=3, seed=5,
+    )
+    ref = run_churn(churn)
+    out = run_serve_churn(ServeChurnConfig(
+        churn=churn, query_repeats=2, max_batch=16, queue_capacity=64,
+        pipeline_depth=2, use_writer=True,
+    ))
+    np.testing.assert_allclose(out["recalls"], ref["recalls"])
+    assert out["repeat_mismatches"] == 0
+    assert out["writer_installed"] >= 2      # every write epoch installed
+    assert out["summary"]["hit_rate"] > 0.3
+
+
+def test_zero_retrace_with_pipeline_and_obs():
+    """The pow-2 shape budget survives pipelining, and obs adds ZERO
+    retraces at depth > 1 (instrumentation is host-side only)."""
+    from repro.obs import Observability
+
+    emb, engine, _ = _make_engine()
+    traces = {}
+    for tag, obs in (("off", None), ("on", Observability())):
+        backend = RuntimeBackend(engine)
+        fe = RetrievalFrontend(
+            backend,
+            FrontendConfig(m=M, max_batch=16, queue_capacity=256,
+                           cache=True, pipeline_depth=3),
+            obs=obs,
+        )
+        rng = np.random.default_rng(3)
+        for n in [1, 2, 3, 5, 7, 11, 13, 17, 23, 31, 43, 16, 6]:
+            rows = rng.integers(0, emb.shape[0], size=n)
+            fe.search(emb[rows])
+        assert backend.traces <= 7
+        traces[tag] = backend.traces
+    assert traces["on"] == traces["off"]
+
+
+def test_queue_depth_and_time_in_queue_metrics():
+    """The pipeline's obs surface: `serve_queue_depth` gauge tracks the
+    ring, `serve_time_in_queue_us` histogram sees one observation per
+    staged row, and the stats summary carries queue percentiles."""
+    from repro.obs import Observability
+
+    emb, engine, _ = _make_engine()
+    obs = Observability()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=64, cache=False,
+                       pipeline_depth=2),
+        obs=obs,
+    )
+    for i in range(6):
+        fe.submit(emb[i])
+    assert obs.registry.value("serve_queue_depth") == 6
+    fe.step()
+    assert obs.registry.value("serve_queue_depth") == 2
+    fe.flush()
+    assert obs.registry.value("serve_queue_depth") == 0
+    assert obs.registry.value("serve_time_in_queue_us") == 6  # obs count
+    s = fe.stats.summary()
+    assert fe.stats.staged == 6
+    assert s["p99_queue_us"] >= s["p50_queue_us"] >= 0.0
+
+
+def test_poisson_arrivals_shape():
+    arr = poisson_arrivals(1000.0, 500, seed=3)
+    assert arr.shape == (500,) and np.all(np.diff(arr) > 0)
+    assert 0.3 < arr[-1] < 1.2   # ~0.5 s of offered load at 1k qps
+    det = poisson_arrivals(100.0, 10, deterministic=True)
+    np.testing.assert_allclose(np.diff(det), 0.01)
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 10)
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_open_loop_accounting_and_identity(depth):
+    """`run_open_loop` serves every arrival (no shed at a feasible
+    rate), measures latency from the SCHEDULE, and the served ids are
+    bit-identical to a direct synchronous search of the same rows."""
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=8, queue_capacity=256, cache=False,
+                       pipeline_depth=depth),
+    )
+    n = 64
+    rows = np.random.default_rng(5).integers(0, emb.shape[0], size=n)
+    arr = poisson_arrivals(2000.0, n, deterministic=True)
+    res = run_open_loop(fe, emb[rows], arr)
+    assert res.completed == n and res.shed == 0
+    assert set(res.ids) == set(range(n))
+    assert res.latencies_ms.shape == (n,)
+    assert res.p99_ms >= res.p50_ms > 0
+    assert res.slo_ok(p99_slo_ms=1e9) and not res.slo_ok(p99_slo_ms=0.0)
+    assert res.summary["completed"] == n
+    ref = RetrievalFrontend(
+        fe.backend, FrontendConfig(m=M, max_batch=8, queue_capacity=256,
+                                   cache=False),
+    )
+    ref_ids, _ = ref.search(emb[rows])
+    got = np.stack([res.ids[i] for i in range(n)])
+    np.testing.assert_array_equal(got, ref_ids)

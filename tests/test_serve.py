@@ -29,8 +29,9 @@ from repro.core.churn import ChurnConfig, run_churn
 from repro.core.hashing import sketch_codes_batched
 from repro.core.store import build_store_host, expire, insert_batch, make_store
 from repro.serve import (
-    FrontendConfig, QueryCache, RetrievalFrontend, RuntimeBackend, ServeStats,
-    ServeChurnConfig, dispatch_pad, pow2_pad, run_serve_churn,
+    ADMIT_REJECT, RING_FULL, FrontendConfig, QueryCache, RetrievalFrontend,
+    RuntimeBackend, ServeStats, ServeChurnConfig, SubmitReject, dispatch_pad,
+    pow2_pad, run_serve_churn,
 )
 
 K, L, D, M = 5, 3, 16, 8
@@ -138,22 +139,77 @@ def test_pow2_padding_bounds_trace_count():
 # -----------------------------------------------------------------------------
 
 
-def test_admission_control_rejects_are_counted():
+def test_ring_full_pushback_is_retryable():
+    """A full ring pushes back with the RETRYABLE `RING_FULL` sentinel —
+    counted in `stats.ring_full`, NOT in `rejected` (an admission shed):
+    the two failure modes used to collapse into one None + reject count.
+    A retry after one `step` (which drains a batch) must succeed."""
     emb, engine, _ = _make_engine()
     fe = RetrievalFrontend(
         RuntimeBackend(engine),
         FrontendConfig(m=M, max_batch=4, queue_capacity=8, cache=False),
     )
     tickets = [fe.submit(emb[i]) for i in range(12)]
-    assert sum(t is not None for t in tickets) == 8
-    assert tickets[8:] == [None] * 4
-    assert fe.stats.rejected == 4 and fe.stats.accepted == 8
+    ok = [t for t in tickets if not isinstance(t, SubmitReject)]
+    assert len(ok) == 8
+    assert all(t is RING_FULL and t.retryable for t in tickets[8:])
+    assert not any(tickets[8:])  # falsy, so `if not ticket` still works
+    assert fe.stats.ring_full == 4
+    assert fe.stats.rejected == 0 and fe.stats.accepted == 8
+    # transient: one step drains max_batch=4 rows, the retry is admitted
+    fe.step()
+    t = fe.submit(emb[8])
+    assert not isinstance(t, SubmitReject)
     fe.flush()
-    assert fe.stats.completed == 8
-    got = [fe.poll(t) for t in tickets[:8]]
+    assert fe.stats.completed == 9
+    got = [fe.poll(k) for k in ok + [t]]
     assert all(g is not None for g in got)
-    # rejected tickets never produce results
-    assert fe.poll(None) is None
+
+
+def test_admission_limit_sheds_with_admit_reject():
+    """`admit_limit` counts ring + in-flight rows; beyond it `submit`
+    sheds with the NON-retryable `ADMIT_REJECT` sentinel, counted in
+    `stats.rejected` (kept apart from ring_full pushback)."""
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=16, cache=False,
+                       admit_limit=6),
+    )
+    tickets = [fe.submit(emb[i]) for i in range(9)]
+    ok = [t for t in tickets if not isinstance(t, SubmitReject)]
+    assert len(ok) == 6
+    assert all(t is ADMIT_REJECT and not t.retryable for t in tickets[6:])
+    assert fe.stats.rejected == 3 and fe.stats.ring_full == 0
+    fe.flush()
+    assert fe.stats.completed == 6
+    assert all(fe.poll(t) is not None for t in ok)
+
+
+def test_cache_hit_bypasses_full_ring():
+    """Intake-time cache lookup: a hit during a FULL ring still completes
+    immediately — it never occupies a ring or dispatch-queue slot, so
+    queued misses cannot backpressure hits (no priority inversion)."""
+    emb, engine, _ = _make_engine()
+    fe = RetrievalFrontend(
+        RuntimeBackend(engine),
+        FrontendConfig(m=M, max_batch=4, queue_capacity=4, cache=True),
+    )
+    # prime the cache with one served query
+    ids0, sc0 = fe.search(emb[:1])
+    # fill the ring to capacity with distinct misses
+    fillers = [fe.submit(emb[10 + i]) for i in range(4)]
+    assert all(not isinstance(t, SubmitReject) for t in fillers)
+    assert isinstance(fe.submit(emb[30]), SubmitReject)  # ring really full
+    # the primed query again: full ring, but it must be served NOW
+    t_hit = fe.submit(emb[0])
+    assert not isinstance(t_hit, SubmitReject)
+    got = fe.poll(t_hit)
+    assert got is not None
+    np.testing.assert_array_equal(got[0], ids0[0])
+    assert fe.stats.cache_hits == 1
+    assert fe.pending == 4  # the queued misses are all still waiting
+    fe.flush()
 
 
 # -----------------------------------------------------------------------------
