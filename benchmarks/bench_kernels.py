@@ -159,6 +159,88 @@ def _fused_rows(smoke=False):
     return out
 
 
+def _routed_rows(smoke=False):
+    """Routed mesh-path rows (PR 10): the (1, 1)-mesh shard_map runtime is
+    the real routed code path (MeshCollectives, capacitated all_to_all
+    send buffers) on one shard, so staged dot vs staged packed-hamming is
+    a REAL measured ratio (both sides jit'd XLA) — the wire now carries
+    [.., W] uint32 sketch words instead of [.., D] f32 rows.  The routed
+    fused row runs interpret-mode Pallas on CPU and is labelled so; the
+    wire-bytes row is the deterministic `estimate_query_bytes` ratio
+    (~W*4/(D*4) per routed query row)."""
+    from repro.compat import make_mesh
+    from repro.core import LshParams, make_hyperplanes, packed
+    from repro.core import distributed as dist
+    from repro.core import hashing
+    from repro.core.runtime import IndexRuntime, RuntimeConfig
+    from repro.core.store import build_store_host
+
+    rng = np.random.default_rng(2)
+    N, B = (4096, 64) if smoke else (20000, 256)
+    D, k, L, m = 128, 12, 4, 10
+    params = LshParams(d=D, k=k, L=L, seed=0)
+    h = make_hyperplanes(params)
+    vecs = rng.standard_normal((N, D)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    codes = np.asarray(hashing.sketch_codes_batched(jnp.asarray(vecs), h))
+    store = build_store_host(codes, params.num_buckets, capacity=64,
+                             payload=vecs)
+    sth = packed.pack_store_payload(store, h)
+    w = sth.payload.shape[-1]
+    mesh = make_mesh((1, 1), ("data", "model"))
+    q = jnp.asarray(vecs[:B])
+    shared = f"B={B};N={N};D={D};k={k};L={L};W={w};m={m}"
+
+    def bench(score, fused, st, reps, qb):
+        rt = IndexRuntime(
+            RuntimeConfig(params=params, variant="cnb", m=m, score=score,
+                          cap_factor=float(L), fused=fused),
+            mesh=mesh,
+        )
+        st_sh = rt.shard_store(st)
+        rt.search(h, st_sh, qb)  # warm up / compile
+        t0 = time.time()
+        for _ in range(reps):
+            out = rt.search(h, st_sh, qb)
+        jax.block_until_ready(out[0])
+        return (time.time() - t0) / reps * 1e6
+
+    reps = 2 if smoke else 5
+    us_dot = bench("dot", "off", store, reps, q)
+    us_ham = bench("hamming", "off", sth, reps, q)
+    out = [
+        (f"kernels/routed_staged_dot_{B}q", us_dot, shared),
+        (f"kernels/routed_staged_hamming_{B}q", us_ham,
+         f"routed_packed_over_routed_staged={us_dot / us_ham:.3f}x;"
+         f"{shared}"),
+    ]
+    # the routed fused cell runs interpret-mode Pallas on CPU (Python-loop
+    # emulation, minutes at full batch) — time it on a small batch against
+    # a same-batch staged denominator; presence, not speed, is the signal
+    mode = "interpret" if jax.default_backend() == "cpu" else "compiled"
+    bf = 8 if smoke else 32
+    qf = jnp.asarray(vecs[:bf])
+    us_hs = bench("hamming", "off", sth, 1, qf)
+    us_fh = bench("hamming", "on", sth, 1, qf)
+    out.append(
+        (f"kernels/routed_fused_hamming_{bf}q", us_fh,
+         f"routed_fused_over_routed_staged={us_hs / us_fh:.3f}x;"
+         f"mode={mode};B={bf};N={N};D={D};k={k};L={L};W={w};m={m}"))
+    # deterministic wire-byte model: the routed query rows shrink from
+    # D*4 f32 bytes to W*4 word bytes (plus the unchanged meta ints)
+    cfg_d = RuntimeConfig(params=params, variant="cnb", m=m,
+                          cap_factor=float(L))
+    cfg_h = RuntimeConfig(params=params, variant="cnb", m=m,
+                          score="hamming", cap_factor=float(L))
+    by_d = dist.estimate_query_bytes(cfg_d, B, D, 1)["query_routing"]
+    by_h = dist.estimate_query_bytes(cfg_h, B, D, 1)["query_routing"]
+    out.append(
+        (f"kernels/routed_wire_bytes_{B}q", float(by_h),
+         f"packed_wire_over_f32={by_h / by_d:.3f}x;"
+         f"f32_bytes={by_d:.0f};packed_bytes={by_h:.0f};{shared}"))
+    return out
+
+
 def rows(smoke=False):
     rng = np.random.default_rng(0)
     out = []
@@ -193,4 +275,5 @@ def rows(smoke=False):
     out.extend(_planner_rows())
     out.extend(_query_path_rows())
     out.extend(_fused_rows(smoke=smoke))
+    out.extend(_routed_rows(smoke=smoke))
     return out

@@ -408,19 +408,43 @@ def query_rows(smoke: bool = False):
     return out
 
 
-def sweep_fused(write_cache: bool = True, smoke: bool = False):
+def _routed_query_inputs(s: dict):
+    """The routed (post-all_to_all) block shape: n*cap rows — 4x the
+    1-node row count here — where a fill fraction of rows carries probe
+    word 0 (the mesh send buffers pad to capacity; overflow/fill rows
+    reach the kernel masked-out, not absent)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    sr = dict(s, r=4 * s["r"])
+    v = _query_inputs(sr)
+    meta = np.asarray(v["meta"]).copy()
+    meta[3 * s["r"]:, 0] = 0  # fill rows: no valid probes
+    return sr, {**v, "meta": jnp.asarray(meta)}
+
+
+def sweep_fused(write_cache: bool = True, smoke: bool = False,
+                routed: bool = False):
     """(TB, KC) autotune sweep for the fused query kernel on this host.
 
     Times ops.fused_query across a block-shape grid on the representative
     query-path shape and records the winner in the autotune cache keyed by
     device kind (kernels/autotune.py), so runtime dispatch picks it up.
+    With ``routed=True`` the sweep runs the routed mesh stage's block
+    shape instead — n*cap rows with a fill-row tail — and records the
+    winner under "fused_query_routed", the key the mesh dispatch consults.
     """
     from functools import partial
 
     from repro.kernels import autotune, ops
 
-    s = _query_shapes(smoke)
-    v = _query_inputs(s)
+    if routed:
+        s, v = _routed_query_inputs(_query_shapes(smoke))
+        tune_op = "fused_query_routed"
+    else:
+        s = _query_shapes(smoke)
+        v = _query_inputs(s)
+        tune_op = "fused_query"
     grid_tb = (4, 8) if smoke else (4, 8, 16)
     grid_kc = (8, 16) if smoke else (8, 16, 32, 64)
     best, best_us = None, float("inf")
@@ -429,10 +453,10 @@ def sweep_fused(write_cache: bool = True, smoke: bool = False):
             fn = partial(ops.fused_query, m=s["m"], tb=tb, kc=kc)
             us = _bench(lambda *a: fn(*a), v["ids"], v["pay"], v["q"],
                         v["fb"], v["meta"], reps=1 if smoke else 2)
-            print(f"# sweep fused_query tb={tb} kc={kc}: {us:.0f}us")
+            print(f"# sweep {tune_op} tb={tb} kc={kc}: {us:.0f}us")
             if us < best_us:
                 best, best_us = dict(tb=tb, kc=kc), us
-    path = autotune.put("fused_query", best) if write_cache else None
+    path = autotune.put(tune_op, best) if write_cache else None
     return path, best, best_us
 
 
@@ -461,8 +485,12 @@ if __name__ == "__main__":
                          "winner for this device kind")
     args = ap.parse_args()
     if args.sweep:
-        path, best, best_us = sweep_fused(smoke=args.smoke)
-        print(f"# autotune winner {best} ({best_us:.0f}us) -> {path}")
+        for routed in (False, True):
+            path, best, best_us = sweep_fused(smoke=args.smoke,
+                                              routed=routed)
+            op = "fused_query_routed" if routed else "fused_query"
+            print(f"# autotune winner {op} {best} ({best_us:.0f}us)"
+                  f" -> {path}")
     for name, us, derived in query_rows(smoke=args.smoke):
         print(f"{name},{us:.2f},{derived}")
     table = markdown_table()

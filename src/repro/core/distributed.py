@@ -393,24 +393,34 @@ def make_payload_sync(cfg: RuntimeConfig, mesh, batch_axes=("data", "model")):
 def estimate_query_bytes(cfg: RuntimeConfig, batch: int, d: int,
                          n_total: int) -> dict:
     """Closed-form ICI bytes per search step; verified against HLO in
-    benchmarks/bench_distributed.py."""
+    benchmarks/bench_distributed.py.
+
+    Under `score="hamming"` the routed query row is the bit-packed
+    sketch — W uint32 words instead of d f32 lanes — so every term that
+    ships a query row charges `W*4` bytes, the ~`W/d` wire saving the
+    packed mesh path exists for (gated bench cell in bench_kernels)."""
+    from repro.core import packed
+
     n = cfg.n_nodes
     b_loc = batch // n_total
     m = cfg.m
     L = cfg.params.L
+    row_lanes = (
+        packed.num_words(cfg.params.k, L) if cfg.score == "hamming" else d
+    )
     if cfg.routing == "alltoall":
         cap = _route_cap(cfg, b_loc)
-        q_bytes = n * cap * d * 4 + n * cap * _META_INTS * 4
+        q_bytes = n * cap * row_lanes * 4 + n * cap * _META_INTS * 4
         r_bytes = 2 * n * cap * m * 4
     else:
-        q_bytes = (n - 1) * b_loc * d * 4  # all_gather
+        q_bytes = (n - 1) * b_loc * row_lanes * 4  # all_gather
         r_bytes = 2 * n * b_loc * L * m * 4
     nb_bytes = 0
     if cfg.variant == "nb":
         per_bit = (
             (n * cap if cfg.routing == "alltoall" else n * b_loc * L)
         )
-        nb_bytes = cfg.node_bits * per_bit * (d * 4 + 8 + 2 * m * 4 * 2)
+        nb_bytes = cfg.node_bits * per_bit * (row_lanes * 4 + 8 + 2 * m * 4 * 2)
     return dict(query_routing=q_bytes, results=r_bytes, neighbor=nb_bytes,
                 total=q_bytes + r_bytes + nb_bytes)
 
@@ -420,9 +430,16 @@ _META_INTS = 4  # (qidx, table, local, probe_mask) per routed probe
 
 def estimate_refresh_bytes(cfg: RuntimeConfig, capacity: int, d: int) -> int:
     """ICI bytes of one CNB cache refresh per device: `node_bits` ppermutes
-    of the full local store shard (ids + payload)."""
+    of the full local store shard (ids + payload).  A hamming store's
+    payload is the packed words [.., W], so each slot ships W*4 bytes."""
+    from repro.core import packed
+
+    slot_lanes = (
+        packed.num_words(cfg.params.k, cfg.params.L)
+        if cfg.score == "hamming" else d
+    )
     nb_local = cfg.params.num_buckets // cfg.n_nodes
-    per_permute = cfg.params.L * nb_local * capacity * (4 + d * 4)
+    per_permute = cfg.params.L * nb_local * capacity * (4 + slot_lanes * 4)
     return cfg.node_bits * per_permute
 
 

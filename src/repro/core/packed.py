@@ -31,11 +31,23 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import popcount32
+from repro.core.hashing import MAX_K, popcount32
+
+
+def _check_k(k: int) -> None:
+    """The layout contract (and `hashing.sketch_codes`) supports k-bit
+    codes with 1 <= k <= MAX_K only; an oversized k would silently break
+    the `unpack(pack(c)) == c` round-trip, so reject it at the boundary."""
+    if not (1 <= k <= MAX_K):
+        raise ValueError(
+            f"packed layout supports k in [1, {MAX_K}] bits per code, "
+            f"got k={k}"
+        )
 
 
 def num_words(k: int, L: int) -> int:
     """uint32 words needed to hold L k-bit codes."""
+    _check_k(k)
     return max(1, -(-(k * L) // 32))
 
 
@@ -46,6 +58,7 @@ def pack_codes(codes: jax.Array, k: int) -> jax.Array:
     word 0 upward, little-endian.  Bits >= k of each input code are
     ignored (codes are masked), so callers may pass raw uint32 codes.
     """
+    _check_k(k)
     L = codes.shape[-1]
     W = num_words(k, L)
     j = jnp.arange(k, dtype=jnp.uint32)
@@ -63,6 +76,7 @@ def pack_codes(codes: jax.Array, k: int) -> jax.Array:
 
 def unpack_codes(words: jax.Array, k: int, L: int) -> jax.Array:
     """Inverse of `pack_codes`: words [..., W] -> uint32 codes [..., L]."""
+    _check_k(k)
     g = jnp.arange(L * k)
     bit = (
         jnp.take(words, g // 32, axis=-1) >> (g % 32).astype(jnp.uint32)
@@ -101,8 +115,18 @@ def pack_store_payload(store, hyperplanes: jax.Array):
 
     if store.payload is None:
         raise ValueError("pack_store_payload needs an embedded-payload store")
-    k = hyperplanes.shape[1]
     t, nb, c, d = store.payload.shape
+    if hyperplanes.ndim != 3 or hyperplanes.shape[0] != t \
+            or hyperplanes.shape[2] != d:
+        # a mismatched hyperplane stack would either shape-error deep in
+        # sketch_codes or, worse, build a wrong-W payload that only fails
+        # at insert time — reject it here, naming the expected layout
+        raise ValueError(
+            f"hyperplanes must be [L, k, d] = [{t}, k, {d}] to match this "
+            f"store's payload {tuple(store.payload.shape)}; got "
+            f"{tuple(hyperplanes.shape)}"
+        )
+    k = hyperplanes.shape[1]
     codes = hashing.sketch_codes(
         store.payload.reshape(-1, d), hyperplanes
     )                                                    # [T*NB*C, L]

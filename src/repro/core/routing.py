@@ -42,6 +42,10 @@ def run_ranks(sorted_keys: jax.Array) -> jax.Array:
       int32 [n]; the j-th occurrence of a key gets rank j.
     """
     n = sorted_keys.shape[0]
+    if n == 0:
+        # the concat below would build a shape-(1,) is_start against a
+        # shape-(0,) pos and fail to broadcast; zero items have zero ranks
+        return jnp.zeros((0,), jnp.int32)
     pos = jnp.arange(n, dtype=jnp.int32)
     is_start = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
@@ -122,6 +126,11 @@ def return_to_origin(
     Returns [n, ...] in ORIGINAL item order; overflowed (dropped) items
     get `fill`.
     """
+    if back.shape[1] == 0:
+        # cap == 0: everything was dropped and there is no slot axis to
+        # gather from (XLA rejects a size-1 slice of a size-0 dim)
+        n = route.order.shape[0]
+        return jnp.full((n,) + back.shape[2:], fill, back.dtype)
     g = back[route.dest, route.slot]
     g = jnp.where(_expand(route.ok, back.ndim - 1), g, fill)
     unsort = jnp.argsort(route.order)

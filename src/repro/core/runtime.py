@@ -80,7 +80,9 @@ class RuntimeConfig:
     replication: int = 1           # R-way zone replication (DESIGN.md Sec. 10)
     read_mode: str = "first"       # first (first live replica) | quorum
     fused: str = "auto"            # fused query mega-kernel: auto | on | off
-    score: str = "dot"             # dot | hamming (bit-packed sketch words)
+    score: str = "dot"             # dot | hamming (bit-packed sketch words
+    #                                ride every topology: routed steps
+    #                                carry [.., W] uint32 query words)
 
     def __post_init__(self):
         if self.read_mode not in ("first", "quorum"):
@@ -89,11 +91,6 @@ class RuntimeConfig:
             raise ValueError(f"unknown fused mode {self.fused!r}")
         if self.score not in ("dot", "hamming"):
             raise ValueError(f"unknown score mode {self.score!r}")
-        if self.score == "hamming" and self.n_nodes != 1:
-            raise ValueError(
-                "score='hamming' is 1-node only (packed sketch words do "
-                "not ride the mesh steps yet)"
-            )
         if self.replication < 1:
             raise ValueError(
                 f"replication must be >= 1, got {self.replication}"
@@ -324,22 +321,22 @@ def _fused_on(cfg: RuntimeConfig, cx, *, has_payload: bool,
               has_corpus: bool, need_payload: bool = True) -> bool:
     """Should this step take the fused mega-kernel path?
 
-    `auto` engages only where the fused kernel is a strict drop-in: the
-    1-node topology (routed steps interleave collectives between the
-    stages), slot-embedded payloads (an id-keyed corpus needs the global
-    gather the kernel exists to avoid), and a TPU backend — the kernel
-    is Mosaic-only (PrefetchScalarGridSpec + TPU compiler params), so on
+    `auto` engages only where the fused kernel is a strict drop-in:
+    slot-embedded payloads (an id-keyed corpus needs the global gather
+    the kernel exists to avoid) and a TPU backend — the kernel is
+    Mosaic-only (PrefetchScalarGridSpec + TPU compiler params), so on
     GPU it would fail to lower rather than run slow, and on CPU it runs
     in interpret mode — correct but slower than the jitted staged path.
-    Both stay on the staged path under `auto`.  `on` forces the path
-    (including CPU interpret) and raises where it cannot apply, instead
-    of silently degrading.
+    Both stay on the staged path under `auto`.  Routed topologies fuse
+    the post-route local stage: the owner-side rows an all_to_all (or
+    all_gather) delivers go through the same kernel, with the
+    collectives outside it.  `on` forces the path (including CPU
+    interpret) and raises where it cannot apply, instead of silently
+    degrading.
     """
     if cfg.fused == "off":
         return False
     blockers = []
-    if cx.routed:
-        blockers.append("routed topology (mesh steps stay staged)")
     if has_corpus:
         blockers.append("id-keyed corpus scoring")
     if need_payload and not has_payload:
@@ -353,19 +350,24 @@ def _fused_on(cfg: RuntimeConfig, cx, *, has_payload: bool,
     return not blockers and jax.default_backend() == "tpu"
 
 
-def _fused_probe_rows(cfg: RuntimeConfig, nb: int, table, local_idx, mask):
+def _fused_probe_rows(cfg: RuntimeConfig, nb: int, table, local_idx, mask,
+                      rep_sel=None, n_rep: int = 1):
     """(fb [r, P], pword [r]) for the mega-kernel's scalar prefetch.
 
     `fb` flattens (table, bucket) to a row of the [T*NB, C] store view —
     the gather the kernel's BlockSpec index map performs; `pword` packs
     the planner's per-probe validity lanes into one int32 bitfield
-    (bit p = probe p valid; P <= 1 + k < 31 always fits).
+    (bit p = probe p valid; P <= 1 + k < 31 always fits).  With
+    `rep_sel` (replication) the store view is the [T*R*NB, C] flatten of
+    the primary+replica concat, and each row addresses its selected
+    replica rank: fb = ((table*R + rep_sel)*NB + probe).
     """
     probes, pvalid = plan_mod.shard_local_probes(
         cfg.topo, local_idx, mask, include_near=_local_include_near(cfg)
     )                                                      # [r, P] both
     probes = probes % nb  # engine parity: fold OOB codes
-    fb = table[:, None] * nb + probes
+    row = table if rep_sel is None else table * n_rep + rep_sel
+    fb = row[:, None] * nb + probes
     shifts = jnp.arange(pvalid.shape[1], dtype=jnp.int32)
     pword = jnp.sum(
         pvalid.astype(jnp.int32) << shifts[None, :], axis=1
@@ -383,24 +385,44 @@ def _fused_search_local(
     mask: jax.Array,                  # [r]
     exclude: jax.Array | None,        # [r] or None
     m: int,
+    rep_ids: jax.Array | None = None,      # [T, R-1, NB, C]
+    rep_payload: jax.Array | None = None,  # [T, R-1, NB, C, D|W]
+    rep_sel: jax.Array | None = None,      # [r] replica rank to read
+    routed: bool = False,
 ):
-    """Fused twin of `_score_local` (non-routed, non-replicated): one
-    Pallas call replaces gather + score + top-m; no [r, P*C] candidate
-    intermediate exists.  Bit-identical to the staged path by the
-    `ref.fused_query_ref` contract (tests/test_fused.py)."""
+    """Fused twin of `_score_local`: one Pallas call replaces gather +
+    score + top-m; no [r, P*C] candidate intermediate exists.
+    Bit-identical to the staged path by the `ref.fused_query_ref`
+    contract (tests/test_fused.py).  With `rep_sel` (replication > 1)
+    the kernel gathers from the flattened primary+replica store view —
+    the same rows `_score_local` reads through its replica concat.
+    `routed` selects the routed autotune entry (post-all_to_all row
+    counts are cap-padded, so the winning block shape can differ)."""
     from repro.kernels import ops
 
-    t, nb, c = store_ids.shape
-    fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    if rep_sel is None:
+        t, nb, c = store_ids.shape
+        ids_flat = store_ids.reshape(t * nb, c)
+        pay_flat = store_payload.reshape(t * nb, c, store_payload.shape[-1])
+        fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    else:
+        all_ids = jnp.concatenate(
+            [store_ids[:, None], rep_ids], axis=1)         # [T, R, NB, C]
+        all_pay = jnp.concatenate(
+            [store_payload[:, None], rep_payload], axis=1)
+        t, n_rep, nb, c = all_ids.shape
+        ids_flat = all_ids.reshape(t * n_rep * nb, c)
+        pay_flat = all_pay.reshape(t * n_rep * nb, c, all_pay.shape[-1])
+        fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask,
+                                      rep_sel=rep_sel, n_rep=n_rep)
     excl = (
         jnp.full_like(pword, -1) if exclude is None
         else exclude.astype(jnp.int32)
     )  # -1 matches only empty slots == no exclusion
     meta = jnp.stack([pword, excl], axis=1)
     return ops.fused_query(
-        store_ids.reshape(t * nb, c),
-        store_payload.reshape(t * nb, c, store_payload.shape[-1]),
-        q, fb, meta, m=m, score=cfg.score,
+        ids_flat, pay_flat, q, fb, meta, m=m, score=cfg.score,
+        tune_op="fused_query_routed" if routed else "fused_query",
         interpret=jax.default_backend() == "cpu",
     )
 
@@ -412,16 +434,29 @@ def _fused_contains_local(
     local_idx: jax.Array,  # [r]
     mask: jax.Array,       # [r]
     target: jax.Array,     # [r]
+    rep_ids: jax.Array | None = None,  # [T, R-1, NB, C]
+    rep_sel: jax.Array | None = None,  # [r]
+    routed: bool = False,
 ):
     """Fused twin of `_contains_local`: metadata-only, works on ids-only
-    stores (no payload blocks travel)."""
+    stores (no payload blocks travel).  Replica reads flatten the
+    primary+replica concat exactly like `_fused_search_local`."""
     from repro.kernels import ops
 
-    t, nb, c = store_ids.shape
-    fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    if rep_sel is None:
+        t, nb, c = store_ids.shape
+        ids_flat = store_ids.reshape(t * nb, c)
+        fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask)
+    else:
+        all_ids = jnp.concatenate([store_ids[:, None], rep_ids], axis=1)
+        t, n_rep, nb, c = all_ids.shape
+        ids_flat = all_ids.reshape(t * n_rep * nb, c)
+        fb, pword = _fused_probe_rows(cfg, nb, table, local_idx, mask,
+                                      rep_sel=rep_sel, n_rep=n_rep)
     meta = jnp.stack([pword, target.astype(jnp.int32)], axis=1)
     return ops.fused_contains(
-        store_ids.reshape(t * nb, c), fb, meta,
+        ids_flat, fb, meta,
+        tune_op="fused_query_routed" if routed else "fused_query",
         interpret=jax.default_backend() == "cpu",
     )
 
@@ -440,7 +475,9 @@ def _score_cache(
 
     Flipping node bit j keeps the local index unchanged, so the near bucket
     of bit j is cache[table, j, local_idx] — a pure local gather, gated per
-    query by node bit j of the probe mask.
+    query by node bit j of the probe mask.  Under `score="hamming"` the
+    cache payload holds the ppermuted packed uint32 words and `q` is the
+    routed query's word row — the same packed scoring as the owner stage.
     """
     nbits = cache_ids.shape[1]
     jj = jnp.arange(nbits)[None, :]
@@ -451,7 +488,8 @@ def _score_cache(
     cand_ids = cand_ids.reshape(r, -1)
     cand_vec = cand_vec.reshape(r, cand_ids.shape[1], -1)
     return scoring.score_topk(
-        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels
+        q, cand_ids, cand_vec, m, use_kernels=cfg.use_kernels,
+        score=cfg.score,
     )
 
 
@@ -683,8 +721,6 @@ def search_kernel(
     """
     if (corpus is not None or exclude is not None) and cx.routed:
         raise ValueError("corpus scoring / wire exclusion are 1-node only")
-    if cfg.score == "hamming" and cx.routed:
-        raise ValueError("score='hamming' is 1-node only")
     if cfg.score == "hamming" and corpus is not None:
         raise ValueError(
             "score='hamming' needs slot-embedded packed payloads, not an "
@@ -698,22 +734,25 @@ def search_kernel(
         )
     L = cfg.params.L
     n = cx.n
-    b_loc, d = q.shape
+    b_loc = q.shape[0]
     plan, flat = _flat_plan(cfg, cx, q, hyperplanes)
     probes = _probes_issued(flat["mask"])
+
+    qs = q
+    if cfg.score == "hamming":
+        # hamming scores against the query's OWN packed sketch words; the
+        # planner already computed the codes, so the f32 query vector
+        # never reaches the scoring stage — and on routed topologies the
+        # [.., W] uint32 words (not the [.., d] f32 rows) are what rides
+        # the all_to_all / all_gather wire.
+        from repro.core import packed as packed_mod
+
+        qs = packed_mod.pack_codes(plan.codes, cfg.params.k)
 
     if not cx.routed:
         # Identity router: every probe is local by construction. No send
         # buffers exist, so nothing can be dropped and nothing is traced
         # beyond the gather/score path the reference engine always ran.
-        qs = q
-        if cfg.score == "hamming":
-            # hamming scores against the query's OWN packed sketch words;
-            # the planner already computed the codes, so the f32 query
-            # vector never reaches the scoring stage.
-            from repro.core import packed as packed_mod
-
-            qs = packed_mod.pack_codes(plan.codes, cfg.params.k)
         ex = None if exclude is None else exclude[flat["qidx"]]
         if _fused_on(cfg, cx, has_payload=store_payload is not None,
                      has_corpus=corpus is not None):
@@ -735,7 +774,7 @@ def search_kernel(
     if cfg.routing == "allgather":
         ids, sc = _search_allgather(
             cfg, cx, store_ids, store_payload, cache_ids, cache_payload,
-            q, flat, m,
+            qs, flat, m,
         )
         # every shard answers every query's probes: b_loc * n contacts
         return ids, sc, StepStats.local(n, probes, b_loc * n)
@@ -753,12 +792,15 @@ def search_kernel(
     if reps_on:
         cols.append(rep_col)
     meta = jnp.stack(cols, axis=-1)
-    send_q = routing_mod.build_send_buffer(route, n, cap, q[flat["qidx"]], 0.0)
+    # hamming routes the packed uint32 word rows (W*4 bytes each vs d*4 —
+    # the Sec. 3.2 wire saving); fill 0 is safe either way because fill
+    # rows carry meta -1 and are excluded by rvalid below, never scored.
+    send_q = routing_mod.build_send_buffer(route, n, cap, qs[flat["qidx"]], 0)
     send_meta = routing_mod.build_send_buffer(route, n, cap, meta, -1)
 
     recv_q = cx.all_to_all(send_q)
     recv_meta = cx.all_to_all(send_meta)
-    rq = recv_q.reshape(n * cap, d)
+    rq = recv_q.reshape(n * cap, qs.shape[-1])
     rtable = recv_meta[..., 1].reshape(-1)
     rlocal = recv_meta[..., 2].reshape(-1)
     rmask = recv_meta[..., 3].reshape(-1)
@@ -774,11 +816,23 @@ def search_kernel(
         # data lives, so a stale survivor can't resurrect a killed zone
         rvalid &= cx.alive(live)
 
-    ids_o, sc_o = _score_local(
-        cfg, store_ids, store_payload, None, rq, rtable_c, rlocal_c,
-        rmask_c, None, m,
-        rep_ids=rep_ids, rep_payload=rep_payload, rep_sel=rrep,
-    )
+    if _fused_on(cfg, cx, has_payload=store_payload is not None,
+                 has_corpus=False):
+        # post-route local stage through the mega-kernel: fill rows score
+        # garbage on clamped indices exactly like the staged gather and
+        # are masked by rvalid below — bit-identical either way.
+        ids_o, sc_o = _fused_search_local(
+            cfg, store_ids, store_payload, rq, rtable_c, rlocal_c,
+            rmask_c, None, m,
+            rep_ids=rep_ids, rep_payload=rep_payload, rep_sel=rrep,
+            routed=True,
+        )
+    else:
+        ids_o, sc_o = _score_local(
+            cfg, store_ids, store_payload, None, rq, rtable_c, rlocal_c,
+            rmask_c, None, m,
+            rep_ids=rep_ids, rep_payload=rep_payload, rep_sel=rrep,
+        )
     ids_parts, sc_parts = [ids_o], [sc_o]
 
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
@@ -845,23 +899,32 @@ def _search_allgather(
     cfg, cx, store_ids, store_payload, cache_ids, cache_payload, q, flat, m
 ):
     """Dense fallback: replicate queries along the shard axis, each shard
-    scores the (query, table) pairs it owns, results return via all_to_all."""
+    scores the (query, table) pairs it owns, results return via all_to_all.
+    `q` is the scoring-side query row: [b_loc, d] f32 under dot, the
+    [b_loc, W] packed uint32 words under hamming."""
     L, n = cfg.params.L, cx.n
     b_loc = q.shape[0]
     me = cx.axis_index()
 
     g, rtable, b_all = _gather_flat_meta(
         cx, flat, b_loc, L, ("owner", "local", "mask"))
-    q_all = cx.all_gather(q)                                # [b_all, d]
-    rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d]
+    q_all = cx.all_gather(q)                                # [b_all, d|W]
+    rq = jnp.repeat(q_all, L, axis=0)                       # [b_all*L, d|W]
     rlocal = g["local"]
     rmask = g["mask"]
     mine = g["owner"] == me
 
-    ids_o, sc_o = _score_local(
-        cfg, store_ids, store_payload, None, rq, rtable, rlocal, rmask,
-        None, m,
-    )
+    if _fused_on(cfg, cx, has_payload=store_payload is not None,
+                 has_corpus=False):
+        ids_o, sc_o = _fused_search_local(
+            cfg, store_ids, store_payload, rq, rtable, rlocal, rmask,
+            None, m, routed=True,
+        )
+    else:
+        ids_o, sc_o = _score_local(
+            cfg, store_ids, store_payload, None, rq, rtable, rlocal, rmask,
+            None, m,
+        )
     ids_parts, sc_parts = [ids_o], [sc_o]
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
         ids_c, sc_c = _score_cache(
@@ -916,11 +979,19 @@ def _contains_local(cfg, store_ids, table, local_idx, mask, target,
 
 
 def _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal, rmask, rtgt,
-                   rep_ids=None, rep_sel=None):
+                   rep_ids=None, rep_sel=None, fused=False):
     """Membership across owner buckets + node-bit coverage (cache or
-    neighbor forwards), mirroring the search step's candidate pool."""
-    hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt,
-                          rep_ids=rep_ids, rep_sel=rep_sel)
+    neighbor forwards), mirroring the search step's candidate pool.
+    `fused` swaps the owner-bucket component for the fused membership
+    kernel; the cnb-cache and nb-forward components stay staged (they OR
+    booleans in, so the result is identical either way)."""
+    if fused:
+        hit = _fused_contains_local(cfg, store_ids, rtable, rlocal, rmask,
+                                    rtgt, rep_ids=rep_ids, rep_sel=rep_sel,
+                                    routed=cx.routed)
+    else:
+        hit = _contains_local(cfg, store_ids, rtable, rlocal, rmask, rtgt,
+                              rep_ids=rep_ids, rep_sel=rep_sel)
     if cfg.variant == "cnb" and cache_ids is not None and cfg.node_bits > 0:
         nbits = cache_ids.shape[1]
         jj = jnp.arange(nbits)[None, :]
@@ -996,6 +1067,8 @@ def contains_kernel(
         hit = _contains_hits(
             cfg, cx, store_ids, cache_ids, rtable, g["local"], g["mask"],
             g["target"],
+            fused=_fused_on(cfg, cx, has_payload=True, has_corpus=False,
+                            need_payload=False),
         )
         hit = hit & (g["owner"] == me)
         # OR across shards == psum of disjoint indicators, then own slice.
@@ -1029,7 +1102,10 @@ def contains_kernel(
         rrep = jnp.clip(recv_meta[..., 5].reshape(-1), 0, cfg.replication - 1)
 
     hit = _contains_hits(cfg, cx, store_ids, cache_ids, rtable, rlocal,
-                         rmask, rtgt, rep_ids=rep_ids, rep_sel=rrep)
+                         rmask, rtgt, rep_ids=rep_ids, rep_sel=rrep,
+                         fused=_fused_on(cfg, cx, has_payload=True,
+                                         has_corpus=False,
+                                         need_payload=False))
     # empty-slot rows carry rtgt = -1, which DOES match empty bucket ids
     # (-1); this validity mask is what discards those spurious hits.
     hit = hit & (recv_meta[..., 1].reshape(-1) >= 0)

@@ -31,8 +31,14 @@ _CACHE_FILE = pathlib.Path(__file__).resolve().parent / "autotune_cache.json"
 # interpret mode, where big lane pads only add python-loop work; real
 # accelerators want full 128-wide lanes.
 DEFAULTS = {
-    "cpu": {"fused_query": {"tb": 8, "kc": 8}},
-    "*": {"fused_query": {"tb": 8, "kc": 128}},
+    "cpu": {
+        "fused_query": {"tb": 8, "kc": 8},
+        "fused_query_routed": {"tb": 8, "kc": 8},
+    },
+    "*": {
+        "fused_query": {"tb": 8, "kc": 128},
+        "fused_query_routed": {"tb": 8, "kc": 128},
+    },
 }
 
 

@@ -159,6 +159,7 @@ def fused_query(
     score: str = "dot",
     tb: int | None = None,
     kc: int | None = None,
+    tune_op: str = "fused_query",
     interpret: bool | None = None,
 ):
     """Fused gather -> score -> top-m (ids [r, m] i32, scores [r, m] f32).
@@ -166,11 +167,13 @@ def fused_query(
     Matches `ref.fused_query_ref` — which routes through
     `core.scoring.dedupe_topk`, so fused results are bit-identical to
     the staged path by construction.  tb/kc default to the autotuned
-    block shape for this device kind (`kernels.autotune`); kc is the
-    capacity pad multiple (bucket rows are padded to a whole number of
-    candidate lanes)."""
+    block shape for this device kind (`kernels.autotune`) under the
+    `tune_op` key — the routed mesh stage sweeps separately as
+    "fused_query_routed" since its row count is n·cap, not b·L; kc is
+    the capacity pad multiple (bucket rows are padded to a whole number
+    of candidate lanes)."""
     interpret = _on_cpu() if interpret is None else interpret
-    tuned = autotune.get("fused_query")
+    tuned = autotune.get(tune_op)
     tb = int(tuned.get("tb", 8)) if tb is None else tb
     kc = int(tuned.get("kc", 8 if interpret else LANE)) if kc is None else kc
     r, _ = fb.shape
@@ -202,12 +205,13 @@ def fused_contains(
     meta: jax.Array,       # int32 [r, 2] (probe-validity word, target id)
     *,
     tb: int | None = None,
+    tune_op: str = "fused_query",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused membership probe: bool [r]. Matches `ref.fused_contains_ref`.
     Needs no payload, so it serves ids-only stores too."""
     interpret = _on_cpu() if interpret is None else interpret
-    tuned = autotune.get("fused_query")
+    tuned = autotune.get(tune_op)
     tb = int(tuned.get("tb", 8)) if tb is None else tb
     r, _ = fb.shape
     c = ids_flat.shape[-1]

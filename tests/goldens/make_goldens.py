@@ -1,4 +1,5 @@
-"""Regenerate the golden outputs (`engine_v1.npz`, `runtime_2node_v1.npz`).
+"""Regenerate the golden outputs (`engine_v1.npz`, `runtime_2node_v1.npz`,
+`runtime_2node_packed_v1.npz`).
 
 `engine_v1.npz` was captured from the PRE-runtime-refactor `LshEngine`
 (PR 3 tree) and pins its exact search/contains outputs: the refactored
@@ -7,9 +8,13 @@ bit-identical ids (tests/test_runtime.py).  `runtime_2node_v1.npz` pins
 the 2-node mesh runtime's exact outputs on the SAME corpus/queries (no
 exclusion — the mesh wire path has none), and is what the elastic
 reshard round-trip (1 -> 2 -> 1 nodes) is checked against in the slow
-suite.  Regenerating either is ONLY legitimate when the reference
-semantics intentionally change — never to make a failing equivalence
-test pass.
+suite.  `runtime_2node_packed_v1.npz` pins the packed-hamming mesh path
+(PR 10): the 2-node `score="hamming"` runtime routing [.., W] uint32
+sketch words over the all_to_all, asserted AT GENERATION TIME to be
+bit-identical to the 1-node hamming run — the mesh must not change
+results, only placement.  Regenerating any of them is ONLY legitimate
+when the reference semantics intentionally change — never to make a
+failing equivalence test pass.
 
     PYTHONPATH=src python tests/goldens/make_goldens.py
 
@@ -105,11 +110,59 @@ def build_two_node():
     return out
 
 
+def build_two_node_packed():
+    """2-node packed-hamming mesh outputs (needs 2 host devices).
+
+    Every cell is asserted bit-identical to the 1-node hamming run on
+    the same packed store before it is written: exact integer popcount
+    scores and the lowest-id tie-break make the routed merge and the
+    local merge agree exactly, so the golden doubles as the proof that
+    the mesh adds placement, not drift."""
+    from repro.core import packed
+    from repro.core.runtime import IndexRuntime, RuntimeConfig
+    from repro.launch.mesh import make_zone_mesh
+
+    params, h, store, vecs, targets = _build_setup()
+    sth = packed.pack_store_payload(store, h)
+    q = jnp.asarray(vecs[:NQ])
+    mesh = make_zone_mesh(2)
+
+    out = {"targets": targets}
+    for variant in ("lsh", "nb", "cnb"):
+        local = IndexRuntime(
+            RuntimeConfig(params=params, variant=variant, m=M,
+                          score="hamming"))
+        ids_1, sc_1, _ = local.search(h, sth, q)
+        hits_1, _ = local.contains(h, sth, q, targets)
+        rt = IndexRuntime(
+            RuntimeConfig(params=params, variant=variant, m=M, n_nodes=2,
+                          score="hamming", cap_factor=float(L)),
+            mesh=mesh,
+        )
+        store_sh = rt.shard_store(sth)
+        cache = rt.refresh_cache(store_sh) if variant == "cnb" else None
+        ids, scores, dropped = rt.search(h, store_sh, q, cache=cache)
+        assert int(dropped) == 0, (variant, int(dropped))
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_1))
+        np.testing.assert_array_equal(np.asarray(scores), np.asarray(sc_1))
+        hits, cdrop = rt.contains(h, store_sh, q, targets, cache=cache)
+        assert int(cdrop) == 0, (variant, int(cdrop))
+        np.testing.assert_array_equal(np.asarray(hits), np.asarray(hits_1))
+        out[f"search_ids_{variant}"] = np.asarray(ids)
+        out[f"search_scores_{variant}"] = np.asarray(scores)
+        out[f"contains_{variant}"] = np.asarray(hits)
+    return out
+
+
 if __name__ == "__main__":
     here = os.path.dirname(os.path.abspath(__file__))
     if "--two-node" in sys.argv:
         path = os.path.join(here, "runtime_2node_v1.npz")
         np.savez_compressed(path, **build_two_node())
+        print(f"wrote {path}")
+    elif "--two-node-packed" in sys.argv:
+        path = os.path.join(here, "runtime_2node_packed_v1.npz")
+        np.savez_compressed(path, **build_two_node_packed())
         print(f"wrote {path}")
     else:
         path = os.path.join(here, "engine_v1.npz")
@@ -117,7 +170,8 @@ if __name__ == "__main__":
         print(f"wrote {path}")
         env = dict(os.environ)
         env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-        subprocess.run(
-            [sys.executable, os.path.abspath(__file__), "--two-node"],
-            env=env, check=True,
-        )
+        for flag in ("--two-node", "--two-node-packed"):
+            subprocess.run(
+                [sys.executable, os.path.abspath(__file__), flag],
+                env=env, check=True,
+            )

@@ -7,12 +7,14 @@ cnb) x probe budgets (full, p2, ranked3) — plus contains parity and the
 hamming scoring mode, where the exact integer popcount scores make even
 the SCORES bit-equal between staged and fused.
 
-The routed topologies always run staged (the fused dispatch never
-engages under collectives), so the 2-node golden
-(runtime_2node_v1.npz, tests/test_runtime.py) is untouched by
-construction; this module pins the 1-node side where the kernel lives.
-Everything runs with fused="on" to force the Pallas path through CPU
-interpret mode — "auto" stays staged on CPU hosts.
+Since PR 10 the routed topologies fuse too: the post-route local stage
+(the owner-side gather/score over all_to_all-delivered rows) dispatches
+the same mega-kernel, with the collectives outside.  The routed matrix
+here pins fused == staged bit-identity on the (1, 1) mesh (tier 1) and
+on a real 2-node mesh against `runtime_2node_v1.npz` plus the packed
+2-node golden `runtime_2node_packed_v1.npz` (slow).  Everything runs
+with fused="on" to force the Pallas path through CPU interpret mode —
+"auto" stays staged on CPU hosts (and TPU-gated on the mesh too).
 """
 
 from __future__ import annotations
@@ -177,11 +179,179 @@ def test_hamming_insert_rejects_unpacked_payload(setup):
 
 
 def test_hamming_mode_validation():
-    """Config-level guards: hamming is 1-node only; bad knobs raise."""
+    """Config-level guards: bad knobs raise; hamming rides every topology
+    since PR 10 (the packed words are what the mesh wire carries)."""
     params = LshParams(d=D, k=K, L=L)
-    with pytest.raises(ValueError, match="1-node"):
-        RuntimeConfig(params=params, n_nodes=2, score="hamming")
+    cfg = RuntimeConfig(params=params, n_nodes=2, score="hamming")
+    assert cfg.score == "hamming" and cfg.n_nodes == 2
     with pytest.raises(ValueError, match="score"):
         RuntimeConfig(params=params, score="cosine")
     with pytest.raises(ValueError, match="fused"):
         RuntimeConfig(params=params, fused="maybe")
+
+
+# -----------------------------------------------------------------------------
+# routed topologies (PR 10): the mesh fuses the post-route local stage
+# -----------------------------------------------------------------------------
+
+
+def _hamming_store(params, h, store, vecs):
+    return packed.pack_store_payload(store, h)
+
+
+@pytest.mark.parametrize("score", ["dot", "hamming"])
+@pytest.mark.parametrize("variant", ["nb", "cnb"])
+def test_routed_fused_matches_staged(setup, single_mesh, score, variant):
+    """(1, 1)-mesh shard_map (MeshCollectives — the real routed code path,
+    one shard): fused == staged bit-identically for both scoring modes,
+    and both match the mesh-free local run."""
+    import dataclasses as dc
+
+    params, h, store, vecs, golden = setup
+    st = _hamming_store(params, h, store, vecs) if score == "hamming" \
+        else store
+    q = vecs[:NQ]
+    targets = golden["targets"]
+    local = IndexRuntime(
+        RuntimeConfig(params=params, variant=variant, m=M, score=score))
+    ids_l, sc_l, _ = local.search(h, st, q)
+    hits_l, _ = local.contains(h, st, q, targets)
+    base = RuntimeConfig(params=params, variant=variant, m=M, score=score,
+                         cap_factor=float(L), fused="off")
+    out = {}
+    for fused in ("off", "on"):
+        rt = IndexRuntime(dc.replace(base, fused=fused), mesh=single_mesh)
+        st_sh = rt.shard_store(st)
+        cache = rt.refresh_cache(st_sh) if variant == "cnb" else None
+        ids, sc, drop = rt.search(h, st_sh, q, cache=cache)
+        assert int(drop) == 0
+        hits, _ = rt.contains(h, st_sh, q, targets, cache=cache)
+        out[fused] = (np.asarray(ids), np.asarray(sc), np.asarray(hits))
+    np.testing.assert_array_equal(out["on"][0], out["off"][0])
+    np.testing.assert_array_equal(out["on"][2], out["off"][2])
+    np.testing.assert_array_equal(out["off"][0], np.asarray(ids_l))
+    np.testing.assert_array_equal(out["off"][2], np.asarray(hits_l))
+    if score == "hamming":  # exact integer scores: bit-equal
+        np.testing.assert_array_equal(out["on"][1], out["off"][1])
+        np.testing.assert_array_equal(out["off"][1], np.asarray(sc_l))
+    else:
+        np.testing.assert_allclose(out["on"][1], out["off"][1], atol=1e-5)
+
+
+def test_routed_drop_accounting_packed(setup, single_mesh):
+    """Forced overflow (cap_factor such that cap < b*L) under packed
+    hamming: `dropped_probes` is counted exactly, surviving queries match
+    the uncapped run bit-for-bit, and a fully-dropped query returns only
+    fill (ids -1) — fill-sentinel word rows are never scored as real
+    candidates."""
+    import dataclasses as dc
+
+    params, h, store, vecs, golden = setup
+    sth = _hamming_store(params, h, store, vecs)
+    nq = 16
+    q = vecs[:nq]
+    base = RuntimeConfig(params=params, variant="cnb", m=M, score="hamming",
+                         cap_factor=float(L))
+    full = IndexRuntime(base, mesh=single_mesh)
+    st_sh = full.shard_store(sth)
+    ids_full, sc_full, drop0 = full.search(h, st_sh, q)
+    assert int(drop0) == 0
+
+    # one node, cap_factor = 1/L => cap = nq: exactly nq of the nq*L
+    # (query, table) probes survive.  plan_routes is a stable argsort on
+    # a single destination, so the survivors are the FIRST nq probes in
+    # flat (query-major) order: queries 0 .. nq/L - 1 keep all L tables.
+    capped = IndexRuntime(dc.replace(base, cap_factor=1.0 / L),
+                          mesh=single_mesh)
+    ids_cap, sc_cap, drop = capped.search(h, capped.shard_store(sth), q)
+    assert int(drop) == nq * L - nq
+    whole = nq // L  # queries whose every table probe survived
+    np.testing.assert_array_equal(
+        np.asarray(ids_cap[:whole]), np.asarray(ids_full[:whole]))
+    np.testing.assert_array_equal(
+        np.asarray(sc_cap[:whole]), np.asarray(sc_full[:whole]))
+    # the last queries lost ALL their probes: nothing but fill comes back
+    assert np.all(np.asarray(ids_cap[whole + 1:]) == -1)
+
+
+TWO_NODE_PACKED = f"""
+import numpy as np
+import jax.numpy as jnp
+import dataclasses as dc
+from repro.core import LshParams, make_hyperplanes, packed
+from repro.core.hashing import sketch_codes_batched
+from repro.core.runtime import IndexRuntime, RuntimeConfig
+from repro.core.store import build_store_host
+from repro.launch.mesh import make_zone_mesh
+
+N, D, K, L, M, NQ = {N}, {D}, {K}, {L}, {M}, {NQ}
+rng = np.random.default_rng(17)
+vecs = rng.standard_normal((N, D)).astype(np.float32)
+vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+params = LshParams(d=D, k=K, L=L, seed=23)
+h = make_hyperplanes(params)
+codes = sketch_codes_batched(jnp.asarray(vecs), h)
+store = build_store_host(codes, params.num_buckets, capacity=64,
+                         payload=vecs)
+sth = packed.pack_store_payload(store, h)
+mesh = make_zone_mesh(2)
+q = jnp.asarray(vecs[:NQ])
+targets = rng.integers(0, N, size=NQ).astype(np.int32)
+golden = dict(np.load("GOLDEN_2NODE"))
+golden_p = dict(np.load("GOLDEN_PACKED"))
+
+for score, st in (("dot", store), ("hamming", sth)):
+    gold = golden if score == "dot" else golden_p
+    for variant in ("nb", "cnb"):
+        for R in (1, 2):
+            if R > 1 and variant == "nb":
+                continue  # nb x replication>1 is an invalid config
+            base = RuntimeConfig(
+                params=params, variant=variant, m=M, n_nodes=2,
+                score=score, cap_factor=float(L), replication=R,
+                fused="off")
+            out = {{}}
+            for fused in ("off", "on"):
+                rt = IndexRuntime(dc.replace(base, fused=fused), mesh=mesh)
+                st_sh = rt.shard_store(st)
+                cache = rt.refresh_cache(st_sh) if variant == "cnb" else None
+                reps = rt.replicate_store(st_sh) if R > 1 else None
+                ids, sc, drop = rt.search(h, st_sh, q, cache=cache,
+                                          replicas=reps)
+                assert int(drop) == 0, (score, variant, R, fused)
+                hits, _ = rt.contains(h, st_sh, q, targets, cache=cache,
+                                      replicas=reps)
+                out[fused] = (np.asarray(ids), np.asarray(sc),
+                              np.asarray(hits))
+            np.testing.assert_array_equal(out["on"][0], out["off"][0])
+            np.testing.assert_array_equal(out["on"][2], out["off"][2])
+            if score == "hamming":
+                np.testing.assert_array_equal(out["on"][1], out["off"][1])
+            else:
+                np.testing.assert_allclose(out["on"][1], out["off"][1],
+                                           atol=1e-5)
+            np.testing.assert_array_equal(
+                out["off"][0], gold[f"search_ids_{{variant}}"])
+            np.testing.assert_array_equal(
+                out["off"][2], gold[f"contains_{{variant}}"])
+            print("OK", score, variant, "R=", R)
+print("TWO-NODE-FUSED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_routed_fused_two_node_matrix():
+    """Real 2-node mesh: routed x (dot, hamming) x (nb, cnb) x R in
+    {1, 2}, fused == staged bit-identically and staged == the committed
+    goldens (`runtime_2node_v1.npz` / `runtime_2node_packed_v1.npz`)."""
+    from conftest import run_in_subprocess
+
+    here = os.path.dirname(__file__)
+    code = TWO_NODE_PACKED.replace(
+        "GOLDEN_2NODE", os.path.join(here, "goldens", "runtime_2node_v1.npz")
+    ).replace(
+        "GOLDEN_PACKED",
+        os.path.join(here, "goldens", "runtime_2node_packed_v1.npz"),
+    )
+    out = run_in_subprocess(code, devices=2)
+    assert "TWO-NODE-FUSED-OK" in out

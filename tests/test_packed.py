@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from conftest import given, st  # hypothesis or skip-fallback
 
 from repro.core import packed
@@ -96,3 +97,52 @@ def test_hamming_words_kernel_matches_oracle():
     np.testing.assert_array_equal(
         np.asarray(packed.hamming_words(codes[:, None, :], cand)),
         np.asarray(want))
+
+
+def test_pack_boundary_k_validation():
+    """The layout contract holds only for k <= 30 (MAX_K): k=30 works,
+    k=31 and k=0 raise a clear ValueError at the pack boundary instead of
+    silently breaking the unpack(pack(c)) round-trip (PR 10 bugfix)."""
+    codes = jnp.asarray(_random_codes(5, 4, 30, 2))
+    w = packed.pack_codes(codes, 30)  # k = MAX_K is legal
+    np.testing.assert_array_equal(
+        np.asarray(packed.unpack_codes(w, 30, 2)), np.asarray(codes))
+    for bad in (0, 31, -3):
+        with pytest.raises(ValueError, match="k in"):
+            packed.num_words(bad, 2)
+        with pytest.raises(ValueError, match="k in"):
+            packed.pack_codes(codes, bad)
+        with pytest.raises(ValueError, match="k in"):
+            packed.unpack_codes(w, bad, 2)
+
+
+def test_pack_store_payload_validates_hyperplanes():
+    """A hyperplane stack that does not match the store ([L', k', d']
+    with wrong L or d) must raise naming the expected [L, k, d] — not
+    shape-error deep inside sketch_codes or build a wrong-W payload
+    (PR 10 bugfix)."""
+    from repro.core import LshParams, make_hyperplanes
+    from repro.core.hashing import sketch_codes_batched
+    from repro.core.store import build_store_host
+
+    params = LshParams(d=16, k=4, L=3, seed=1)
+    h = make_hyperplanes(params)
+    rng = np.random.default_rng(5)
+    vecs = rng.standard_normal((64, 16)).astype(np.float32)
+    codes = sketch_codes_batched(jnp.asarray(vecs), h)
+    store = build_store_host(codes, params.num_buckets, capacity=8,
+                             payload=vecs)
+    # wrong d'
+    bad_d = make_hyperplanes(LshParams(d=8, k=4, L=3, seed=1))
+    with pytest.raises(ValueError, match=r"\[L, k, d\]"):
+        packed.pack_store_payload(store, bad_d)
+    # wrong L'
+    bad_l = make_hyperplanes(LshParams(d=16, k=4, L=2, seed=1))
+    with pytest.raises(ValueError, match=r"\[L, k, d\]"):
+        packed.pack_store_payload(store, bad_l)
+    # wrong rank
+    with pytest.raises(ValueError, match=r"\[L, k, d\]"):
+        packed.pack_store_payload(store, h[0])
+    # matching stack still works and matches scratch-built packing
+    out = packed.pack_store_payload(store, h)
+    assert out.payload.shape[-1] == packed.num_words(4, 3)

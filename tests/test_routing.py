@@ -73,3 +73,34 @@ def test_metadata_sentinel_detection(rng):
     assert np.all(b[0] == -1) and np.all(b[2] == -1)
     assert set(b[1, :, 1].tolist()) == {7, 8}
     assert set(b[3, :, 1].tolist()) == {9, -1}
+
+
+def test_run_ranks_and_plan_routes_empty():
+    """n = 0 must be total: run_ranks once built a shape-(1,) is_start
+    against a shape-(0,) pos and failed to broadcast (PR 10 bugfix)."""
+    r = routing.run_ranks(jnp.zeros((0,), jnp.int32))
+    assert r.shape == (0,) and r.dtype == jnp.int32
+    route = routing.plan_routes(jnp.zeros((0,), jnp.int32), 4, 3)
+    assert int(route.dropped) == 0
+    vals = jnp.zeros((0, 2), jnp.float32)
+    buf = routing.build_send_buffer(route, 4, 3, vals, 5.0)
+    assert buf.shape == (4, 3, 2)
+    assert np.all(np.asarray(buf) == 5.0)  # nothing scattered, all fill
+    back = routing.return_to_origin(route, buf, -1.0)
+    assert back.shape == (0, 2)
+
+
+def test_plan_routes_cap_zero_drops_everything():
+    """cap = 0: every item overflows (counted, clamps stay in bounds) and
+    the origin-side gather returns pure fill instead of crashing on the
+    size-0 slot axis."""
+    dest = jnp.asarray([0, 1, 1], jnp.int32)
+    route = routing.plan_routes(dest, 2, 0)
+    assert int(route.dropped) == 3
+    assert not np.any(np.asarray(route.ok))
+    vals = jnp.asarray([[1.0], [2.0], [3.0]], jnp.float32)
+    buf = routing.build_send_buffer(route, 2, 0, vals, 0.0)
+    assert buf.shape == (2, 0, 1)
+    back = routing.return_to_origin(route, buf, -9.0)
+    assert back.shape == (3, 1)
+    assert np.all(np.asarray(back) == -9.0)
